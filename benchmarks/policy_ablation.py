@@ -1,0 +1,44 @@
+"""Buffering x partitioning ablation (the paper's single/double buffer and
+Unique/Blocks comparison) at three payload sizes, INTERRUPT management."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.transfer import (
+    Buffering,
+    Management,
+    Partitioning,
+    TransferEngine,
+    TransferPolicy,
+)
+from repro.utils.timing import bench
+
+SIZES = [64 << 10, 1 << 20, 6 << 20]
+
+
+def run(iters: int = 5) -> list[dict]:
+    rows = []
+    for nbytes in SIZES:
+        x = np.zeros(nbytes // 4, np.float32)
+        for buf in Buffering:
+            for part in Partitioning:
+                policy = TransferPolicy(Management.INTERRUPT, buf, part,
+                                        block_bytes=256 << 10)
+
+                def one(x=x, policy=policy):
+                    eng = TransferEngine(policy)
+                    eng.rx(eng.tx(x))
+
+                t = bench(one, warmup=2, iters=iters)
+                rows.append({
+                    "bench": "policy_ablation", "bytes": x.nbytes,
+                    "buffering": buf.value, "partitioning": part.value,
+                    "roundtrip_ms": round(t.median_s * 1e3, 4),
+                })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

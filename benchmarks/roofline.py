@@ -1,0 +1,78 @@
+"""Roofline table: reads dry-run artifacts (artifacts/dryrun*.jsonl) and
+renders the per-(arch x shape x mesh) three-term roofline with bottleneck
+and useful-FLOPs ratio. This is §Roofline of EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(pattern: str = "artifacts/dryrun_final*.jsonl") -> list[dict]:
+    """Default: the post-§Perf sweep. Pass artifacts/baseline_dryrun*.jsonl
+    to render the paper-faithful baseline table."""
+    recs = {}
+    files = sorted(glob.glob(pattern)) or sorted(
+        glob.glob("artifacts/baseline_dryrun*.jsonl"))
+    for f in files:
+        for line in open(f):
+            r = json.loads(line)
+            key = (r["arch"], r["shape"], r["multi_pod"])
+            recs[key] = r  # last write wins
+    return list(recs.values())
+
+
+def table(recs: list[dict], multi_pod: bool = False) -> str:
+    rows = [r for r in recs if r["multi_pod"] == multi_pod]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = [
+        "| arch | shape | compute(s) | memory(s) | collective(s) | "
+        "bottleneck | useful | HBM GiB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"ERROR | — | — |")
+            continue
+        mem = r.get("memory_analysis", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_term_s']:.4f} | "
+            f"{r['memory_term_s']:.4f} | {r['collective_term_s']:.5f} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.3f} | "
+            f"{hbm:.2f} |")
+    return "\n".join(out)
+
+
+def run() -> list[dict]:
+    recs = load()
+    rows = []
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        dom = max(("compute_term_s", "memory_term_s", "collective_term_s"),
+                  key=lambda k: r[k])
+        rows.append({
+            "bench": "roofline", "arch": r["arch"], "shape": r["shape"],
+            "mesh": "pod2" if r["multi_pod"] else "pod1",
+            "dominant_term_s": round(r[dom], 5),
+            "bottleneck": r["bottleneck"],
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 4),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load()
+    print("## single-pod (16x16)\n")
+    print(table(recs, multi_pod=False))
+    print("\n## multi-pod (2x16x16)\n")
+    print(table(recs, multi_pod=True))

@@ -1,0 +1,68 @@
+"""Benchmark runner — one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only transfer_sweep,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (plus the full dict per row on
+stderr-like detail lines prefixed '#').
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    collective_overlap,
+    policy_ablation,
+    roofline,
+    roshambo_table,
+    streaming_layers,
+    transfer_sweep,
+    txrx_balance,
+)
+
+BENCHES = {
+    "transfer_sweep": transfer_sweep.run,  # Fig 4 / Fig 5
+    "roshambo_table": roshambo_table.run,  # Table I
+    "policy_ablation": policy_ablation.run,  # single/double x unique/blocks
+    "txrx_balance": txrx_balance.run,  # loop-back scenario
+    "streaming_layers": streaming_layers.run,  # NullHop model at LM scale
+    "collective_overlap": collective_overlap.run,  # blocks-mode collectives
+    "roofline": roofline.run,  # reads dry-run artifacts
+}
+
+
+def _derived(row: dict) -> str:
+    for k in ("tx_us_per_byte", "roundtrip_ms", "frame_ms",
+              "dominant_term_s", "collective_bytes_per_dev", "tx_gbps"):
+        if k in row:
+            return f"{k}={row[k]}"
+    return ""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = [n.strip() for n in args.only.split(",") if n.strip()] or list(
+        BENCHES)
+
+    print("name,us_per_call,derived")
+    for name in names:
+        fn = BENCHES[name]
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},nan,error={type(e).__name__}")
+            print(f"# {name} ERROR: {e}", file=sys.stderr)
+            continue
+        us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+        for row in rows:
+            print(f"# {row}")
+        print(f"{name},{us:.1f},{_derived(rows[0]) if rows else ''}")
+
+
+if __name__ == "__main__":
+    main()

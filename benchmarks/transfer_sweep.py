@@ -1,0 +1,68 @@
+"""Fig 4/5 reproduction: transfer time vs payload (8 B -> 6 MB) for the
+three driver modes. Measured on this machine's host<->device path; the
+quantities compared are the ones the paper compares (fixed overhead vs
+asymptotic bandwidth, per-byte crossover)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost_model import TransferCostModel
+from repro.core.transfer import TransferEngine, TransferPolicy
+from repro.utils.timing import bench
+
+SIZES = [8, 64, 512, 4 << 10, 32 << 10, 256 << 10, 1 << 20, 6 << 20]
+
+DRIVERS = [
+    ("user_level", TransferPolicy.user_level_polling),
+    ("user_level_scheduled", TransferPolicy.user_level_scheduled),
+    ("kernel_level", TransferPolicy.kernel_level),
+]
+
+
+def run(iters: int = 5) -> list[dict]:
+    rows = []
+    fits = {}
+    for name, mk in DRIVERS:
+        samples_n, samples_t = [], []
+        for nbytes in SIZES:
+            x = np.zeros(max(nbytes // 4, 2), np.float32)
+
+            def one(x=x, mk=mk):
+                eng = TransferEngine(mk())
+                dev = eng.tx(x)
+                eng.rx(dev)
+                return eng
+
+            t = bench(one, warmup=2, iters=iters)
+            # split tx/rx from a fresh engine's stats
+            eng = one()
+            tx_s = eng.stats[0].wall_s
+            rx_s = eng.stats[1].wall_s
+            rows.append({
+                "bench": "transfer_sweep", "driver": name, "bytes": x.nbytes,
+                "roundtrip_ms": t.median_s * 1e3,
+                "tx_us_per_byte": tx_s * 1e6 / x.nbytes,
+                "rx_us_per_byte": rx_s * 1e6 / x.nbytes,
+            })
+            samples_n.append(x.nbytes)
+            samples_t.append(t.median_s)
+        fits[name] = TransferCostModel.fit(np.asarray(samples_n),
+                                           np.asarray(samples_t))
+    # paper's headline: crossover where kernel-level beats user-level
+    cross = TransferCostModel.crossover_bytes(fits["user_level"],
+                                              fits["kernel_level"])
+    rows.append({
+        "bench": "transfer_sweep", "driver": "crossover",
+        "bytes": int(min(cross, 1 << 30)),
+        "user_t0_us": fits["user_level"].t0_s * 1e6,
+        "user_gbps": fits["user_level"].bw_Bps / 1e9,
+        "kernel_t0_us": fits["kernel_level"].t0_s * 1e6,
+        "kernel_gbps": fits["kernel_level"].bw_Bps / 1e9,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

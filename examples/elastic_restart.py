@@ -1,0 +1,56 @@
+"""Fault-tolerance walkthrough: kill training mid-run, restart from the
+latest checkpoint, then re-plan the mesh for a degraded device set.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import shutil
+
+import jax
+
+from repro.configs.registry import smoke_config
+from repro.core.transfer import TransferPolicy
+from repro.data.pipeline import DataConfig, StagedPipeline, SyntheticLMSource
+from repro.dist.elastic import reshard_plan, shrink_mesh
+from repro.models.api import build_model
+from repro.train.loop import TrainConfig, Trainer
+
+
+def main():
+    cfg = smoke_config("h2o-danube-1.8b")
+    model = build_model(cfg)
+    ckpt = "/tmp/repro_elastic_ckpt"
+    shutil.rmtree(ckpt, ignore_errors=True)
+
+    def make(steps):
+        tcfg = TrainConfig(steps=steps, warmup=2, log_every=5,
+                           checkpoint_dir=ckpt, checkpoint_every=5,
+                           async_checkpoint=False)
+        src = SyntheticLMSource(DataConfig(global_batch=4, seq_len=64), cfg)
+        return Trainer(model, tcfg), StagedPipeline(
+            src, TransferPolicy.kernel_level())
+
+    # phase 1: run 10 steps (checkpoints at 5, 10), simulate a crash after
+    t1, p1 = make(10)
+    t1.run(p1)
+    p1.close()
+    print("phase 1 done (crash simulated after step 10)")
+
+    # phase 2: a fresh Trainer resumes from step 10 automatically
+    t2, p2 = make(20)
+    out = t2.run(p2)
+    p2.close()
+    print(f"phase 2 resumed: restarts={out['fault'].restarts}, "
+          f"steps logged from {t2.history[0]['step']}")
+    assert out["fault"].restarts == 1
+    assert t2.history[0]["step"] >= 10
+
+    # phase 3: elastic re-plan — pretend a pod dropped: 512 -> 384 devices
+    plan = shrink_mesh(384, model_parallel=16, multi_pod=True)
+    print("degraded mesh plan:", plan)
+    print(reshard_plan(256, shrink_mesh(512, model_parallel=16,
+                                        multi_pod=True), plan))
+
+
+if __name__ == "__main__":
+    main()

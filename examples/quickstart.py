@@ -1,0 +1,41 @@
+"""Quickstart: build an assigned architecture, train a few steps, serve it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs.registry import smoke_config
+from repro.core.transfer import TransferPolicy
+from repro.data.pipeline import DataConfig, StagedPipeline, SyntheticLMSource
+from repro.models.api import build_model
+from repro.optim import AdamWConfig
+from repro.serve.engine import ServeConfig, ServingEngine
+from repro.train.loop import TrainConfig, Trainer
+
+
+def main():
+    # 1. pick an architecture (reduced config; full ones need a pod)
+    cfg = smoke_config("qwen2.5-3b")
+    model = build_model(cfg)
+
+    # 2. train briefly with the kernel-level (interrupt) staging policy
+    tcfg = TrainConfig(steps=20, n_microbatches=2, warmup=2,
+                       opt=AdamWConfig(lr=1e-3), log_every=5)
+    source = SyntheticLMSource(DataConfig(global_batch=8, seq_len=64), cfg)
+    pipe = StagedPipeline(source, TransferPolicy.kernel_level())
+    trainer = Trainer(model, tcfg)
+    out = trainer.run(pipe)
+    pipe.close()
+    print("loss:", [round(r["loss"], 3) for r in trainer.history])
+
+    # 3. serve the trained params
+    eng = ServingEngine(model, out["params"], ServeConfig(max_seq=128))
+    res = eng.generate(np.ones((2, 16), np.int32), max_new_tokens=16)
+    print("generated:", res[0].tokens.tolist())
+    print(f"decode tok/s: {res[0].tokens_per_s:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Serving example: continuous batching over heterogeneous requests.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import smoke_config
+from repro.models.api import build_model
+from repro.serve.continuous import ContinuousBatchingEngine, Request
+
+
+def main():
+    cfg = smoke_config("qwen2.5-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ContinuousBatchingEngine(model, params, n_slots=4, max_seq=96)
+
+    rng = np.random.default_rng(0)
+    n_requests = 10
+    for i in range(n_requests):
+        eng.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, rng.integers(6, 24)).astype(
+                np.int32),
+            max_new_tokens=int(rng.integers(4, 12))))
+
+    t0 = time.perf_counter()
+    done = eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(r.tokens) for r in done)
+    print(f"served {len(done)} requests / {total_tokens} tokens in "
+          f"{dt:.2f}s over {eng.steps} batched decode steps "
+          f"({total_tokens / max(eng.steps, 1):.2f} tokens/step — slot "
+          f"refill keeps the batch full)")
+    for r in sorted(done, key=lambda r: r.rid)[:4]:
+        print(f"  req{r.rid}: prompt_len={len(r.prompt)} -> {r.tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""repro — Streamline: a transfer-strategy-first JAX training/serving framework.
+
+Reproduction + extension of Rios-Navarro et al., "Performance evaluation over
+HW/SW co-design SoC memory transfers for a CNN accelerator" (2018), adapted to
+TPU-class hardware: the paper's transfer-management policy matrix
+(polling / scheduled / interrupt  ×  single / double buffer  ×  unique / blocks)
+is implemented at the host<->HBM, HBM<->VMEM, and chip<->chip boundaries.
+"""
+
+__version__ = "1.0.0"
+
+from repro.core.transfer import (  # noqa: F401
+    Buffering,
+    Management,
+    Partitioning,
+    TransferPolicy,
+)

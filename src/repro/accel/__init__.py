@@ -1,0 +1,5 @@
+"""NullHop-style CNN accelerator executor + the RoShamBo CNN (the paper's
+real workload, Table I)."""
+
+from repro.accel.roshambo import RoShamBoCNN, roshambo_config  # noqa: F401
+from repro.accel.nullhop import NullHopExecutor  # noqa: F401

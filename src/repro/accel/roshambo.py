@@ -1,0 +1,119 @@
+"""RoShamBo CNN — the 5-conv-layer network the paper executes on NullHop.
+
+Per Aimar et al. (NullHop, arXiv:1706.01406): 64x64x1 DVS histogram frames,
+five 3x3 conv layers (with max-pool after most), classifying
+rock/paper/scissors(/background) — 4 classes. Layer transfer sizes land in
+the ~100 KB regime the paper highlights ("transfer lengths are in the order
+of 100Kbytes, where kernel-level driver is still not obtaining its best
+results").
+
+Pure-JAX definition; executed per-layer by repro.accel.nullhop (streaming)
+or monolithically via :meth:`RoShamBoCNN.apply` (fused oracle).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    c_in: int
+    c_out: int
+    kernel: int = 3
+    pool: bool = True  # 2x2 max pool after relu
+
+
+@dataclass(frozen=True)
+class RoShamBoConfig:
+    input_hw: int = 64
+    n_classes: int = 4
+    layers: tuple[ConvSpec, ...] = (
+        ConvSpec("conv1", 1, 16),
+        ConvSpec("conv2", 16, 32),
+        ConvSpec("conv3", 32, 64),
+        ConvSpec("conv4", 64, 128),
+        ConvSpec("conv5", 128, 128, pool=False),
+    )
+    dtype: str = "float32"
+
+
+def roshambo_config() -> RoShamBoConfig:
+    return RoShamBoConfig()
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: [B,H,W,Cin]; w: [K,K,Cin,Cout] (SAME padding, stride 1)."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b[None, None, None, :]
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+class RoShamBoCNN:
+    def __init__(self, cfg: RoShamBoConfig | None = None):
+        self.cfg = cfg or roshambo_config()
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        params: dict = {}
+        hw = cfg.input_hw
+        for spec in cfg.layers:
+            key, k1 = jax.random.split(key)
+            fan_in = spec.kernel * spec.kernel * spec.c_in
+            params[spec.name] = {
+                "w": (jax.random.normal(k1, (spec.kernel, spec.kernel,
+                                             spec.c_in, spec.c_out))
+                      * math.sqrt(2.0 / fan_in)).astype(dt),
+                "b": jnp.zeros((spec.c_out,), dt),
+            }
+            if spec.pool:
+                hw //= 2
+        key, k1 = jax.random.split(key)
+        feat = hw * hw * cfg.layers[-1].c_out
+        params["fc"] = {
+            "w": (jax.random.normal(k1, (feat, cfg.n_classes))
+                  * math.sqrt(1.0 / feat)).astype(dt),
+            "b": jnp.zeros((cfg.n_classes,), dt),
+        }
+        return params
+
+    def layer_apply(self, spec: ConvSpec, p: dict, x: jax.Array) -> jax.Array:
+        y = jax.nn.relu(conv2d(x, p["w"], p["b"]))
+        return maxpool2(y) if spec.pool else y
+
+    def apply(self, params: dict, x: jax.Array) -> jax.Array:
+        """Monolithic forward (oracle for the streamed executor)."""
+        for spec in self.cfg.layers:
+            x = self.layer_apply(spec, params[spec.name], x)
+        b = x.shape[0]
+        return x.reshape(b, -1) @ params["fc"]["w"] + params["fc"]["b"]
+
+    def layer_transfer_bytes(self, params: dict, batch: int = 1) -> list[dict]:
+        """Per-layer TX (params + input fmap) / RX (output fmap) byte counts —
+        the quantities Table I normalises by."""
+        cfg = self.cfg
+        out = []
+        hw = cfg.input_hw
+        itemsize = jnp.dtype(cfg.dtype).itemsize
+        for spec in cfg.layers:
+            tx = (int(np.prod(params[spec.name]["w"].shape)) +
+                  params[spec.name]["b"].shape[0]) * itemsize
+            tx += batch * hw * hw * spec.c_in * itemsize
+            hw_out = hw // 2 if spec.pool else hw
+            rx = batch * hw_out * hw_out * spec.c_out * itemsize
+            out.append({"name": spec.name, "tx_bytes": tx, "rx_bytes": rx})
+            hw = hw_out
+        return out

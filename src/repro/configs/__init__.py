@@ -1,0 +1,3 @@
+"""Architecture registry: the 10 assigned configs + the paper's RoShamBo CNN."""
+
+from repro.configs.registry import ARCHS, get_config, list_archs  # noqa: F401

@@ -1,0 +1,12 @@
+"""roshambo-nullhop: the paper's own workload (not an LM; used by the
+Table I benchmark and examples, not by the LM dry-run)."""
+
+from repro.accel.roshambo import RoShamBoConfig
+
+
+def config() -> RoShamBoConfig:
+    return RoShamBoConfig()
+
+
+def smoke_config() -> RoShamBoConfig:
+    return RoShamBoConfig(input_hw=16)

@@ -1,0 +1,21 @@
+"""repro.core — the paper's contribution: the transfer-strategy engine.
+
+Implements the policy matrix evaluated by Rios-Navarro et al. (2018) —
+management (polling / scheduled / interrupt), buffering (single / double),
+partitioning (unique / blocks) — at every memory boundary of a TPU system:
+
+- host <-> device  : :mod:`repro.core.transfer` (measured on this machine)
+- HBM  <-> VMEM    : :mod:`repro.kernels` grids parameterized by the policy
+- chip <-> chip    : :mod:`repro.core.pipeline_collectives` (blocks-mode rings)
+- per-layer stream : :mod:`repro.core.streaming` (the NullHop execution model)
+"""
+
+from repro.core.transfer import (  # noqa: F401
+    Buffering,
+    Management,
+    Partitioning,
+    TransferPolicy,
+    TransferEngine,
+    TransferStats,
+)
+from repro.core.cost_model import TransferCostModel  # noqa: F401

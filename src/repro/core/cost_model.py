@@ -1,0 +1,113 @@
+"""Transfer cost model — the analytical backbone of Fig. 4/5.
+
+The paper's measured curves follow the classic two-parameter DMA model
+
+    t(n) = t0 + n / BW          (per transfer)
+    t(n)/n = t0/n + 1/BW        (per byte, the Fig. 5 view)
+
+where ``t0`` is the fixed software overhead of the driver path (descriptor
+setup, syscalls/context switches for the kernel driver, polling-loop entry for
+the user driver) and ``BW`` the asymptotic link bandwidth. BLOCKS partitioning
+with chunk size ``c`` pays the overhead per chunk but overlaps transfers when
+DOUBLE-buffered:
+
+    t_blocks(n) = ceil(n/c) * t0 + n/BW                      (single buffer)
+    t_blocks(n) = t0 + max(ceil(n/c)-1, 0)*max(t0, c/BW) + c/BW   (double)
+
+The model is used three ways:
+1. fit measured host-side sweeps (benchmarks/transfer_sweep.py) and report the
+   crossover size between driver modes — the paper's headline observation;
+2. napkin math during §Perf hillclimbing (predict chunking deltas);
+3. the ICI collective term of the roofline (chunked ring collectives).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.transfer import Buffering, Partitioning, TransferPolicy
+
+
+@dataclass(frozen=True)
+class TransferCostModel:
+    """t(n) = t0 + n/bw, with policy-aware composition."""
+
+    t0_s: float  # fixed per-transfer overhead (s)
+    bw_Bps: float  # asymptotic bandwidth (bytes/s)
+
+    def time_unique(self, nbytes: int) -> float:
+        return self.t0_s + nbytes / self.bw_Bps
+
+    def time_blocks(self, nbytes: int, block_bytes: int,
+                    buffering: Buffering = Buffering.DOUBLE) -> float:
+        n_chunks = max(1, math.ceil(nbytes / block_bytes))
+        chunk_t = block_bytes / self.bw_Bps
+        if buffering is Buffering.SINGLE:
+            return n_chunks * (self.t0_s + chunk_t)
+        # double buffer: first chunk pays setup+transfer, the rest pipeline at
+        # the max of (setup, transfer) rate, plus the final drain.
+        steady = max(self.t0_s, chunk_t)
+        return self.t0_s + chunk_t + max(n_chunks - 1, 0) * steady
+
+    def time(self, nbytes: int, policy: TransferPolicy) -> float:
+        if policy.partitioning is Partitioning.UNIQUE:
+            return self.time_unique(nbytes)
+        return self.time_blocks(nbytes, policy.block_bytes, policy.buffering)
+
+    def us_per_byte(self, nbytes: int, policy: TransferPolicy) -> float:
+        return self.time(nbytes, policy) * 1e6 / max(nbytes, 1)
+
+    def optimal_block_bytes(self, nbytes: int) -> int:
+        """Block size that balances per-chunk overhead against overlap.
+
+        With double buffering, steady-state throughput is limited by
+        max(t0, c/BW); the smallest c with c/BW >= t0 (i.e. c = t0*BW) keeps
+        the pipe full with minimum buffer memory. The paper's 'longer enough
+        packets' criterion is exactly n >> t0*BW."""
+        c = int(self.t0_s * self.bw_Bps)
+        # clamp to [4KiB, nbytes]
+        return max(4096, min(max(c, 4096), max(nbytes, 4096)))
+
+    # ---- fitting ----------------------------------------------------------
+    @staticmethod
+    def fit(nbytes: np.ndarray, seconds: np.ndarray) -> "TransferCostModel":
+        """Least-squares fit of t = t0 + n/bw over measured (n, t) samples."""
+        nbytes = np.asarray(nbytes, dtype=np.float64)
+        seconds = np.asarray(seconds, dtype=np.float64)
+        a = np.stack([np.ones_like(nbytes), nbytes], axis=1)
+        coef, *_ = np.linalg.lstsq(a, seconds, rcond=None)
+        t0 = float(max(coef[0], 1e-9))
+        inv_bw = float(max(coef[1], 1e-15))
+        return TransferCostModel(t0_s=t0, bw_Bps=1.0 / inv_bw)
+
+    @staticmethod
+    def crossover_bytes(a: "TransferCostModel", b: "TransferCostModel") -> float:
+        """Payload size where model b becomes faster than model a (UNIQUE).
+
+        Solves t0_a + n/bw_a = t0_b + n/bw_b. Returns inf if b never wins,
+        0 if b always wins. This is the paper's 'kernel driver wins for
+        longer enough packets' threshold."""
+        dt0 = b.t0_s - a.t0_s
+        dinv = (1.0 / a.bw_Bps) - (1.0 / b.bw_Bps)
+        if dinv <= 0:
+            return 0.0 if dt0 < 0 else float("inf")
+        return max(dt0 / dinv, 0.0)
+
+
+# TPU v5e hardware constants (the TARGET platform; roofline uses these).
+TPU_V5E = {
+    "peak_bf16_flops": 197e12,  # per chip
+    "hbm_Bps": 819e9,
+    "ici_Bps_per_link": 50e9,
+    "hbm_bytes": 16 * 2**30,
+    "vmem_bytes": 128 * 2**20,
+}
+
+# Modeled DMA endpoints on the target system (for napkin math only; the
+# container measurements use fitted models instead).
+PCIE_H2D = TransferCostModel(t0_s=10e-6, bw_Bps=32e9)   # host->HBM over PCIe4 x16
+ICI_LINK = TransferCostModel(t0_s=1e-6, bw_Bps=50e9)    # chip<->chip per link
+HBM_VMEM = TransferCostModel(t0_s=0.5e-6, bw_Bps=819e9) # HBM->VMEM DMA

@@ -1,0 +1,1 @@
+from repro.kernels.conv2d.ops import conv2d_relu  # noqa: F401

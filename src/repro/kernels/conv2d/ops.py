@@ -1,0 +1,32 @@
+"""Public wrapper: SAME-padded streamed conv2d (+bias, +relu)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d.kernel import conv2d_slabs
+
+
+def conv2d_relu(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                tile_h: int = 8, relu: bool = True,
+                interpret: bool = False) -> jax.Array:
+    """x: [B, H, W, Cin]; w: [kh, kw, Cin, Cout] (SAME, stride 1).
+
+    Builds overlapping row slabs (the streamed 'couple of rows' window)
+    then runs the Pallas row-tile kernel."""
+    bsz, h, wd, cin = x.shape
+    kh, kw, _, cout = w.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    tile_h = min(tile_h, h)
+    while h % tile_h:
+        tile_h -= 1
+    nt = h // tile_h
+    # overlapping slabs: slab t covers padded rows [t*tile_h, t*tile_h+slab_h)
+    idx = (jnp.arange(nt)[:, None] * tile_h
+           + jnp.arange(tile_h + kh - 1)[None, :])  # [nt, slab_h]
+    slabs = xp[:, idx]  # [B, nt, slab_h, W+2pw, Cin]
+    y = conv2d_slabs(slabs, w, b, tile_h=tile_h, relu=relu,
+                     interpret=interpret)
+    return y.reshape(bsz, h, wd, cout)

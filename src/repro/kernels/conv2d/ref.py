@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: SAME conv2d + bias + relu via lax.conv."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_relu_ref(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                    relu: bool = True) -> jax.Array:
+    y = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = y + b[None, None, None, :]
+    return jnp.maximum(y, 0.0) if relu else y

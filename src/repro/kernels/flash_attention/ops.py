@@ -1,0 +1,25 @@
+"""Public wrapper: [B, S, H, Dh] GQA flash attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, Sq, H, Dh]; k, v: [B, Skv, Hkv, Dh] -> [B, Sq, H, Dh]."""
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    n_rep = h // hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, k.shape[1], dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, v.shape[1], dh)
+    of = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                              block_q=block_q, block_kv=block_kv,
+                              n_rep=n_rep, interpret=interpret)
+    return of.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for flash attention (materialised scores)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0**30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  n_rep: int = 1) -> jax.Array:
+    """q: [BH, Sq, D]; k, v: [BHkv, Skv, D]."""
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=0)
+        v = jnp.repeat(v, n_rep, axis=0)
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(d)
+    sq, skv = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= qpos - kpos < window
+    s = jnp.where(ok[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(q.dtype), v)

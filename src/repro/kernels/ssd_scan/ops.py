@@ -1,0 +1,52 @@
+"""Public wrapper: full SSD (kernel intra-chunk + jnp inter-chunk)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_intra_chunk_call
+from repro.kernels.ssd_scan.ref import ssd_intra_chunk_ref
+
+
+def ssd_intra_chunk(x, dt, a, b, c, *, chunk: int, use_kernel: bool = True,
+                    interpret: bool = False):
+    if use_kernel:
+        return ssd_intra_chunk_call(x, dt, a, b, c, chunk=chunk,
+                                    interpret=interpret)
+    return ssd_intra_chunk_ref(x, dt, a, b, c, chunk=chunk)
+
+
+def ssd_full(x, dt, a, b, c, *, chunk: int, use_kernel: bool = True,
+             interpret: bool = False,
+             initial_state: jax.Array | None = None):
+    """Complete SSD: kernel for the quadratic part, jnp recurrence across
+    chunks. Semantics match repro.models.layers.ssm.ssd_chunked."""
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    nc = s // chunk
+    rep = h // g
+    y_diag, states, chunk_decay = ssd_intra_chunk(
+        x, dt, a, b, c, chunk=chunk, use_kernel=use_kernel,
+        interpret=interpret)
+
+    s0 = (jnp.zeros((bs, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def body(prev, inp):
+        st_z, dec_z = inp
+        new = prev * dec_z[..., None, None] + st_z
+        return new, prev
+
+    st_seq = states.transpose(1, 0, 2, 3, 4)  # [nc,B,H,P,N]
+    dec_seq = chunk_decay.transpose(1, 0, 2)  # [nc,B,H]
+    final, prev_states = jax.lax.scan(body, s0, (st_seq, dec_seq))
+
+    # off-diagonal: y_off[q] = C_q . prev_state * exp(da_cs[q])
+    dtc = dt.reshape(bs, nc, chunk, h).astype(jnp.float32)
+    da_cs = jnp.cumsum(dtc * a[None, None, None, :], axis=2)  # [B,nc,Q,H]
+    cc = jnp.repeat(c.reshape(bs, nc, chunk, g, n), rep, axis=3)
+    y_off = jnp.einsum("bzqhn,zbhpn,bzqh->bzqhp", cc.astype(jnp.float32),
+                       prev_states, jnp.exp(da_cs))
+    y = y_diag + y_off.reshape(bs, s, h, p)
+    return y.astype(x.dtype), final

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk_ref(x: jax.Array, dt: jax.Array, a: jax.Array,
+                        b: jax.Array, c: jax.Array, *, chunk: int):
+    """Same contract as kernel.ssd_intra_chunk_call, all in jnp."""
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    nc = s // chunk
+    rep = h // g
+
+    xc = x.reshape(bs, nc, chunk, h, p)
+    dtc = dt.reshape(bs, nc, chunk, h).astype(jnp.float32)
+    bc = jnp.repeat(b.reshape(bs, nc, chunk, g, n), rep, axis=3)
+    cc = jnp.repeat(c.reshape(bs, nc, chunk, g, n), rep, axis=3)
+
+    da = dtc * a[None, None, None, :].astype(jnp.float32)  # [B,nc,Q,H]
+    da_cs = jnp.cumsum(da, axis=2)
+
+    diff = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    q_idx = jnp.arange(chunk)
+    tri = (q_idx[None, :] <= q_idx[:, None])[None, None, :, :, None]
+    l_mat = jnp.where(tri, jnp.exp(diff), 0.0)
+
+    xdt = xc * dtc[..., None].astype(xc.dtype)
+    cb = jnp.einsum("bzqhn,bzkhn->bzqkh", cc, bc,
+                    preferred_element_type=jnp.float32)
+    att = (cb * l_mat).astype(x.dtype)
+    y = jnp.einsum("bzqkh,bzkhp->bzqhp", att, xdt,
+                   preferred_element_type=jnp.float32)
+
+    decay_states = jnp.exp(da_cs[:, :, -1:, :] - da_cs).astype(x.dtype)
+    st = jnp.einsum("bzkhn,bzkhp->bzhpn", bc * decay_states[..., None], xdt,
+                    preferred_element_type=jnp.float32)
+    dec = jnp.exp(da_cs[:, :, -1, :])
+    return y.reshape(bs, s, h, p).astype(jnp.float32), st.astype(jnp.float32), dec

@@ -1,0 +1,1 @@
+from repro.kernels.streamed_matmul.ops import streamed_matmul  # noqa: F401

@@ -1,0 +1,67 @@
+"""Public wrapper: policy-aware streamed matmul.
+
+Selects UNIQUE vs BLOCKS from the TransferPolicy (the same object that
+drives host staging), enforcing the VMEM budget for UNIQUE and deriving
+MXU-aligned block sizes for BLOCKS from ``policy.block_bytes``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.transfer import Partitioning, TransferPolicy
+from repro.kernels.streamed_matmul.kernel import matmul_blocks, matmul_unique
+
+VMEM_BUDGET = 96 * 2**20  # leave headroom below the 128 MiB/core ceiling
+
+
+def _align(x: int, m: int = 128) -> int:
+    return max(m, (x // m) * m)
+
+
+def _fits_vmem(m: int, k: int, n: int, itemsize: int) -> bool:
+    return (m * k + k * n + m * n) * itemsize <= VMEM_BUDGET
+
+
+def block_dims_for(policy: TransferPolicy, m: int, k: int, n: int,
+                   itemsize: int) -> tuple[int, int, int]:
+    """Derive (bm, bn, bk) from the policy's block_bytes: the K-stream
+    working set (bm*bk + bk*bn) should be ~block_bytes, MXU-aligned."""
+    target = max(policy.block_bytes // itemsize, 128 * 128)
+    # square-ish tiles: bm=bn=bk=s with 3*s^2 = target
+    s = _align(int((target / 3) ** 0.5))
+    bm = min(_align(min(s, m)), m)
+    bn = min(_align(min(s, n)), n)
+    bk = min(_align(min(s, k)), k)
+    # shrink to divisors
+    while m % bm:
+        bm -= 128
+    while n % bn:
+        bn -= 128
+    while k % bk:
+        bk -= 128
+    return max(bm, 1), max(bn, 1), max(bk, 1)
+
+
+def streamed_matmul(x: jax.Array, w: jax.Array,
+                    policy: TransferPolicy | None = None, *,
+                    interpret: bool = False) -> jax.Array:
+    """[M, K] @ [K, N] under the transfer policy's partitioning mode."""
+    policy = policy or TransferPolicy()
+    m, k = x.shape
+    _, n = w.shape
+    itemsize = jnp.dtype(x.dtype).itemsize
+    if (policy.partitioning is Partitioning.UNIQUE
+            and _fits_vmem(m, k, n, itemsize)):
+        return matmul_unique(x, w, interpret=interpret)
+    if policy.partitioning is Partitioning.UNIQUE:
+        raise ValueError(
+            f"UNIQUE-mode matmul ({m}x{k})@({k}x{n}) exceeds the VMEM budget "
+            f"({VMEM_BUDGET >> 20} MiB) — the paper's 8MB AXI-limit analogue. "
+            f"Use BLOCKS partitioning.")
+    bm, bn, bk = block_dims_for(policy, m, k, n, itemsize)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"no aligned block decomposition for ({m},{k},{n})")
+    return matmul_blocks(x, w, block_m=bm, block_n=bn, block_k=bk,
+                         interpret=interpret)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the streamed matmul."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: params,
+optimizer state, batches and caches are ShapeDtypeStructs (no allocation);
+jit(...).lower(...).compile() must succeed on the production meshes, and
+the compiled artifact yields the roofline terms (FLOPs, bytes, collective
+traffic, per-device memory).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  python -m repro.launch.dryrun --all --out artifacts/dryrun.jsonl
+  python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCHS, get_config
+from repro.dist.sharding import (
+    batch_sharding_tree,
+    cache_sharding,
+    opt_state_sharding,
+    param_sharding,
+)
+from repro.launch.hlo_cost import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import build_model, input_specs
+from repro.models.config import SHAPE_CELLS, cell_applicable
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.loop import TrainConfig, make_train_step
+
+# TPU v5e roofline constants (per chip)
+PEAK_FLOPS = 197e12
+HBM_BPS = 819e9
+ICI_BPS = 50e9 * 4  # 4 usable ICI links/chip on a 2D torus
+
+
+def _microbatches(global_batch: int, batch_shards: int) -> int:
+    """Prefer 8 microbatches (grad-accum traffic halves vs 16 — §Perf A1),
+    falling back to whatever still shards evenly."""
+    for n in (8, 16, 4, 2, 1):
+        if global_batch % (n * batch_shards) == 0:
+            return n
+    return 1
+
+
+def build_cell(cfg, cell, mesh, *, n_micro=None):
+    """Returns (fn, example_args, in_shardings, donate) for the cell."""
+    model = build_model(cfg)
+    key_sds = jax.ShapeDtypeStruct((2,), jax.numpy.uint32)
+    params_sds = jax.eval_shape(model.init, key_sds)
+    p_sh = param_sharding(params_sds, mesh)
+
+    if cell.kind == "train":
+        from repro.dist.sharding import batch_axis_size
+        n_micro = n_micro or cfg.micro_override or _microbatches(
+            cell.global_batch, batch_axis_size(mesh))
+        tcfg = TrainConfig(steps=10_000, n_microbatches=n_micro,
+                           opt=AdamWConfig())
+        step = make_train_step(model, tcfg)
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        o_sh = opt_state_sharding(opt_sds, mesh)
+        batch_sds = input_specs(cfg, cell)
+        b_sh = batch_sharding_tree(batch_sds, mesh)
+        return (step, (params_sds, opt_sds, batch_sds), (p_sh, o_sh, b_sh),
+                (0, 1), {"n_microbatches": n_micro})
+
+    if cell.kind == "prefill":
+        batch_sds = input_specs(cfg, cell)
+        batch_sds.pop("labels", None)
+        b_sh = batch_sharding_tree(batch_sds, mesh)
+        s_max = cell.seq_len
+
+        def pre(params, batch):
+            return model.prefill(params, batch, s_max)
+
+        return pre, (params_sds, batch_sds), (p_sh, b_sh), (), {}
+
+    # decode: one token against a seq_len cache
+    tok_sds = jax.ShapeDtypeStruct((cell.global_batch, 1), jax.numpy.int32)
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(cell.global_batch, cell.seq_len))
+    c_sh = cache_sharding(cache_sds, mesh)
+    t_sh = batch_sharding_tree({"t": tok_sds}, mesh)["t"]
+    return (model.decode, (params_sds, tok_sds, cache_sds),
+            (p_sh, t_sh, c_sh), (2,), {})
+
+
+def run_cell(arch: str, cell, *, multi_pod: bool = False,
+             profile: bool = False) -> dict:
+    cfg = get_config(arch)
+    ok, why = cell_applicable(cfg, cell)
+    rec = {"arch": arch, "shape": cell.name, "kind": cell.kind,
+           "multi_pod": multi_pod, "seq_len": cell.seq_len,
+           "global_batch": cell.global_batch}
+    if not ok:
+        rec.update({"status": "skipped", "reason": why})
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    world = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    try:
+        fn, args, shardings, donate, extra = build_cell(cfg, cell, mesh)
+        rec.update(extra)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        xla_cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # trip-count-aware analysis (XLA's counts while bodies once)
+
+        cost = analyze(hlo, world)
+        coll = cost
+        flops = float(cost.flops)
+        bytes_accessed = float(cost.bytes)
+        n_active = cfg.active_param_count() - cfg.vocab_padded * cfg.d_model * (
+            1 if cfg.tie_embeddings else 2)
+        tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+        model_flops = (6 if cell.kind == "train" else 2) * n_active * tokens
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "world": world,
+            # cost_analysis is per-device (post-SPMD module)
+            "flops_per_device": flops,
+            "bytes_per_device": bytes_accessed,
+            "xla_flops_once": float(xla_cost.get("flops", 0.0)),
+            "collective_bytes_per_device": float(coll.collective_bytes),
+            "collectives": {k: float(v)
+                            for k, v in coll.collective_by_kind.items()},
+            "model_flops_total": float(model_flops),
+            "useful_flops_ratio": float(model_flops / max(flops * world, 1)),
+            "compute_term_s": flops / PEAK_FLOPS,
+            "memory_term_s": bytes_accessed / HBM_BPS,
+            "collective_term_s": float(coll.collective_bytes) / ICI_BPS,
+            "memory_analysis": _mem_dict(mem),
+        })
+        dom = max(("compute_term_s", "memory_term_s", "collective_term_s"),
+                  key=lambda k: rec[k])
+        rec["bottleneck"] = dom.replace("_term_s", "")
+        if profile:
+            from repro.launch.hlo_cost import top_traffic_ops
+            rec["top_traffic_ops"] = top_traffic_ops(hlo, world, n=15)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=[c.name for c in SHAPE_CELLS])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--profile", action="store_true")
+    args = ap.parse_args()
+
+    cells = [c for c in SHAPE_CELLS if not args.shape or c.name == args.shape]
+    archs = list(ARCHS) if args.all or not args.arch else [args.arch]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    out_f = open(args.out, "a") if args.out else None
+    for arch in archs:
+        for cell in cells:
+            for mp in meshes:
+                rec = run_cell(arch, cell, multi_pod=mp,
+                               profile=args.profile)
+                tag = "POD2" if mp else "POD1"
+                line = (f"[{tag}] {arch:22s} {cell.name:12s} "
+                        f"{rec['status']:8s}")
+                if rec["status"] == "ok":
+                    line += (f" compile={rec['compile_s']:.1f}s "
+                             f"bottleneck={rec['bottleneck']:10s} "
+                             f"useful={rec['useful_flops_ratio']:.2f}")
+                elif rec["status"] == "error":
+                    line += " " + rec["error"][:120]
+                    n_fail += 1
+                print(line, flush=True)
+                if out_f:
+                    slim = {k: v for k, v in rec.items() if k != "traceback"}
+                    out_f.write(json.dumps(slim) + "\n")
+                    out_f.flush()
+    if out_f:
+        out_f.close()
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

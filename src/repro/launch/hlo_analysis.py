@@ -1,0 +1,121 @@
+"""Extract roofline terms from a compiled (SPMD-partitioned) HLO module.
+
+cost_analysis() gives per-device FLOPs and bytes, but NOT collective
+traffic; we parse the post-partitioning HLO text and sum the bytes moved by
+every collective op, with ring-algorithm effective-bytes factors:
+
+  all-gather       : result_bytes * (g-1)/g      per device
+  reduce-scatter   : operand_bytes * (g-1)/g     (operand = g * result)
+  all-reduce       : 2 * operand_bytes * (g-1)/g (RS + AG phases)
+  all-to-all       : operand_bytes * (g-1)/g
+  collective-permute: operand_bytes
+
+g = collective group size, parsed from replica_groups (explicit or iota).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[256,1024]' -> bytes. Tuples handled by caller."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _group_size(line: str, world: int) -> int:
+    # iota format: replica_groups=[64,8]<=[512] -> 64 groups of 8
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[", line)
+    if m:
+        return int(m.group(2))
+    # explicit: replica_groups={{0,1,2,3},{...}} -> size of first group
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    # collective-permute has source_target_pairs instead
+    if "source_target_pairs" in line:
+        return 2
+    return world
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+    def row(self) -> dict:
+        return {"collective_bytes": self.total_bytes,
+                "by_kind": {k: float(v) for k, v in self.bytes_by_kind.items()},
+                "counts": dict(self.count_by_kind)}
+
+
+def collective_bytes(hlo_text: str, world: int) -> CollectiveStats:
+    """Sum effective bytes moved per device by collectives in HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result-shape = op-name(...) — match '<shape> <kind>(' and start ops
+        m = re.match(r"%?[\w.\-]+ = ((?:\([^)]*\)|\w+\[[\d,]*\][^ ]*)) "
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start)?\(", s)
+        if not m:
+            continue
+        shape_str, kind, started = m.group(1), m.group(2), m.group(3)
+        # tuple shapes (var-operand all-reduce / -start ops): sum elements
+        if shape_str.startswith("("):
+            inner = shape_str[1:-1]
+            size = sum(_shape_bytes(p.strip())
+                       for p in re.findall(r"\w+\[[\d,]*\]", inner))
+            if started:  # start ops carry (operand, result [, ctx]) tuples
+                size //= 2
+        else:
+            size = _shape_bytes(shape_str)
+        g = _group_size(s, world)
+        frac = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-gather":
+            eff = size * frac  # size = gathered result
+        elif kind == "all-reduce":
+            eff = 2 * size * frac
+        elif kind == "reduce-scatter":
+            eff = size * frac * g  # size = scattered result; operand = g*size
+        elif kind == "all-to-all":
+            eff = size * frac
+        else:  # collective-permute
+            eff = size
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0.0) + eff
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+def duplicate_fusion_count(hlo_text: str) -> int:
+    """Rough remat indicator: repeated identical fusion shapes (same op name
+    root repeated) — used in §Perf iteration notes."""
+    names = re.findall(r"%(fusion[\w.\-]*) =", hlo_text)
+    return len(names) - len(set(names))

@@ -1,0 +1,5 @@
+"""Model zoo: composable JAX definitions for the 10 assigned architectures
+plus the paper's own RoShamBo CNN (see repro.accel)."""
+
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.api import build_model  # noqa: F401

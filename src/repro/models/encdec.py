@@ -1,0 +1,213 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings [B, S_enc, D]; the encoder is a bidirectional
+transformer over them; the decoder is a standard autoregressive stack with
+cross-attention. Both stacks are scan-stacked like repro.models.lm.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers.attention import KVCache, attn_apply, attn_params
+from repro.models.layers.mlp import mlp_apply, mlp_params
+from repro.models.layers.norm import apply_norm, norm_params
+from repro.models.lm import make_remat
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_enc_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": norm_params(cfg.norm, cfg.d_model),
+        "attn": attn_params(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim_, bias=cfg.qkv_bias, dtype=_dt(cfg)),
+        "ln2": norm_params(cfg.norm, cfg.d_model),
+        "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.mlp, _dt(cfg)),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": norm_params(cfg.norm, cfg.d_model),
+        "attn": attn_params(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim_, bias=cfg.qkv_bias, dtype=_dt(cfg)),
+        "ln_x": norm_params(cfg.norm, cfg.d_model),
+        "xattn": attn_params(k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.head_dim_, bias=cfg.qkv_bias, dtype=_dt(cfg)),
+        "ln2": norm_params(cfg.norm, cfg.d_model),
+        "mlp": mlp_params(k3, cfg.d_model, cfg.d_ff, cfg.mlp, _dt(cfg)),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ke, kd, kemb, kh = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: init_enc_block(k, cfg))(
+        jax.random.split(ke, cfg.n_enc_layers))
+    dec = jax.vmap(lambda k: init_dec_block(k, cfg))(
+        jax.random.split(kd, cfg.n_layers))
+    return {
+        "embed": (jax.random.normal(kemb, (cfg.vocab_padded, cfg.d_model))
+                  * (1.0 / math.sqrt(cfg.d_model))).astype(_dt(cfg)),
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "enc_norm": norm_params(cfg.norm, cfg.d_model),
+        "final_norm": norm_params(cfg.norm, cfg.d_model),
+        "lm_head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab_padded))
+                    * (1.0 / math.sqrt(cfg.d_model))).astype(_dt(cfg)),
+    }
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames: [B, S_enc, D] (stub frontend output) -> encoder states."""
+
+    def body(x, p):
+        h, _ = attn_apply(p["attn"], apply_norm(cfg.norm, p["ln1"], x),
+                          n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                          head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+                          kv_chunk=cfg.attn_kv_chunk,
+                          blocks_threshold=cfg.attn_blocks_threshold,
+                          causal=False)
+        x = x + h
+        x = x + mlp_apply(p["mlp"], apply_norm(cfg.norm, p["ln2"], x), cfg.mlp)
+        return x, None
+
+    fn = make_remat(cfg)(body)
+    x, _ = jax.lax.scan(fn, frames.astype(_dt(cfg)), params["enc_blocks"])
+    return apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def _dec_block(cfg, p, x, enc, self_cache=None, cross_cache=None):
+    h, new_self = attn_apply(p["attn"], apply_norm(cfg.norm, p["ln1"], x),
+                             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                             head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+                             kv_chunk=cfg.attn_kv_chunk,
+                             blocks_threshold=cfg.attn_blocks_threshold,
+                             cache=self_cache)
+    x = x + h
+    h, new_cross = attn_apply(p["xattn"], apply_norm(cfg.norm, p["ln_x"], x),
+                              n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                              head_dim=cfg.head_dim_, rope_theta=0.0,
+                              kv_chunk=cfg.attn_kv_chunk,
+                              blocks_threshold=cfg.attn_blocks_threshold,
+                              xk=enc, cache=cross_cache, causal=False)
+    x = x + h
+    x = x + mlp_apply(p["mlp"], apply_norm(cfg.norm, p["ln2"], x), cfg.mlp)
+    return x, new_self, new_cross
+
+
+def forward(cfg: ModelConfig, params: dict, frames: jax.Array,
+            tokens: jax.Array):
+    """Training forward: logits over decoder positions, aux=0."""
+    enc = encode(cfg, params, frames)
+    x = params["embed"][tokens]
+
+    def body(h, p):
+        h, _, _ = _dec_block(cfg, p, h, enc)
+        return h, None
+
+    fn = make_remat(cfg)(body)
+    x, _ = jax.lax.scan(fn, x, params["dec_blocks"])
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_dec_cache(cfg: ModelConfig, batch: int, s_max: int, s_enc: int):
+    dt = _dt(cfg)
+    def stack(c):
+        return KVCache(
+            jnp.broadcast_to(c.k[None], (cfg.n_layers,) + c.k.shape),
+            jnp.broadcast_to(c.v[None], (cfg.n_layers,) + c.v.shape),
+            jnp.zeros((cfg.n_layers,), jnp.int32),
+        )
+    return {
+        "self": stack(KVCache.zeros(batch, s_max, cfg.n_kv_heads, cfg.head_dim_, dt)),
+        "cross": stack(KVCache.zeros(batch, s_enc, cfg.n_kv_heads, cfg.head_dim_, dt)),
+    }
+
+
+def prefill(cfg: ModelConfig, params: dict, frames: jax.Array,
+            tokens: jax.Array, s_max: int):
+    """Encode + run decoder prompt, building self- and cross-caches.
+
+    The cross-cache stores projected encoder K/V once (computed per layer
+    during this pass) so decode steps never re-project encoder states."""
+    enc = encode(cfg, params, frames)
+    x = params["embed"][tokens]
+    caches = init_dec_cache(cfg, x.shape[0], s_max, enc.shape[1])
+
+    def body(h, inp):
+        p, sc, cc = inp
+        # first pass populates the cross cache: project enc k/v at length 0
+        cc_filled = _fill_cross(cfg, p, enc, cc)
+        h, new_self, _ = _dec_block(cfg, p, h, enc, self_cache=sc,
+                                    cross_cache=cc_filled)
+        return h, (new_self, cc_filled)
+
+    fn = make_remat(cfg)(body)
+    x, (new_self, new_cross) = jax.lax.scan(
+        fn, x, (params["dec_blocks"], caches["self"], caches["cross"]))
+    x = apply_norm(cfg.norm, params["final_norm"], x[:, -1:])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"self": new_self, "cross": new_cross}
+
+
+def _fill_cross(cfg, p, enc, cc: KVCache) -> KVCache:
+    b, s_enc, _ = enc.shape
+    k = (enc @ p["xattn"]["wk"] + p["xattn"].get("bk", 0)).reshape(
+        b, s_enc, cfg.n_kv_heads, cfg.head_dim_)
+    v = (enc @ p["xattn"]["wv"] + p["xattn"].get("bv", 0)).reshape(
+        b, s_enc, cfg.n_kv_heads, cfg.head_dim_)
+    return KVCache(k.astype(cc.k.dtype), v.astype(cc.v.dtype),
+                   jnp.asarray(s_enc, jnp.int32))
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, caches):
+    """One decoder token against prebuilt self/cross caches."""
+    x = params["embed"][token]
+
+    def body(h, inp):
+        p, sc, cc = inp
+        h2, new_self, _ = _dec_block_cached(cfg, p, h, sc, cc)
+        return h2, new_self
+
+    x, new_self = jax.lax.scan(body, x, (params["dec_blocks"], caches["self"],
+                                         caches["cross"]))
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"self": new_self, "cross": caches["cross"]}
+
+
+def _dec_block_cached(cfg, p, x, self_cache: KVCache, cross_cache: KVCache):
+    h, new_self = attn_apply(p["attn"], apply_norm(cfg.norm, p["ln1"], x),
+                             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                             head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+                             kv_chunk=cfg.attn_kv_chunk,
+                             blocks_threshold=cfg.attn_blocks_threshold,
+                             cache=self_cache)
+    x = x + h
+    # cross-attention straight against the cached projected encoder K/V
+    from repro.models.layers.attention import attention
+    b, s, _ = x.shape
+    xq = apply_norm(cfg.norm, p["ln_x"], x)
+    q = (xq @ p["xattn"]["wq"] + p["xattn"].get("bq", 0)).reshape(
+        b, s, cfg.n_heads, cfg.head_dim_)
+    o = attention(q, cross_cache.k, cross_cache.v, causal=False,
+                  kv_valid=cross_cache.length, kv_chunk=cfg.attn_kv_chunk,
+                  blocks_threshold=cfg.attn_blocks_threshold)
+    x = x + o.reshape(b, s, cfg.n_heads * cfg.head_dim_) @ p["xattn"]["wo"]
+    x = x + mlp_apply(p["mlp"], apply_norm(cfg.norm, p["ln2"], x), cfg.mlp)
+    return x, new_self, cross_cache

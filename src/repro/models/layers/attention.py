@@ -1,0 +1,308 @@
+"""Attention: GQA + RoPE + sliding window + KV cache + blocks-mode chunking.
+
+The paper's Unique/Blocks partitioning shows up here as ``kv_chunk``: full
+(unique) attention materialises the [S_q, S_kv] score block; blocks-mode
+streams the KV sequence in chunks with an online-softmax accumulator
+(flash-attention structure) so the working set is O(S_q x chunk) — the
+HBM->VMEM analogue of streaming feature-map rows into NullHop's MAC array.
+The Pallas kernel in repro.kernels.flash_attention implements the same
+schedule with explicit VMEM BlockSpecs; this module is the pure-jnp path
+used for CPU smoke tests and the dry-run.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.rope import apply_rope
+
+NEG_INF = -2.0**30  # large-but-finite; avoids NaN from (-inf) - (-inf)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _cache_write(dst: jax.Array, new: jax.Array, length) -> jax.Array:
+    """Append `new` [B, s, Hkv, Dh] at position `length` (scalar, or [B] for
+    per-slot lengths — continuous batching)."""
+    length = jnp.asarray(length)
+    new = new.astype(dst.dtype)
+    if length.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(dst, new, length, axis=1)
+    b, s = new.shape[0], new.shape[1]
+    rows = jnp.arange(b)[:, None]  # [B,1]
+    cols = length[:, None] + jnp.arange(s)[None, :]  # [B,s]
+    return dst.at[rows, cols].set(new)
+
+
+class KVCache(NamedTuple):
+    """Preallocated decode cache for one layer group.
+
+    k, v: [B, S_max, Hkv, Dh]; length: [] int32 (tokens already cached)."""
+
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array
+
+    @staticmethod
+    def zeros(batch: int, s_max: int, n_kv: int, dh: int, dtype) -> "KVCache":
+        return KVCache(
+            jnp.zeros((batch, s_max, n_kv, dh), dtype),
+            jnp.zeros((batch, s_max, n_kv, dh), dtype),
+            jnp.zeros((), jnp.int32),
+        )
+
+
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """[B, S, Hkv, Dh] -> [B, S, Hkv*n_rep, Dh]."""
+    if n_rep == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+def _all_scalar(*xs) -> bool:
+    return all(x is None or jnp.ndim(x) == 0 for x in xs)
+
+
+def _as_vec(x) -> jax.Array:
+    """Scalar or [B] -> [B?,1,1] broadcastable against [B,s_q,s_kv]."""
+    a = jnp.asarray(x)
+    if a.ndim == 0:
+        return a.reshape(1, 1, 1)
+    return a.reshape(-1, 1, 1)
+
+
+def _ok_mask(s_q: int, s_kv: int, q_offset, *, causal: bool, window: int,
+             kv_start=0, kv_valid=None) -> jax.Array:
+    """Bool mask [B?, s_q, s_kv]; q_offset / kv_valid may be scalars or [B]
+    (per-slot cache lengths — continuous batching)."""
+    qpos = jnp.arange(s_q)[None, :, None] + _as_vec(q_offset)  # [B?,sq,1]
+    kpos = (jnp.arange(s_kv)[None, None, :] + _as_vec(kv_start))  # [B?,1,skv]
+    ok = jnp.ones((1, s_q, s_kv), bool)
+    if causal:
+        ok = ok & (kpos <= qpos)
+    if window > 0:
+        ok = ok & (qpos - kpos < window)
+    if kv_valid is not None:
+        ok = ok & (kpos < _as_vec(kv_valid))
+    return ok
+
+
+def _mask_bias(s_q: int, s_kv: int, q_offset: jax.Array | int, *,
+               causal: bool, window: int,
+               kv_start: jax.Array | int = 0) -> jax.Array:
+    """[s_q, s_kv] additive bias (scalar-offset fast path)."""
+    ok = _ok_mask(s_q, s_kv, q_offset, causal=causal, window=window,
+                  kv_start=kv_start)[0]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention_unique(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool = True, window: int = 0,
+                     q_offset: jax.Array | int = 0,
+                     kv_valid: jax.Array | None = None,
+                     kv_offset: jax.Array | int = 0) -> jax.Array:
+    """Unique-mode attention: one [S_q, S_kv] score block.
+
+    q: [B, S_q, H, Dh]; k, v: [B, S_kv, Hkv, Dh] (Hkv divides H).
+    kv_valid: optional [] int — kv positions >= kv_valid are masked (cache)."""
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    k = repeat_kv(k, h // hkv)
+    v = repeat_kv(v, h // hkv)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    if _all_scalar(q_offset, kv_offset, kv_valid):
+        # 2-D additive-bias fast path: a [sq,skv] f32 bias keeps GSPMD's
+        # head-sharded partitioning of the score einsums (a broadcast 4-D
+        # pred mask was observed to force head replication: zamba2 train
+        # FLOPs x6 — see EXPERIMENTS §Perf A4 revert notes).
+        bias = _mask_bias(sq, k.shape[1], q_offset, causal=causal,
+                          window=window, kv_start=kv_offset)
+        scores = scores * scale + bias
+        if kv_valid is not None:
+            kpos_v = jnp.arange(k.shape[1]) + kv_offset
+            scores = jnp.where(kpos_v[None, None, None, :] < kv_valid,
+                               scores, NEG_INF)
+    else:
+        ok = _ok_mask(sq, k.shape[1], q_offset, causal=causal, window=window,
+                      kv_start=kv_offset, kv_valid=kv_valid)  # [B?,sq,skv]
+        scores = jnp.where(ok[:, None], scores * scale, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention_blocks(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool = True, window: int = 0,
+                     q_offset: jax.Array | int = 0,
+                     kv_valid: jax.Array | None = None,
+                     kv_chunk: int = 1024,
+                     kv_offset: jax.Array | int = 0) -> jax.Array:
+    """Blocks-mode attention: stream KV in chunks with online softmax.
+
+    Same semantics as :func:`attention_unique`; working set O(S_q * kv_chunk).
+    This is the paper's BLOCKS partitioning applied to the KV stream."""
+    b, sq, h, dh = q.shape
+    s_kv = k.shape[1]
+    hkv = k.shape[2]
+    if s_kv % kv_chunk:
+        # pad kv to a chunk multiple; padded tail masked via kv_valid
+        pad = kv_chunk - s_kv % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_valid = jnp.asarray(s_kv if kv_valid is None else kv_valid, jnp.int32)
+        s_kv = k.shape[1]
+    n_chunks = s_kv // kv_chunk
+    scale = 1.0 / math.sqrt(dh)
+    n_rep = h // hkv
+
+    kc = k.reshape(b, n_chunks, kv_chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inp):
+        acc, m, l = carry  # acc [B,H,Sq,Dh] f32; m,l [B,H,Sq] f32
+        kcb, vcb, ci = inp
+        kcb = repeat_kv(kcb, n_rep)
+        vcb = repeat_kv(vcb, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kcb,
+                       preferred_element_type=jnp.float32) * scale
+        if _all_scalar(q_offset, kv_offset) and kv_valid is None:
+            s = s + _mask_bias(sq, kv_chunk, q_offset, causal=causal,
+                               window=window,
+                               kv_start=ci * kv_chunk + kv_offset)
+        else:
+            ok = _ok_mask(sq, kv_chunk, q_offset, causal=causal,
+                          window=window,
+                          kv_start=ci * kv_chunk + kv_offset,
+                          kv_valid=kv_valid)
+            s = jnp.where(ok[:, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp2((m - m_new) * 1.4426950408889634)
+        p = jnp.exp2((s - m_new[..., None]) * 1.4426950408889634)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vcb,
+            preferred_element_type=jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B, Sq, H, Dh]
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0, kv_valid=None,
+              kv_chunk: int = 1024, blocks_threshold: int = 4096,
+              kv_offset: jax.Array | int = 0) -> jax.Array:
+    """Policy dispatch: Unique mode below the threshold, Blocks above.
+
+    Mirrors the paper's finding that partitioning only pays off for 'longer
+    enough packets' — short sequences keep the single-block fast path.
+    kv_offset: absolute position of k[:, 0] (nonzero when the cache read was
+    sliced, e.g. sliding-window decode)."""
+    if k.shape[1] <= blocks_threshold:
+        return attention_unique(q, k, v, causal=causal, window=window,
+                                q_offset=q_offset, kv_valid=kv_valid,
+                                kv_offset=kv_offset)
+    return attention_blocks(q, k, v, causal=causal, window=window,
+                            q_offset=q_offset, kv_valid=kv_valid,
+                            kv_chunk=kv_chunk, kv_offset=kv_offset)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (params + apply), shared by every attention-bearing arch
+# ---------------------------------------------------------------------------
+
+def attn_params(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                *, bias: bool, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sd = 1.0 / math.sqrt(d_model)
+    p = {
+        "wq": (jax.random.normal(k1, (d_model, n_heads * head_dim)) * sd).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_model, n_kv * head_dim)) * sd).astype(dtype),
+        "wv": (jax.random.normal(k3, (d_model, n_kv * head_dim)) * sd).astype(dtype),
+        "wo": (jax.random.normal(k4, (n_heads * head_dim, d_model))
+               * (sd / math.sqrt(2.0))).astype(dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def attn_apply(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
+               head_dim: int, rope_theta: float, window: int = 0,
+               kv_chunk: int = 1024, blocks_threshold: int = 4096,
+               use_pallas: bool = False, pallas_interpret: bool = False,
+               cache: KVCache | None = None,
+               positions: jax.Array | None = None,
+               xk: jax.Array | None = None,
+               causal: bool = True) -> tuple[jax.Array, KVCache | None]:
+    """Self- (xk=None) or cross- (xk=encoder output) attention.
+
+    With a cache: appends this call's K/V at cache.length and attends over
+    the valid prefix (decode path). positions: [S] absolute positions for
+    RoPE (defaults to arange, or cache.length offset when decoding)."""
+    b, s, _ = x.shape
+    src = x if xk is None else xk
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(b, s, n_heads, head_dim)
+    k = (src @ p["wk"] + p.get("bk", 0)).reshape(b, src.shape[1], n_kv, head_dim)
+    v = (src @ p["wv"] + p.get("bv", 0)).reshape(b, src.shape[1], n_kv, head_dim)
+
+    offset = cache.length if cache is not None else 0
+    if positions is None:
+        off = jnp.asarray(offset)
+        positions = (jnp.arange(s)[None] + off.reshape(-1, 1)
+                     if off.ndim else jnp.arange(s) + offset)
+    if rope_theta > 0 and xk is None:  # no rope on cross-attention
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions if k.shape[1] == s
+                       else jnp.arange(src.shape[1]), rope_theta)
+
+    if (use_pallas and cache is None and xk is None
+            and q.shape[1] == src.shape[1]):
+        # production TPU path: VMEM-resident causal flash attention
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              interpret=pallas_interpret)
+        return out.reshape(b, s, n_heads * head_dim) @ p["wo"], None
+
+    new_cache = None
+    if cache is not None and xk is None:
+        ck = _cache_write(cache.k, k, cache.length)
+        cv = _cache_write(cache.v, v, cache.length)
+        new_cache = KVCache(ck, cv, cache.length + s)
+        k, v = ck, cv
+        kv_off = 0
+        if window > 0 and ck.shape[1] > 2 * window and jnp.asarray(cache.length).ndim == 0:
+            # §Perf iteration C1: sliding-window decode only ever attends the
+            # last `window` positions — slice the cache read instead of
+            # streaming the full 500k slab through the masked softmax.
+            w_eff = min(_round_up(window + s, 128), ck.shape[1])
+            start = jnp.clip(cache.length + s - w_eff, 0, ck.shape[1] - w_eff)
+            k = jax.lax.dynamic_slice_in_dim(ck, start, w_eff, axis=1)
+            v = jax.lax.dynamic_slice_in_dim(cv, start, w_eff, axis=1)
+            kv_off = start
+        out = attention(q, k, v, causal=causal, window=window, q_offset=offset,
+                        kv_valid=cache.length + s, kv_chunk=kv_chunk,
+                        blocks_threshold=blocks_threshold, kv_offset=kv_off)
+    elif cache is not None:  # cross-attn with precomputed encoder cache
+        out = attention(q, cache.k, cache.v, causal=False, kv_valid=cache.length,
+                        kv_chunk=kv_chunk, blocks_threshold=blocks_threshold)
+        new_cache = cache
+    else:
+        out = attention(q, k, v, causal=causal, window=window, kv_chunk=kv_chunk,
+                        blocks_threshold=blocks_threshold)
+    return out.reshape(b, s, n_heads * head_dim) @ p["wo"], new_cache

@@ -1,0 +1,29 @@
+"""Feed-forward blocks: gated SiLU (llama-style) and GELU (classic)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_params(key, d_model: int, d_ff: int, kind: str, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    sd_in = 1.0 / math.sqrt(d_model)
+    sd_out = 1.0 / math.sqrt(2.0 * d_ff)
+    width = 2 * d_ff if kind == "gated_silu" else d_ff
+    return {
+        "wi": (jax.random.normal(k1, (d_model, width)) * sd_in).astype(dtype),
+        "wo": (jax.random.normal(k2, (d_ff, d_model)) * sd_out).astype(dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    h = x @ p["wi"]
+    if kind == "gated_silu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"]

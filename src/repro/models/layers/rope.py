@@ -1,0 +1,24 @@
+"""Rotary position embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """[head_dim//2] inverse frequencies (float32)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: [..., S] (int). Rotate pairs (even, odd
+    halves — llama convention: first/second half split)."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)  # [dh/2]
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, dh/2]
+    cos = jnp.cos(ang)[..., :, None, :]  # [..., S, 1, dh/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,221 @@
+"""Mamba2 / SSD (state-space duality) block — chunked scan formulation.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): the sequence is
+split into chunks of length Q; within a chunk the output is computed with a
+quadratic (attention-like) masked matmul, and chunk-boundary states are
+carried by a linear recurrence across chunks. The chunk length is literally
+the paper's BLOCKS partitioning knob for the SSM family: it trades the
+quadratic intra-chunk FLOPs against the sequential inter-chunk scan, exactly
+like DMA block size trades per-chunk overhead against overlap.
+
+Layout convention (following the Mamba2 reference):
+  x  : [B, S, H, P]   (H = d_inner/P heads)
+  dt : [B, S, H]      (softplus-ed, positive)
+  A  : [H]            (negative; dA = dt * A)
+  B_, C: [B, S, G, N] (G groups broadcast over heads)
+
+The Pallas kernel in repro.kernels.ssd_scan implements the intra-chunk
+quadratic part with explicit VMEM tiling; this module is the jnp reference
+path (used by the dry-run and CPU tests).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SSMState(NamedTuple):
+    """Decode-time recurrent state for one layer stack."""
+
+    ssm: jax.Array  # [B, H, P, N] running state
+    conv: jax.Array  # [B, W-1, conv_dim] causal-conv tail
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k], -inf j>i.
+
+    Produces the log of the lower-triangular decay matrix L."""
+    q = x.shape[-1]
+    x_cum = jnp.cumsum(x, axis=-1)
+    diff = x_cum[..., :, None] - x_cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, *, chunk: int,
+                initial_state: jax.Array | None = None,
+                return_final_state: bool = False):
+    """Chunked SSD scan.
+
+    x: [B, S, H, P]; dt: [B, S, H]; a: [H] (negative); b, c: [B, S, G, N].
+    Returns y: [B, S, H, P] (and final state [B, H, P, N] if requested)."""
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
+    nc = s // chunk
+    rep = h // g
+
+    # reshape into chunks
+    xc = x.reshape(bs, nc, chunk, h, p)
+    dtc = dt.reshape(bs, nc, chunk, h)
+    bc = b.reshape(bs, nc, chunk, g, n)
+    cc = c.reshape(bs, nc, chunk, g, n)
+    bch = jnp.repeat(bc, rep, axis=3)  # broadcast groups to heads [B,nc,Q,H,N]
+    cch = jnp.repeat(cc, rep, axis=3)
+
+    da = dtc * a[None, None, None, :]  # [B, nc, Q, H] (negative)
+    da_hbnq = da.transpose(0, 3, 1, 2)  # [B, H, nc, Q]
+    da_cs = jnp.cumsum(da_hbnq, axis=-1)  # within-chunk cumsum
+
+    # 1) intra-chunk (diagonal block) output: quadratic attention-like
+    l_log = segsum(da_hbnq)  # [B, H, nc, Q, Q]
+    cb = jnp.einsum("bzqhn,bzkhn->bhzqk", cch, bch)  # [B,H,nc,Q,Q]
+    att = cb * jnp.exp(l_log)
+    xdt = xc * dtc[..., None]  # [B, nc, Q, H, P]
+    y_diag = jnp.einsum("bhzqk,bzkhp->bzqhp", att.astype(x.dtype), xdt)
+
+    # 2) chunk-boundary states: state_z = sum_k exp(dA_cs[-1]-dA_cs[k]) B_k x_k
+    decay_states = jnp.exp(da_cs[..., -1:] - da_cs)  # [B, H, nc, Q]
+    states = jnp.einsum("bzkhn,bhzk,bzkhp->bzhpn", bch,
+                        decay_states.transpose(0, 1, 2, 3), xdt)
+
+    # 3) inter-chunk recurrence: carry state across chunks
+    chunk_decay = jnp.exp(da_cs[..., -1])  # [B, H, nc]
+    s0 = (jnp.zeros((bs, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def scan_body(prev, inp):
+        st_z, dec_z = inp  # [B,H,P,N], [B,H]
+        new = prev * dec_z[..., None, None] + st_z.astype(jnp.float32)
+        return new, prev  # emit state *entering* the chunk
+
+    states_hbpn = states.transpose(1, 0, 2, 3, 4).astype(jnp.float32)  # [nc,B,H,P,N]
+    decay_zb = chunk_decay.transpose(2, 0, 1)  # [nc, B, H]
+    final, prev_states = jax.lax.scan(scan_body, s0, (states_hbpn, decay_zb))
+    # prev_states: [nc, B, H, P, N] — state at each chunk start
+
+    # 4) off-diagonal contribution: y_off = C_q . (decay_in[q] * prev_state)
+    state_decay_out = jnp.exp(da_cs)  # [B, H, nc, Q]
+    y_off = jnp.einsum("bzqhn,zbhpn,bhzq->bzqhp", cch,
+                       prev_states, state_decay_out).astype(x.dtype)
+
+    y = (y_diag + y_off).reshape(bs, s, h, p)
+    if return_final_state:
+        return y, final
+    return y
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    a: jax.Array, b: jax.Array, c: jax.Array):
+    """Single-token recurrent update. state: [B,H,P,N]; x: [B,H,P];
+    dt: [B,H]; b,c: [B,G,N]. Returns (y [B,H,P], new_state)."""
+    h = x.shape[1]
+    g = b.shape[1]
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=1)  # [B,H,N]
+    ch = jnp.repeat(c, rep, axis=1)
+    da = jnp.exp(dt * a[None, :])  # [B,H]
+    upd = jnp.einsum("bhn,bhp->bhpn", bh, x * dt[..., None])
+    new = state * da[..., None, None] + upd.astype(jnp.float32)
+    y = jnp.einsum("bhpn,bhn->bhp", new.astype(x.dtype), ch)
+    return y, new
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block: in_proj -> causal conv -> SSD -> gated norm -> out_proj
+# ---------------------------------------------------------------------------
+
+def mamba2_params(key, cfg, dtype) -> dict:
+    d, din, n, g, h, w = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                          cfg.ssm_groups, cfg.n_ssm_heads, cfg.ssm_conv_width)
+    conv_dim = cfg.conv_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sd = 1.0 / math.sqrt(d)
+    d_in_proj = 2 * din + 2 * g * n + h
+    return {
+        "in_proj": (jax.random.normal(k1, (d, d_in_proj)) * sd).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (w, conv_dim)) * (1.0 / math.sqrt(w))
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), math.log(math.e - 1), jnp.float32),
+        "norm_scale": jnp.ones((din,), jnp.float32),
+        "out_proj": (jax.random.normal(k3, (din, d)) * (1.0 / math.sqrt(din))
+                     ).astype(dtype),
+    }
+
+
+def _causal_conv(z: jax.Array, w: jax.Array, bias: jax.Array,
+                 tail: jax.Array | None = None):
+    """Depthwise causal conv1d. z: [B, S, C]; w: [W, C]. Returns (y, new_tail)."""
+    width = w.shape[0]
+    if tail is None:
+        zp = jnp.pad(z, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        zp = jnp.concatenate([tail.astype(z.dtype), z], axis=1)
+    y = sum(zp[:, i : i + z.shape[1]] * w[i][None, None] for i in range(width))
+    new_tail = zp[:, zp.shape[1] - (width - 1):]
+    return jax.nn.silu(y + bias[None, None]), new_tail
+
+
+def mamba2_apply(p: dict, x: jax.Array, cfg, *,
+                 state: SSMState | None = None):
+    """x: [B, S, D] -> ([B, S, D], new_state or None).
+
+    With ``state`` (decode): S must be 1 and the recurrent path is used."""
+    bsz, s, d = x.shape
+    din, n, g, h, pp = (cfg.d_inner, cfg.ssm_state, cfg.ssm_groups,
+                        cfg.n_ssm_heads, cfg.ssm_head_dim)
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(p["a_log"])  # [H], negative
+
+    if state is None or s > 1:
+        tail = state.conv if state is not None else None
+        xbc, new_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], tail)
+        xs, b, c = jnp.split(xbc, [din, din + g * n], axis=-1)
+        xh = xs.reshape(bsz, s, h, pp)
+        bb = b.reshape(bsz, s, g, n)
+        cc = c.reshape(bsz, s, g, n)
+        pad = (-s) % cfg.ssm_chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            bb = jnp.pad(bb, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        init = state.ssm if state is not None else None
+        y, final = ssd_chunked(xh, dt, a, bb, cc, chunk=cfg.ssm_chunk,
+                               initial_state=init, return_final_state=True)
+        y = y[:, :s] + xh[:, :s] * p["d_skip"][None, None, :, None]
+        new_state = SSMState(final, new_tail) if state is not None else None
+    else:
+        xbc, new_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], state.conv)
+        xs, b, c = jnp.split(xbc, [din, din + g * n], axis=-1)
+        xh = xs.reshape(bsz, h, pp)  # S == 1
+        yh, new_ssm = ssd_decode_step(state.ssm, xh, dt[:, 0], a,
+                                      b.reshape(bsz, g, n), c.reshape(bsz, g, n))
+        y = (yh + xh * p["d_skip"][None, :, None])[:, None]
+        new_state = SSMState(new_ssm, new_tail)
+
+    y = y.reshape(bsz, s, din)
+    # gated RMSNorm (mamba2's norm-before-out-proj)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"]
+    return yf.astype(x.dtype) @ p["out_proj"], new_state
+
+
+def ssm_state_zeros(cfg, batch: int, dtype) -> SSMState:
+    return SSMState(
+        jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                  jnp.float32),
+        jnp.zeros((batch, cfg.ssm_conv_width - 1, cfg.conv_dim), dtype),
+    )

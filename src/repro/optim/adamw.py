@@ -1,0 +1,87 @@
+"""AdamW with mixed precision + optional gradient compression hooks.
+
+Pure-JAX (no optax): params are kept in the model compute dtype (bf16); the
+optimizer state carries an f32 master copy plus f32 first/second moments.
+State leaves get their own (finer) sharding than params — see
+repro.dist.sharding.opt_state_spec — giving ZeRO-1-style sharded optimizer
+memory across the ('data','model') mesh.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import global_norm, tree_finite
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    skip_nonfinite: bool = True  # fault tolerance: skip bad steps
+
+
+def adamw_init(params: Any) -> dict:
+    # copy=True: an f32 leaf's master must NOT alias the param buffer
+    # (both are donated by the train step).
+    f32 = lambda x: jnp.array(x, dtype=jnp.float32, copy=True)  # noqa: E731
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+    }
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, opt_state: dict, params: Any,
+                 lr_scale: jax.Array | float = 1.0) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if master.ndim >= 2:  # decoupled weight decay on matrices only
+            update = update + cfg.weight_decay * master
+        return m, v, master - lr * update
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_ma = treedef.flatten_up_to(opt_state["master"])
+    out = [upd(g, m, v, ma) for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+
+    if cfg.skip_nonfinite:
+        ok = tree_finite(grads)
+        keep = lambda new, old: jax.tree.map(  # noqa: E731
+            lambda n, o: jnp.where(ok, n, o), new, old)
+        new_m = keep(new_m, opt_state["m"])
+        new_v = keep(new_v, opt_state["v"])
+        new_master = keep(new_master, opt_state["master"])
+        step = jnp.where(ok, step, opt_state["step"])
+    else:
+        ok = jnp.array(True)
+
+    new_params = jax.tree.map(lambda ma, p: ma.astype(p.dtype), new_master, params)
+    new_state = {"step": step, "master": new_master, "m": new_m, "v": new_v}
+    metrics = {"grad_norm": gnorm, "step_ok": ok.astype(jnp.float32)}
+    return new_params, new_state, metrics

@@ -1,0 +1,144 @@
+"""Continuous batching: slot-based decode with per-request admission.
+
+The batched decode step never stops for stragglers: each of the B slots
+holds an independent request; finished slots are refilled by prefilling the
+next queued prompt (batch=1) and splicing its KV cache into the slot. This
+is the serving-side incarnation of the paper's scheduled/interrupt modes —
+the engine never blocks the whole batch on one request's completion, just
+as the kernel driver never blocks the PS on one DMA.
+
+Supports the KV-cache families (dense / moe / vlm); the cache carries
+per-slot lengths [L, B] so heterogeneous requests decode correctly in one
+batch (the attention layer handles vector cache lengths).
+"""
+
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S_prompt]
+    max_new_tokens: int = 32
+    tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+def _splice_slot(batch_cache: Any, one_cache: Any, slot: int,
+                 batch_dim_of) -> Any:
+    """Write a batch-1 cache into slot `slot` of the batched cache."""
+
+    def fn(dst, src):
+        bd = batch_dim_of(dst)
+        if bd is None:
+            return dst
+        if src.ndim == dst.ndim - 1:  # scalar-per-layer length -> [L, 1]
+            src = src[..., None]
+        start = [0] * dst.ndim
+        start[bd] = slot
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                            tuple(start))
+
+    return jax.tree.map(fn, batch_cache, one_cache)
+
+
+class ContinuousBatchingEngine:
+    """Admits requests into B decode slots; one jitted step serves all."""
+
+    def __init__(self, model: Model, params: Any, *, n_slots: int = 4,
+                 max_seq: int = 256, eos_token: int = -1):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.eos = eos_token
+        if model.cfg.family in ("ssm", "hybrid"):
+            raise NotImplementedError(
+                "continuous batching currently supports KV-cache families")
+        self.queue: "collections.deque[Request]" = collections.deque()
+        self.slots: list[Request | None] = [None] * n_slots
+        cache = model.init_cache(n_slots, max_seq)
+        # per-slot lengths: [L] -> [L, B]
+        self.cache = cache._replace(
+            length=jnp.zeros((model.cfg.n_layers, n_slots), jnp.int32))
+        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self.lengths = np.zeros(n_slots, np.int64)
+        self._decode = jax.jit(model.decode)
+        self._prefill1 = jax.jit(lambda p, b: model.prefill(p, b, max_seq))
+        self.steps = 0
+        self.completed: list[Request] = []
+
+    # -- cache plumbing ------------------------------------------------------
+    def _batch_dim_of(self, leaf) -> int | None:
+        if leaf.ndim >= 2 and leaf.shape[1] == self.n_slots:
+            return 1  # stacked [L, B, ...]
+        if leaf.ndim >= 1 and leaf.shape[0] == self.n_slots:
+            return 0
+        return None
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            logits, one_cache = self._prefill1(
+                self.params, {"tokens": jnp.asarray(req.prompt[None],
+                                                    jnp.int32)})
+            first = int(np.asarray(
+                logits[0, -1, : self.model.cfg.vocab].argmax(-1)))
+            req.tokens.append(first)
+            self.cache = _splice_slot(self.cache, one_cache, slot,
+                                      self._batch_dim_of)
+            self.tokens = self.tokens.at[slot, 0].set(first)
+            self.lengths[slot] = len(req.prompt) + 1
+            self.slots[slot] = req
+
+    def _retire(self) -> None:
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            hit_eos = self.eos >= 0 and req.tokens and req.tokens[-1] == self.eos
+            if (len(req.tokens) >= req.max_new_tokens or hit_eos
+                    or self.lengths[slot] >= self.max_seq - 1):
+                req.done = True
+                self.completed.append(req)
+                self.slots[slot] = None
+
+    def step(self) -> int:
+        """Admit, decode one token for every active slot, retire. Returns
+        the number of active slots served."""
+        self._admit()
+        active = [s for s, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        logits, self.cache = self._decode(self.params, self.tokens,
+                                          self.cache)
+        nxt = np.asarray(logits[:, -1, : self.model.cfg.vocab].argmax(-1))
+        for slot in active:
+            self.slots[slot].tokens.append(int(nxt[slot]))
+            self.lengths[slot] += 1
+        self.tokens = jnp.asarray(nxt[:, None], jnp.int32)
+        self.steps += 1
+        self._retire()
+        return len(active)
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        while (self.queue or any(s is not None for s in self.slots)):
+            if self.step() == 0 and not self.queue:
+                break
+            if self.steps > max_steps:
+                break
+        return self.completed

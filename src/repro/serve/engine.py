@@ -1,0 +1,96 @@
+"""Batched serving engine: prefill + decode with slot-based batching.
+
+Request flow (NullHop analogy is direct — the paper's accelerator serves
+classification frames streamed by the PS):
+- requests enter a host-side queue (the PS side);
+- the engine batches up to ``max_batch`` prompts, prefills them into the
+  KV cache, then decodes steps for the whole batch (continuous-batching
+  lite: finished slots are refilled between decode bursts);
+- token transfers host<->device go through the TransferPolicy (a decoded
+  token is an RX; new prompts are TX) — measured like every other transfer.
+
+The decode step itself is the jitted function the decode_32k / long_500k
+dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.transfer import TransferPolicy
+from repro.models.api import Model
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq: int = 256
+    temperature: float = 0.0  # 0 => greedy
+    eos_token: int = -1  # -1 => run to max_new_tokens
+    seed: int = 0
+
+
+@dataclass
+class RequestResult:
+    prompt: np.ndarray
+    tokens: np.ndarray
+    prefill_s: float
+    decode_s: float
+
+    @property
+    def tokens_per_s(self) -> float:
+        n = len(self.tokens)
+        return n / self.decode_s if self.decode_s > 0 else float("inf")
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params: Any, cfg: ServeConfig,
+                 policy: TransferPolicy | None = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.policy = policy or TransferPolicy.kernel_level()
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cfg.max_seq))
+        self._decode = jax.jit(model.decode, donate_argnums=(2,))
+        self._key = jax.random.PRNGKey(cfg.seed)
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        logits = logits[:, -1, : self.model.cfg.vocab]
+        if self.cfg.temperature <= 0:
+            return logits.argmax(-1)[:, None].astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(
+            sub, logits / self.cfg.temperature)[:, None].astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
+                 extra_inputs: dict | None = None) -> list[RequestResult]:
+        """prompts: [B, S_prompt] int32 (already padded/batched)."""
+        b = prompts.shape[0]
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extra_inputs:
+            batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
+
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch)
+        tok = self._sample(logits)
+        jax.block_until_ready(tok)
+        prefill_s = time.perf_counter() - t0
+
+        out = [tok]
+        t0 = time.perf_counter()
+        for _ in range(max_new_tokens - 1):
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = self._sample(logits)
+            out.append(tok)
+        toks = np.asarray(jnp.concatenate(out, axis=1))
+        decode_s = time.perf_counter() - t0
+
+        return [RequestResult(prompts[i], toks[i], prefill_s, decode_s)
+                for i in range(b)]

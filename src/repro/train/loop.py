@@ -1,0 +1,137 @@
+"""Fault-tolerant training loop with microbatched (blocks-mode) steps.
+
+Microbatching IS the paper's Blocks partitioning applied to the batch
+dimension: the global batch is split into ``n_microbatches`` chunks scanned
+on-device, bounding activation memory exactly like chunked DMA bounds
+staging-buffer memory. Gradients accumulate in f32.
+
+Loop-level fault tolerance (see repro.dist.fault):
+- restart: Trainer.run resumes from the latest checkpoint if one exists;
+- async checkpoints via CheckpointManager (INTERRUPT-mode writes);
+- straggler detection on per-step wall time;
+- non-finite steps are skipped inside adamw_update (weights untouched).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.dist.fault import FaultPolicy, FaultState
+from repro.models.api import Model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    n_microbatches: int = 1
+    warmup: int = 10
+    log_every: int = 10
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+    checkpoint_dir: str = ""
+    checkpoint_every: int = 100
+    async_checkpoint: bool = True
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    """Build the jit-able (params, opt_state, batch) -> (...) step."""
+    n_micro = tcfg.n_microbatches
+    grad_fn = jax.value_and_grad(model.loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                gacc, lacc, aacc = acc
+                (loss, m), g = grad_fn(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + m["loss"], aacc + m["acc"]), None
+
+            gacc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gacc, lsum, asum), _ = jax.lax.scan(
+                body, (gacc0, jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, gacc)
+            loss = lsum / n_micro
+            metrics = {"loss": loss, "acc": asum / n_micro,
+                       "aux": jnp.zeros(())}
+        lr_scale = cosine_schedule(opt_state["step"], warmup=tcfg.warmup,
+                                   total=tcfg.steps)
+        params, opt_state, om = adamw_update(tcfg.opt, grads, opt_state,
+                                             params, lr_scale)
+        metrics = dict(metrics)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+@dataclass
+class Trainer:
+    model: Model
+    tcfg: TrainConfig
+    jit_kwargs: dict = field(default_factory=dict)
+    fault: FaultState = field(default_factory=FaultState)
+    history: list[dict] = field(default_factory=list)
+
+    def run(self, data_iter, key=None, initial_state=None) -> dict:
+        """Train for tcfg.steps; restart-safe. Returns final state dict."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        step_fn = jax.jit(make_train_step(self.model, self.tcfg),
+                          donate_argnums=(0, 1), **self.jit_kwargs)
+
+        ckpt = None
+        start_step = 0
+        if self.tcfg.checkpoint_dir:
+            ckpt = CheckpointManager(self.tcfg.checkpoint_dir,
+                                     every=self.tcfg.checkpoint_every,
+                                     async_write=self.tcfg.async_checkpoint)
+        if initial_state is not None:
+            params, opt_state = initial_state
+        else:
+            params = self.model.init(key)
+            opt_state = adamw_init(params)
+            if ckpt is not None:
+                restored = ckpt.restore_latest(
+                    {"params": params, "opt": opt_state})
+                if restored is not None:
+                    start_step = restored[0]
+                    params = restored[1]["params"]
+                    opt_state = restored[1]["opt"]
+                    self.fault.restarts += 1
+
+        metrics = {}
+        for step in range(start_step, self.tcfg.steps):
+            batch = next(data_iter)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.fault.record_step(dt, float(metrics["step_ok"]))
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.steps - 1:
+                row = {k: float(v) for k, v in metrics.items()}
+                row["step"] = step
+                row["dt_s"] = dt
+                self.history.append(row)
+            if ckpt is not None:
+                ckpt.maybe_save(step + 1, {"params": params, "opt": opt_state})
+        if ckpt is not None:
+            ckpt.wait()
+        return {"params": params, "opt_state": opt_state, "metrics": metrics,
+                "fault": self.fault}

@@ -1,0 +1,53 @@
+"""Small pytree utilities used across the substrate."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves (ShapeDtypeStructs count too)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_params(tree: Any) -> int:
+    """Total element count of all array leaves."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(l.shape)) for l in leaves if hasattr(l, "shape"))
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_cast(tree: Any, dtype) -> Any:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def tree_finite(tree: Any) -> jax.Array:
+    """Scalar bool: every floating leaf is finite. Used for NaN-guarded updates."""
+    leaves = [
+        jnp.isfinite(l).all()
+        for l in jax.tree_util.tree_leaves(tree)
+        if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating)
+    ]
+    if not leaves:
+        return jnp.array(True)
+    return jnp.stack(leaves).all()
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))

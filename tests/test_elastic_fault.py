@@ -1,0 +1,55 @@
+"""Elastic re-meshing and fault-policy unit tests."""
+
+import pytest
+
+from repro.dist.elastic import MeshPlan, reshard_plan, shrink_mesh
+from repro.dist.fault import FaultPolicy, FaultState
+
+
+def test_shrink_keeps_model_axis():
+    plan = shrink_mesh(384, model_parallel=16, multi_pod=True)
+    assert plan.axis_names[plan.axis_names.index("model")] == "model"
+    assert plan.shape[plan.axis_names.index("model")] == 16
+    assert plan.n_devices <= 384
+
+
+def test_shrink_single_pod():
+    plan = shrink_mesh(240, model_parallel=16)
+    assert plan.shape == (15, 16)
+    assert plan.axis_names == ("data", "model")
+
+
+def test_shrink_raises_when_model_axis_lost():
+    with pytest.raises(ValueError):
+        shrink_mesh(8, model_parallel=16)
+
+
+def test_reshard_plan_data_only_change():
+    old = shrink_mesh(512, model_parallel=16, multi_pod=True)
+    new = shrink_mesh(384, model_parallel=16, multi_pod=True)
+    plan = reshard_plan(256, old, new)
+    assert plan["params_move"] is False  # TP width unchanged
+    assert plan["grad_replicas"] == new.n_devices // 16
+
+
+def test_reshard_plan_detects_tp_change():
+    old = MeshPlan((16, 16), ("data", "model"))
+    new = MeshPlan((32, 8), ("data", "model"))
+    plan = reshard_plan(256, old, new)
+    assert plan["params_move"] is True
+
+
+def test_fault_state_counts():
+    st = FaultState()
+    import numpy as np
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        st.record_step(0.1 + rng.random() * 1e-3, step_ok=1.0)
+    assert st.record_step(1.0, step_ok=0.0)  # straggler + nonfinite
+    assert st.stragglers_detected == 1
+    assert st.steps_skipped_nonfinite == 1
+
+
+def test_fault_policy_defaults_sane():
+    p = FaultPolicy()
+    assert p.checkpoint_every > 0 and p.keep_checkpoints >= 1

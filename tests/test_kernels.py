@@ -1,0 +1,160 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.transfer import Partitioning, TransferPolicy
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ---- streamed matmul ------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 512),
+                                   (512, 256, 128)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_matmul_blocks_sweep(m, k, n, dtype):
+    from repro.kernels.streamed_matmul.kernel import matmul_blocks
+    from repro.kernels.streamed_matmul.ref import matmul_ref
+    dt = jnp.dtype(dtype)
+    x = jax.random.normal(KEY, (m, k)).astype(dt)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n)).astype(dt)
+    out = matmul_blocks(x, w, block_m=128, block_n=128, block_k=128,
+                        interpret=True)
+    ref = matmul_ref(x, w)
+    tol = 2e-2 if dtype == "bfloat16" else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_matmul_unique_matches_blocks():
+    from repro.kernels.streamed_matmul.kernel import matmul_blocks, matmul_unique
+    x = jax.random.normal(KEY, (256, 256))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (256, 256))
+    a = matmul_unique(x, w, interpret=True)
+    b = matmul_blocks(x, w, block_m=128, block_n=128, block_k=128,
+                      interpret=True)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+
+def test_matmul_policy_dispatch_and_vmem_guard():
+    from repro.kernels.streamed_matmul.ops import streamed_matmul
+    x = jax.random.normal(KEY, (256, 256))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (256, 256))
+    out = streamed_matmul(x, w, TransferPolicy(block_bytes=1 << 16),
+                          interpret=True)
+    assert out.shape == (256, 256)
+    # UNIQUE beyond VMEM budget must raise (the 8MB AXI-limit analogue)
+    big = jax.ShapeDtypeStruct((8192, 8192), jnp.float32)
+    with pytest.raises(ValueError, match="VMEM"):
+        streamed_matmul(
+            jnp.zeros(big.shape, big.dtype), jnp.zeros(big.shape, big.dtype),
+            TransferPolicy(partitioning=Partitioning.UNIQUE), interpret=True)
+
+
+# ---- flash attention ------------------------------------------------------
+
+@pytest.mark.parametrize("sq,skv", [(128, 128), (256, 512)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 96)])
+@pytest.mark.parametrize("n_rep", [1, 4])
+def test_flash_attention_sweep(sq, skv, causal, window, n_rep):
+    from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+    from repro.kernels.flash_attention.ref import attention_ref
+    if causal and sq != skv:
+        pytest.skip("causal assumes aligned q/kv")
+    bh, dh = 4, 64
+    q = jax.random.normal(KEY, (bh, sq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (bh // n_rep, skv, dh))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (bh // n_rep, skv, dh))
+    out = flash_attention_bhsd(q, k, v, causal=causal, window=window,
+                               block_q=64, block_kv=64, n_rep=n_rep,
+                               interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window, n_rep=n_rep)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    b, s, h, hkv, dh = 2, 128, 4, 2, 32
+    q = jax.random.normal(KEY, (b, s, h, dh)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1),
+                          (b, s, hkv, dh)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2),
+                          (b, s, hkv, dh)).astype(jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=64, block_kv=64, interpret=True)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, dh)
+    ref = attention_ref(qf, kf, vf, n_rep=2).reshape(b, h, s, dh
+                                                     ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=5e-2,
+                               atol=5e-2)
+
+
+# ---- ssd scan -------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_ssd_intra_chunk_sweep(chunk):
+    from repro.kernels.ssd_scan.kernel import ssd_intra_chunk_call
+    from repro.kernels.ssd_scan.ref import ssd_intra_chunk_ref
+    bs, s, h, p, g, n = 2, 64, 4, 16, 2, 8
+    x = jax.random.normal(KEY, (bs, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 1),
+                                           (bs, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 2), (h,)) * 0.3)
+    b = jax.random.normal(jax.random.fold_in(KEY, 3), (bs, s, g, n)) * 0.3
+    c = jax.random.normal(jax.random.fold_in(KEY, 4), (bs, s, g, n)) * 0.3
+    yk, stk, deck = ssd_intra_chunk_call(x, dt, a, b, c, chunk=chunk,
+                                         interpret=True)
+    yr, st_r, decr = ssd_intra_chunk_ref(x, dt, a, b, c, chunk=chunk)
+    np.testing.assert_allclose(yk, yr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(stk, st_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(deck, decr, rtol=1e-5, atol=1e-6)
+
+
+def test_ssd_full_matches_model_path():
+    from repro.kernels.ssd_scan.ops import ssd_full
+    from repro.models.layers.ssm import ssd_chunked
+    bs, s, h, p, g, n = 2, 64, 4, 16, 1, 8
+    x = jax.random.normal(KEY, (bs, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 1),
+                                           (bs, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 2), (h,)) * 0.3)
+    b = jax.random.normal(jax.random.fold_in(KEY, 3), (bs, s, g, n)) * 0.3
+    c = jax.random.normal(jax.random.fold_in(KEY, 4), (bs, s, g, n)) * 0.3
+    y1, f1 = ssd_full(x, dt, a, b, c, chunk=16, use_kernel=True,
+                      interpret=True)
+    y2, f2 = ssd_chunked(x, dt, a, b, c, chunk=16, return_final_state=True)
+    np.testing.assert_allclose(y1, y2, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(f1, f2, rtol=1e-3, atol=1e-3)
+
+
+# ---- conv2d ---------------------------------------------------------------
+
+@pytest.mark.parametrize("hw,cin,cout,tile_h", [(16, 8, 16, 4), (32, 4, 8, 8),
+                                                (8, 1, 16, 8)])
+def test_conv2d_sweep(hw, cin, cout, tile_h):
+    from repro.kernels.conv2d.ops import conv2d_relu
+    from repro.kernels.conv2d.ref import conv2d_relu_ref
+    x = jax.random.normal(KEY, (2, hw, hw, cin))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (3, 3, cin, cout)) * 0.2
+    b = jax.random.normal(jax.random.fold_in(KEY, 2), (cout,)) * 0.1
+    out = conv2d_relu(x, w, b, tile_h=tile_h, interpret=True)
+    ref = conv2d_relu_ref(x, w, b)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_no_relu():
+    from repro.kernels.conv2d.ops import conv2d_relu
+    from repro.kernels.conv2d.ref import conv2d_relu_ref
+    x = jax.random.normal(KEY, (1, 8, 8, 4))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (3, 3, 4, 8)) * 0.2
+    b = jnp.zeros((8,))
+    out = conv2d_relu(x, w, b, tile_h=4, relu=False, interpret=True)
+    ref = conv2d_relu_ref(x, w, b, relu=False)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,149 @@
+"""Layer-level properties: attention blocks==unique, SSD invariants, MoE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.layers.attention import attention_blocks, attention_unique
+from repro.models.layers.moe import moe_apply, moe_params
+from repro.models.layers.ssm import segsum, ssd_chunked, ssd_decode_step
+
+KEY = jax.random.PRNGKey(3)
+
+
+# ---- attention: blocks-mode == unique-mode (the paper's partitioning is
+# semantics-preserving) -----------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(sq=st.integers(1, 48), skv_mult=st.integers(1, 6),
+       window=st.sampled_from([0, 16, 64]), chunk=st.sampled_from([16, 64]),
+       offset=st.integers(0, 64))
+def test_attention_blocks_equals_unique(sq, skv_mult, window, chunk, offset):
+    b, h, hkv, dh = 2, 4, 2, 16
+    skv = offset + sq + skv_mult * 7
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (b, sq, h, dh))
+    k = jax.random.normal(k2, (b, skv, hkv, dh))
+    v = jax.random.normal(k3, (b, skv, hkv, dh))
+    kv_valid = jnp.asarray(offset + sq)
+    u = attention_unique(q, k, v, causal=True, window=window,
+                         q_offset=offset, kv_valid=kv_valid)
+    bl = attention_blocks(q, k, v, causal=True, window=window,
+                          q_offset=offset, kv_valid=kv_valid, kv_chunk=chunk)
+    np.testing.assert_allclose(np.asarray(u), np.asarray(bl), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---- SSD ------------------------------------------------------------------
+
+def _ssd_inputs(s, h=4, p=8, g=2, n=4, bs=2):
+    x = jax.random.normal(KEY, (bs, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 1),
+                                           (bs, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 2), (h,)) * 0.3)
+    b = jax.random.normal(jax.random.fold_in(KEY, 3), (bs, s, g, n)) * 0.3
+    c = jax.random.normal(jax.random.fold_in(KEY, 4), (bs, s, g, n)) * 0.3
+    return x, dt, a, b, c
+
+
+def test_ssd_chunk_size_invariance():
+    """The BLOCKS knob must not change the math (paper's partitioning)."""
+    x, dt, a, b, c = _ssd_inputs(64)
+    y16 = ssd_chunked(x, dt, a, b, c, chunk=16)
+    y32 = ssd_chunked(x, dt, a, b, c, chunk=32)
+    y64 = ssd_chunked(x, dt, a, b, c, chunk=64)
+    np.testing.assert_allclose(y16, y32, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(y16, y64, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_matches_naive_recurrence():
+    """Chunked SSD == token-by-token linear recurrence (the SSM oracle)."""
+    x, dt, a, b, c = _ssd_inputs(32)
+    y = ssd_chunked(x, dt, a, b, c, chunk=8)
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    state = jnp.zeros((bs, h, p, n))
+    outs = []
+    for t in range(s):
+        yt, state = ssd_decode_step(state, x[:, t], dt[:, t], a,
+                                    b[:, t], c[:, t])
+        outs.append(yt)
+    y_naive = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_naive),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_state_carry_equals_one_shot():
+    """Processing [0:32] then [32:64] with carried state == one shot."""
+    x, dt, a, b, c = _ssd_inputs(64)
+    y_full, f_full = ssd_chunked(x, dt, a, b, c, chunk=16,
+                                 return_final_state=True)
+    y1, f1 = ssd_chunked(x[:, :32], dt[:, :32], a, b[:, :32], c[:, :32],
+                         chunk=16, return_final_state=True)
+    y2, f2 = ssd_chunked(x[:, 32:], dt[:, 32:], a, b[:, 32:], c[:, 32:],
+                         chunk=16, initial_state=f1, return_final_state=True)
+    np.testing.assert_allclose(np.concatenate([y1, y2], axis=1), y_full,
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(f2, f_full, rtol=2e-3, atol=2e-3)
+
+
+def test_segsum_semantics():
+    x = jnp.asarray([1.0, 2.0, 3.0])
+    out = segsum(x)
+    assert out[2, 0] == pytest.approx(5.0)  # x1 + x2
+    assert out[1, 1] == pytest.approx(0.0)
+    assert np.isneginf(np.asarray(out)[0, 1])
+
+
+# ---- MoE ------------------------------------------------------------------
+
+def test_moe_no_drops_at_high_capacity():
+    p = moe_params(KEY, 32, n_experts=4, d_expert=16, n_shared=1,
+                   dtype=jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 9), (2, 8, 32))
+    out, m = moe_apply(p, x, top_k=2, capacity_factor=8.0)
+    assert out.shape == x.shape
+    assert float(m.dropped_frac) == 0.0
+    assert np.isfinite(float(m.aux_loss))
+
+
+def test_moe_capacity_drops_pass_through():
+    """With capacity_factor ~0, routed contribution ~0 for most tokens but
+    output stays finite (residual semantics are the caller's)."""
+    p = moe_params(KEY, 16, n_experts=4, d_expert=8, n_shared=0,
+                   dtype=jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 9), (1, 16, 16))
+    out, m = moe_apply(p, x, top_k=2, capacity_factor=0.1)
+    assert float(m.dropped_frac) > 0.3
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_moe_permutation_equivariance():
+    """Permuting tokens permutes outputs (at unlimited capacity)."""
+    p = moe_params(KEY, 16, n_experts=4, d_expert=8, n_shared=0,
+                   dtype=jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 11), (1, 12, 16))
+    perm = jax.random.permutation(jax.random.fold_in(KEY, 12), 12)
+    y1, _ = moe_apply(p, x, top_k=2, capacity_factor=16.0)
+    y2, _ = moe_apply(p, x[:, perm], top_k=2, capacity_factor=16.0)
+    np.testing.assert_allclose(np.asarray(y1[:, perm]), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_aux_loss_favors_balance():
+    """Uniform routing probabilities -> aux ~= 1; collapsed -> > 1."""
+    d, e = 8, 4
+    p = moe_params(KEY, d, n_experts=e, d_expert=4, n_shared=0,
+                   dtype=jnp.float32)
+    p = dict(p)
+    p["router"] = jnp.zeros((d, e))  # uniform
+    # positive inputs so a one-hot-positive router column always wins
+    x = jnp.abs(jax.random.normal(KEY, (1, 64, d))) + 0.1
+    _, m_uniform = moe_apply(p, x, top_k=1, capacity_factor=8.0)
+    p["router"] = jnp.concatenate(
+        [jnp.full((d, 1), 5.0), jnp.full((d, e - 1), -5.0)], axis=1)
+    _, m_collapsed = moe_apply(p, x, top_k=1, capacity_factor=8.0)
+    assert float(m_collapsed.aux_loss) > float(m_uniform.aux_loss) * 1.5

@@ -1,0 +1,142 @@
+"""Per-arch smoke tests (reduced configs) + decode/forward consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, get_config, smoke_config
+from repro.models.api import build_model, input_specs
+from repro.models.config import SHAPE_CELLS, cell_applicable
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=32, key=KEY):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    if cfg.family == "audio":
+        return {"frames": jax.random.normal(key, (b, 16, cfg.d_model)),
+                "tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        return {"tokens": toks,
+                "patch_embeds": jax.random.normal(
+                    key, (b, cfg.n_prefix_tokens, cfg.d_model)),
+                "labels": toks}
+    return {"tokens": toks, "labels": toks}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one grad step on CPU: shapes right, no NaNs."""
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = make_batch(cfg)
+    logits, aux = jax.jit(model.forward)(params, batch)
+    s_out = batch["tokens"].shape[1] + (
+        cfg.n_prefix_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, s_out, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(model.loss, has_aux=True))(params, batch)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Greedy equivalence: prefill(S-1) + decode(1) == forward(S)."""
+    kw = {"capacity_factor": 64.0} if "moe" in arch else {}
+    cfg = smoke_config(arch).replace(dtype="float32", **kw)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    b, s = 2, 24
+    toks = jax.random.randint(jax.random.fold_in(KEY, 7), (b, s), 0,
+                              cfg.vocab)
+    off = cfg.n_prefix_tokens if cfg.family == "vlm" else 0
+    batch = make_batch(cfg, b, s, jax.random.fold_in(KEY, 8))
+    batch["tokens"] = toks
+    batch["labels"] = toks
+    pbatch = {k: v for k, v in batch.items() if k != "labels"}
+    pbatch["tokens"] = toks[:, : s - 1]
+
+    full, _ = jax.jit(model.forward)(params, batch)
+    pl_, cache = jax.jit(lambda p, bb: model.prefill(p, bb, off + s + 8))(
+        params, pbatch)
+    dl, _ = jax.jit(model.decode)(params, toks[:, s - 1 : s], cache)
+    np.testing.assert_allclose(np.asarray(full[:, off + s - 2]),
+                               np.asarray(pl_[:, -1]), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(full[:, off + s - 1]),
+                               np.asarray(dl[:, -1]), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_param_count_sane(arch):
+    """Full config param counts are in the advertised ballpark."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {
+        "seamless-m4t-medium": (0.3e9, 1.5e9),
+        "stablelm-12b": (10e9, 14e9),
+        "qwen2.5-3b": (2.5e9, 4e9),
+        "internlm2-20b": (17e9, 23e9),
+        "h2o-danube-1.8b": (1.4e9, 2.2e9),
+        "pixtral-12b": (10e9, 14e9),
+        "deepseek-moe-16b": (14e9, 20e9),
+        "granite-moe-1b-a400m": (0.8e9, 1.8e9),
+        "mamba2-780m": (0.6e9, 1.0e9),
+        "zamba2-1.2b": (0.9e9, 1.6e9),
+    }[arch]
+    assert expected[0] <= n <= expected[1], f"{arch}: {n/1e9:.2f}B"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_cover_all_cells(arch):
+    cfg = get_config(arch)
+    for cell in SHAPE_CELLS:
+        ok, why = cell_applicable(cfg, cell)
+        if not ok:
+            assert cell.name == "long_500k" and not cfg.supports_long_context
+            continue
+        specs = input_specs(cfg, cell)
+        assert all(hasattr(v, "shape") for v in specs.values())
+        if cell.kind != "decode":
+            lead = {v.shape[0] for v in specs.values()}
+            assert lead == {cell.global_batch}
+
+
+def test_long_context_flags():
+    assert get_config("mamba2-780m").supports_long_context
+    assert get_config("zamba2-1.2b").supports_long_context
+    assert get_config("h2o-danube-1.8b").supports_long_context  # SWA
+    assert not get_config("qwen2.5-3b").supports_long_context
+    assert not get_config("pixtral-12b").supports_long_context
+
+
+def test_moe_active_params_below_total():
+    cfg = get_config("deepseek-moe-16b")
+    assert cfg.active_param_count() < 0.45 * cfg.param_count()
+
+
+def test_chunked_prefill_matches_single_shot():
+    """§Perf B5: Blocks-mode prefill must equal single-shot prefill."""
+    from repro.models import lm
+    for arch in ("qwen2.5-3b", "deepseek-moe-16b"):
+        kw = {"capacity_factor": 64.0} if "moe" in arch else {}
+        cfg = smoke_config(arch).replace(dtype="float32", **kw)
+        model = build_model(cfg)
+        params = model.init(KEY)
+        toks = jax.random.randint(jax.random.fold_in(KEY, 5), (2, 32), 0,
+                                  cfg.vocab)
+        l_ref, c_ref = jax.jit(lambda p, t: lm.prefill(cfg, p, t, 48))(
+            params, toks)
+        l_chk, c_chk = jax.jit(
+            lambda p, t: lm.prefill_chunked(cfg, p, t, 48, chunk=8))(
+            params, toks)
+        np.testing.assert_allclose(np.asarray(l_ref), np.asarray(l_chk),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(c_ref.k, np.float32),
+                                   np.asarray(c_chk.k, np.float32), atol=1e-4)

@@ -1,0 +1,163 @@
+"""Optimizer, schedules, compression, data pipeline, checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (
+    CheckpointManager,
+    restore_latest,
+    save_checkpoint,
+)
+from repro.core.transfer import Management, TransferPolicy
+from repro.data.pipeline import DataConfig, StagedPipeline, SyntheticLMSource
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import (
+    compress_grads,
+    decompress_grads,
+    residual_zeros,
+    wire_bytes,
+)
+from repro.optim.schedule import cosine_schedule
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_adamw_converges_on_quadratic():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros((3,))}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        grads = {"w": params["w"] - target}
+        params, opt, _ = adamw_update(cfg, grads, opt, params)
+    np.testing.assert_allclose(params["w"], target, atol=0.05)
+
+
+def test_adamw_skips_nonfinite():
+    params = {"w": jnp.ones((4,))}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1)
+    bad = {"w": jnp.asarray([1.0, jnp.nan, 1.0, 1.0])}
+    new_params, new_opt, m = adamw_update(cfg, bad, opt, params)
+    np.testing.assert_array_equal(new_params["w"], params["w"])
+    assert int(new_opt["step"]) == 0
+    assert float(m["step_ok"]) == 0.0
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros((2,))}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=1.0, grad_clip=1e-3, weight_decay=0.0)
+    huge = {"w": jnp.full((2,), 1e9)}
+    new_params, _, m = adamw_update(cfg, huge, opt, params)
+    assert float(jnp.abs(new_params["w"]).max()) < 2.0
+    assert float(m["grad_norm"]) > 1e8
+
+
+def test_cosine_schedule_shape():
+    assert float(cosine_schedule(0, warmup=10, total=100)) == 0.0
+    assert float(cosine_schedule(10, warmup=10, total=100)) == pytest.approx(
+        1.0, abs=1e-3)
+    assert float(cosine_schedule(100, warmup=10, total=100)) == pytest.approx(
+        0.1, abs=1e-3)
+
+
+# ---- compression ----------------------------------------------------------
+
+def test_compression_error_feedback_unbiased():
+    g = {"w": jax.random.normal(KEY, (256,))}
+    res = residual_zeros(g)
+    acc = jnp.zeros((256,))
+    acc_ref = jnp.zeros((256,))
+    for i in range(50):
+        comp, res = compress_grads(g, res, jax.random.fold_in(KEY, i))
+        acc = acc + decompress_grads(comp)["w"]
+        acc_ref = acc_ref + g["w"]
+    # error feedback keeps the long-run average unbiased
+    np.testing.assert_allclose(acc / 50, acc_ref / 50, atol=0.02)
+
+
+def test_compression_wire_savings():
+    g = {"w": jax.random.normal(KEY, (1024,))}
+    comp, _ = compress_grads(g, residual_zeros(g), KEY)
+    raw = 1024 * 4
+    assert wire_bytes(jax.tree.map(lambda c: c.q, comp,
+                                   is_leaf=lambda x: hasattr(x, "q"))) < raw / 3
+
+
+# ---- data pipeline --------------------------------------------------------
+
+def _cfg():
+    return ModelConfig(name="t", family="dense", n_layers=1, d_model=8,
+                       vocab=64, n_heads=2, n_kv_heads=2, d_ff=16)
+
+
+@pytest.mark.parametrize("policy", [
+    TransferPolicy.user_level_polling(),
+    TransferPolicy.user_level_scheduled(),
+    TransferPolicy.kernel_level(),
+], ids=lambda p: p.tag)
+def test_pipeline_modes_same_data(policy):
+    """All three driver modes must deliver identical batches (determinism)."""
+    src = SyntheticLMSource(DataConfig(global_batch=4, seq_len=16, seed=7),
+                            _cfg())
+    pipe = StagedPipeline(src, policy)
+    batches = [next(pipe) for _ in range(3)]
+    pipe.close()
+    ref_src = SyntheticLMSource(DataConfig(global_batch=4, seq_len=16,
+                                           seed=7), _cfg())
+    for i, b in enumerate(batches):
+        np.testing.assert_array_equal(np.asarray(b["tokens"]),
+                                      ref_src.next_host_batch(i)["tokens"])
+
+
+def test_pipeline_labels_are_shifted_tokens():
+    src = SyntheticLMSource(DataConfig(global_batch=2, seq_len=8), _cfg())
+    b = src.next_host_batch(0)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+# ---- checkpointing --------------------------------------------------------
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    state = {"params": {"w": jnp.ones((4, 4), jnp.bfloat16) * 1.5,
+                        "b": jnp.arange(3, dtype=jnp.float32)},
+             "step": jnp.asarray(7)}
+    save_checkpoint(str(tmp_path), 7, state)
+    restored = restore_latest(str(tmp_path), state)
+    assert restored is not None
+    step, tree = restored
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(tree["params"]["w"], np.float32),
+                                  np.full((4, 4), 1.5))
+    assert tree["params"]["w"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_gc_keeps_n(tmp_path):
+    state = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), s, state, keep=2)
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+    assert len(files) == 2
+    step, _ = restore_latest(str(tmp_path), state)
+    assert step == 5
+
+
+def test_checkpoint_manager_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=2, async_write=True)
+    state = {"x": jnp.arange(4, dtype=jnp.float32)}
+    assert not mgr.maybe_save(1, state)
+    assert mgr.maybe_save(2, state)
+    mgr.wait()
+    restored = mgr.restore_latest(state)
+    assert restored is not None and restored[0] == 2
+
+
+def test_checkpoint_no_tmp_left_behind(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros((2,))})
+    assert not [f for f in os.listdir(tmp_path) if f.startswith(".tmp")]

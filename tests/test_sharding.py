@@ -1,0 +1,88 @@
+"""Sharding rules: every leaf's spec must be valid for the production mesh
+(divisibility), and a reduced end-to-end shard_map/jit run must agree with
+the single-device result."""
+
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+_RULES_CODE = r"""
+import jax, numpy as np
+from repro.configs.registry import ARCHS, get_config
+from repro.dist.sharding import (batch_sharding_tree, cache_sharding,
+                                 opt_state_sharding, param_sharding)
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import build_model, input_specs, cache_specs
+from repro.models.config import SHAPE_CELLS, cell_applicable
+from repro.optim import adamw_init
+
+mesh = make_production_mesh(multi_pod=@MP@)
+
+def check(sds_tree, shardings):
+    flat_s, _ = jax.tree_util.tree_flatten(sds_tree)
+    flat_sh = jax.tree_util.tree_leaves(shardings)
+    assert len(flat_s) == len(flat_sh)
+    for sds, sh in zip(flat_s, flat_sh):
+        spec = sh.spec
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            names = (names,) if isinstance(names, str) else names
+            size = int(np.prod([mesh.shape[n] for n in names]))
+            assert sds.shape[dim] % size == 0, (sds.shape, dim, spec)
+
+for arch in ARCHS:
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), "uint32"))
+    check(params, param_sharding(params, mesh))
+    opt = jax.eval_shape(adamw_init, params)
+    check(opt, opt_state_sharding(opt, mesh))
+    for cell in SHAPE_CELLS:
+        ok, _ = cell_applicable(cfg, cell)
+        if not ok:
+            continue
+        specs = input_specs(cfg, cell)
+        check(specs, batch_sharding_tree(specs, mesh))
+        if cell.kind == "decode":
+            c = cache_specs(cfg, cell.global_batch, cell.seq_len)
+            check(c, cache_sharding(c, mesh))
+    print(arch, "ok")
+"""
+
+_E2E_CODE = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.registry import smoke_config
+from repro.dist.sharding import batch_sharding_tree, param_sharding
+from repro.models.api import build_model
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = smoke_config("qwen2.5-3b").replace(dtype="float32")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+batch = {"tokens": jnp.ones((4, 32), jnp.int32),
+         "labels": jnp.ones((4, 32), jnp.int32)}
+ref, _ = jax.jit(model.loss)(params, batch)
+
+with mesh:
+    p_sh = param_sharding(params, mesh)
+    b_sh = batch_sharding_tree(batch, mesh)
+    params_s = jax.device_put(params, p_sh)
+    batch_s = jax.device_put(batch, b_sh)
+    out, _ = jax.jit(model.loss, in_shardings=(p_sh, b_sh))(params_s, batch_s)
+np.testing.assert_allclose(float(ref), float(out), rtol=1e-5)
+print("e2e sharded loss matches:", float(ref))
+"""
+
+
+@pytest.mark.parametrize("multi_pod", ["False", "True"])
+def test_sharding_rules_divisible_all_archs(multi_pod):
+    out = run_in_subprocess(_RULES_CODE.replace("@MP@", multi_pod), n_devices=512)
+    assert out.count("ok") == 10
+
+
+def test_sharded_loss_matches_single_device():
+    out = run_in_subprocess(_E2E_CODE, n_devices=8)
+    assert "matches" in out

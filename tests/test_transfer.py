@@ -1,0 +1,135 @@
+"""Transfer engine: the paper's policy matrix, property-tested."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cost_model import TransferCostModel
+from repro.core.scheduler import CooperativeScheduler
+from repro.core.transfer import (
+    Buffering,
+    BufferInFlightError,
+    Management,
+    Partitioning,
+    TransferEngine,
+    TransferPolicy,
+)
+
+ALL_POLICIES = [
+    TransferPolicy(m, b, p, block_bytes=1 << 14)
+    for m in Management for b in Buffering for p in Partitioning
+]
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES, ids=lambda p: p.tag)
+def test_roundtrip_identity(policy):
+    eng = TransferEngine(policy)
+    x = np.random.rand(5000).astype(np.float32)
+    dev = eng.tx(x)
+    back = eng.rx(dev)
+    flat = np.concatenate([np.asarray(b).reshape(-1) for b in back])
+    np.testing.assert_array_equal(flat, x)
+    assert eng.stats[0].direction == "tx"
+    assert eng.stats[0].nbytes == x.nbytes
+    assert eng.stats[1].direction == "rx"
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 200_000),
+       mi=st.integers(0, 2), bi=st.integers(0, 1), pi=st.integers(0, 1))
+def test_roundtrip_property(n, mi, bi, pi):
+    policy = TransferPolicy(list(Management)[mi], list(Buffering)[bi],
+                            list(Partitioning)[pi], block_bytes=1 << 12)
+    eng = TransferEngine(policy)
+    x = (np.arange(n) % 251).astype(np.float32)
+    back = eng.rx(eng.tx(x))
+    flat = np.concatenate([np.asarray(b).reshape(-1) for b in back])
+    np.testing.assert_array_equal(flat, x)
+
+
+def test_chunk_count_matches_policy():
+    policy = TransferPolicy(Management.POLLING, Buffering.SINGLE,
+                            Partitioning.BLOCKS, block_bytes=4096)
+    eng = TransferEngine(policy)
+    x = np.zeros(4096, np.float32)  # 16 KiB -> 4 chunks of 4 KiB
+    eng.tx(x)
+    assert eng.stats[0].n_chunks == 4
+
+
+def test_unique_never_splits():
+    eng = TransferEngine(TransferPolicy.user_level_polling())
+    eng.tx(np.zeros(1 << 20, np.uint8))
+    assert eng.stats[0].n_chunks == 1
+
+
+def test_async_ticket_and_callback():
+    eng = TransferEngine(TransferPolicy.kernel_level())
+    hits = []
+    t = eng.tx_async(np.ones(100, np.float32), callback=hits.append)
+    out = t.wait()
+    assert t.complete and len(out) == 1 and len(hits) == 1
+
+
+def test_async_requires_interrupt():
+    eng = TransferEngine(TransferPolicy.user_level_polling())
+    with pytest.raises(ValueError):
+        eng.tx_async(np.ones(4, np.float32))
+
+
+def test_scheduler_interleaves_background():
+    sched = CooperativeScheduler(background_budget_s=1e-4)
+    ran = {"bg": 0}
+    sched.register_background(lambda: ran.__setitem__("bg", ran["bg"] + 1))
+    eng = TransferEngine(TransferPolicy.user_level_scheduled(),
+                         scheduler=sched)
+    eng.tx(np.zeros(1000, np.float32))
+    assert ran["bg"] > 0  # the paper's 'PS keeps collecting frames'
+    assert sched.stats.transfer_tasks_run >= 1
+
+
+# ---- cost model -----------------------------------------------------------
+
+def test_cost_model_fit_recovers_params():
+    m_true = TransferCostModel(t0_s=8e-6, bw_Bps=2.5e9)
+    n = np.array([64, 1 << 12, 1 << 16, 1 << 20, 6 << 20], float)
+    t = np.array([m_true.time_unique(int(x)) for x in n])
+    m = TransferCostModel.fit(n, t)
+    assert abs(m.t0_s - 8e-6) / 8e-6 < 0.05
+    assert abs(m.bw_Bps - 2.5e9) / 2.5e9 < 0.05
+
+
+def test_crossover_matches_paper_shape():
+    """Kernel driver: higher t0, similar/better BW -> wins only for large n
+    ('longer enough packets')."""
+    user = TransferCostModel(t0_s=2e-6, bw_Bps=2e9)
+    kern = TransferCostModel(t0_s=30e-6, bw_Bps=3e9)
+    n_star = TransferCostModel.crossover_bytes(user, kern)
+    assert 1e4 < n_star < 1e6
+    assert user.time_unique(1 << 10) < kern.time_unique(1 << 10)
+    assert kern.time_unique(8 << 20) < user.time_unique(8 << 20)
+
+
+@settings(max_examples=30, deadline=None)
+@given(nbytes=st.integers(1 << 10, 64 << 20),
+       block=st.integers(1 << 12, 1 << 22))
+def test_double_buffer_never_slower(nbytes, block):
+    m = TransferCostModel(t0_s=10e-6, bw_Bps=3e9)
+    t_single = m.time_blocks(nbytes, block, Buffering.SINGLE)
+    t_double = m.time_blocks(nbytes, block, Buffering.DOUBLE)
+    assert t_double <= t_single + 1e-12
+
+
+def test_optimal_block_keeps_pipe_full():
+    m = TransferCostModel(t0_s=10e-6, bw_Bps=3e9)
+    c = m.optimal_block_bytes(16 << 20)
+    assert c >= int(10e-6 * 3e9) * 0.9  # ~t0*BW
+
+
+def test_buffer_inflight_protection():
+    """Single-buffer + non-INTERRUPT re-use while busy must raise (the
+    kernel driver's memory-protection role)."""
+    eng = TransferEngine(TransferPolicy.user_level_polling())
+    eng._buffers_busy[0] = __import__("threading").Event()  # busy, never set
+    with pytest.raises(BufferInFlightError):
+        eng.tx(np.zeros(8, np.float32))
