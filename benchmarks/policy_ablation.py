@@ -1,5 +1,7 @@
 """Buffering x partitioning ablation (the paper's single/double buffer and
-Unique/Blocks comparison) at three payload sizes, INTERRUPT management."""
+Unique/Blocks comparison) at three payload sizes, INTERRUPT management —
+extended with descriptor-ring depths 3/4/8 (the generalisation of
+single/double to an N-deep scatter-gather ring)."""
 
 from __future__ import annotations
 
@@ -15,27 +17,42 @@ from repro.core.transfer import (
 from repro.utils.timing import bench
 
 SIZES = [64 << 10, 1 << 20, 6 << 20]
+RING_DEPTHS = [3, 4, 8]
+
+
+def _measure(x: np.ndarray, policy: TransferPolicy, iters: int) -> float:
+    def one(x=x, policy=policy):
+        eng = TransferEngine(policy)
+        eng.rx(eng.tx(x))
+        eng.close()
+
+    return bench(one, warmup=2, iters=iters).median_s
 
 
 def run(iters: int = 5) -> list[dict]:
     rows = []
     for nbytes in SIZES:
         x = np.zeros(nbytes // 4, np.float32)
-        for buf in Buffering:
+        for buf in (Buffering.SINGLE, Buffering.DOUBLE):
             for part in Partitioning:
                 policy = TransferPolicy(Management.INTERRUPT, buf, part,
                                         block_bytes=256 << 10)
-
-                def one(x=x, policy=policy):
-                    eng = TransferEngine(policy)
-                    eng.rx(eng.tx(x))
-
-                t = bench(one, warmup=2, iters=iters)
                 rows.append({
                     "bench": "policy_ablation", "bytes": x.nbytes,
                     "buffering": buf.value, "partitioning": part.value,
-                    "roundtrip_ms": round(t.median_s * 1e3, 4),
+                    "depth": policy.depth,
+                    "roundtrip_ms": round(_measure(x, policy, iters) * 1e3, 4),
                 })
+        for depth in RING_DEPTHS:
+            policy = TransferPolicy(Management.INTERRUPT, Buffering.RING,
+                                    Partitioning.BLOCKS,
+                                    block_bytes=256 << 10, ring_depth=depth)
+            rows.append({
+                "bench": "policy_ablation", "bytes": x.nbytes,
+                "buffering": Buffering.RING.value,
+                "partitioning": Partitioning.BLOCKS.value, "depth": depth,
+                "roundtrip_ms": round(_measure(x, policy, iters) * 1e3, 4),
+            })
     return rows
 
 

@@ -62,6 +62,10 @@ def main() -> None:
         for row in rows:
             print(f"# {row}")
         print(f"{name},{us:.1f},{_derived(rows[0]) if rows else ''}")
+        if name == "streaming_layers":
+            doc = streaming_layers.write_bench_json(rows)
+            print(f"# wrote BENCH_transfer.json (ring/seed frames_per_s "
+                  f"ratio {doc['frames_per_s_ratio_ring_over_seed']})")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,14 @@
 """Per-layer weight-streaming benchmark (the NullHop execution model on an
 LM): serve one decode step while layer k+1's params stream host->device
-under each policy. Measures the overlap gain of INTERRUPT+DOUBLE vs POLLING
-— the paper's central claim at LM scale."""
+under each policy. Measures the overlap gain of the cached-layout descriptor
+ring (``staged-ring``) against the seed per-frame pack path (``seed-pack``)
+— the paper's central claim at LM scale. Emits the old-vs-new comparison to
+``BENCH_transfer.json`` so the perf trajectory is tracked across PRs."""
 
 from __future__ import annotations
+
+import json
+import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +22,8 @@ from repro.core.transfer import (
     TransferEngine,
     TransferPolicy,
 )
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_transfer.json"
 
 
 def _mlp_layers(n_layers: int, d: int, f: int, key):
@@ -39,39 +46,90 @@ def _mlp_layers(n_layers: int, d: int, f: int, key):
     return layers
 
 
-def run(n_layers: int = 8, d: int = 1024, f: int = 4096) -> list[dict]:
+# (row name, path, policy, staged) — seed-pack rows run the per-frame
+# np.concatenate path the repo shipped with; staged-ring rows run the
+# cached-StagedLayout descriptor-ring path.
+def _variants():
+    return [
+        ("polling-unique", "seed-pack",
+         TransferPolicy.user_level_polling(), False),
+        ("interrupt-single", "seed-pack",
+         TransferPolicy.kernel_level(), False),
+        ("interrupt-double-prefetch", "seed-pack", TransferPolicy(
+            Management.INTERRUPT, Buffering.DOUBLE, Partitioning.UNIQUE),
+         False),
+        ("interrupt-double-staged", "staged-ring", TransferPolicy(
+            Management.INTERRUPT, Buffering.DOUBLE, Partitioning.UNIQUE),
+         True),
+        ("interrupt-ring4-staged", "staged-ring", TransferPolicy(
+            Management.INTERRUPT, Buffering.RING, Partitioning.UNIQUE,
+            ring_depth=4), True),
+    ]
+
+
+def run(n_layers: int = 8, d: int = 1024, f: int = 4096,
+        repeats: int = 3) -> list[dict]:
     key = jax.random.PRNGKey(0)
     layers = _mlp_layers(n_layers, d, f, key)
     x = np.asarray(jax.random.normal(key, (8, d)), np.float32)
     rows = []
-    for name, policy in [
-        ("polling-unique", TransferPolicy.user_level_polling()),
-        ("interrupt-single", TransferPolicy.kernel_level()),
-        ("interrupt-double-prefetch", TransferPolicy(
-            Management.INTERRUPT, Buffering.DOUBLE, Partitioning.UNIQUE)),
-    ]:
-        ex = HostStreamingExecutor(TransferEngine(policy))
+    for name, path, policy, staged in _variants():
+        engine = TransferEngine(policy)
+        ex = HostStreamingExecutor(engine, staged=staged)
         ex.run(layers, x)  # warmup
         best = None
-        for _ in range(3):
+        for _ in range(repeats):
             _, timing = ex.run(layers, x)
             if best is None or timing.frame_s < best.frame_s:
                 best = timing
         tx = sum(l.tx_s for l in best.layers)
+        rx = sum(l.rx_s for l in best.layers)
         comp = sum(l.compute_s for l in best.layers)
         rows.append({
-            "bench": "streaming_layers", "policy": name,
-            "frame_ms": round(best.frame_s * 1e3, 2),
-            "tx_ms": round(tx * 1e3, 2),
-            "compute_ms": round(comp * 1e3, 2),
+            "bench": "streaming_layers", "policy": name, "path": path,
+            "frame_ms": round(best.frame_s * 1e3, 3),
+            "frames_per_s": round(1.0 / max(best.frame_s, 1e-9), 2),
+            "tx_ms": round(tx * 1e3, 3),
+            "rx_ms": round(rx * 1e3, 3),
+            "compute_ms": round(comp * 1e3, 3),
+            "tx_us_per_byte": round(best.tx_us_per_byte, 6),
             "tx_hidden_frac": round(max(0.0, 1 - tx / max(best.frame_s
                                                           - comp, 1e-9))
                                     if best.frame_s > comp else 1.0, 3),
             "bytes_per_layer": best.layers[1].tx_bytes,
         })
+        engine.close()
     return rows
 
 
+def write_bench_json(rows: list[dict] | None = None,
+                     path: pathlib.Path | str = BENCH_JSON) -> dict:
+    """Write the old-vs-new transfer comparison to BENCH_transfer.json."""
+    rows = rows if rows is not None else run()
+    seed = min((r for r in rows if r["path"] == "seed-pack"
+                and r["policy"].startswith("interrupt")),
+               key=lambda r: r["frame_ms"])
+    ring = min((r for r in rows if r["path"] == "staged-ring"),
+               key=lambda r: r["frame_ms"])
+    doc = {
+        "bench": "streaming_layers",
+        "payload_bytes_per_layer": ring["bytes_per_layer"],
+        "rows": rows,
+        "seed_pack_best": seed,
+        "staged_ring_best": ring,
+        "tx_us_per_byte_ratio_seed_over_ring": round(
+            seed["tx_us_per_byte"] / max(ring["tx_us_per_byte"], 1e-12), 3),
+        "frames_per_s_ratio_ring_over_seed": round(
+            ring["frames_per_s"] / max(seed["frames_per_s"], 1e-12), 3),
+    }
+    pathlib.Path(path).write_text(json.dumps(doc, indent=2) + "\n")
+    return doc
+
+
 if __name__ == "__main__":
-    for r in run():
+    bench_rows = run()
+    for r in bench_rows:
         print(r)
+    doc = write_bench_json(bench_rows)
+    print(f"wrote {BENCH_JSON}: ring/seed frames_per_s ratio "
+          f"{doc['frames_per_s_ratio_ring_over_seed']}")

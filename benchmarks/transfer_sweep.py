@@ -1,9 +1,14 @@
 """Fig 4/5 reproduction: transfer time vs payload (8 B -> 6 MB) for the
-three driver modes. Measured on this machine's host<->device path; the
-quantities compared are the ones the paper compares (fixed overhead vs
-asymptotic bandwidth, per-byte crossover)."""
+three driver modes plus the depth-4 descriptor ring. Measured on this
+machine's host<->device path; the quantities compared are the ones the paper
+compares (fixed overhead vs asymptotic bandwidth, per-byte crossover).
+
+``--quick`` runs a three-size smoke sweep (used by scripts/ci.sh so the
+bench can't silently rot)."""
 
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -12,29 +17,35 @@ from repro.core.transfer import TransferEngine, TransferPolicy
 from repro.utils.timing import bench
 
 SIZES = [8, 64, 512, 4 << 10, 32 << 10, 256 << 10, 1 << 20, 6 << 20]
+QUICK_SIZES = [4 << 10, 256 << 10, 1 << 20]
 
 DRIVERS = [
     ("user_level", TransferPolicy.user_level_polling),
     ("user_level_scheduled", TransferPolicy.user_level_scheduled),
     ("kernel_level", TransferPolicy.kernel_level),
+    ("kernel_level_ring4", lambda: TransferPolicy.kernel_level_ring(
+        4, block_bytes=256 << 10)),
 ]
 
 
-def run(iters: int = 5) -> list[dict]:
+def run(iters: int = 5, quick: bool = False) -> list[dict]:
+    sizes = QUICK_SIZES if quick else SIZES
     rows = []
     fits = {}
     for name, mk in DRIVERS:
         samples_n, samples_t = [], []
-        for nbytes in SIZES:
+        for nbytes in sizes:
             x = np.zeros(max(nbytes // 4, 2), np.float32)
 
             def one(x=x, mk=mk):
                 eng = TransferEngine(mk())
                 dev = eng.tx(x)
                 eng.rx(dev)
+                eng.close()
                 return eng
 
-            t = bench(one, warmup=2, iters=iters)
+            t = bench(one, warmup=1 if quick else 2,
+                      iters=max(2, iters // 2) if quick else iters)
             # split tx/rx from a fresh engine's stats
             eng = one()
             tx_s = eng.stats[0].wall_s
@@ -59,10 +70,16 @@ def run(iters: int = 5) -> list[dict]:
         "user_gbps": fits["user_level"].bw_Bps / 1e9,
         "kernel_t0_us": fits["kernel_level"].t0_s * 1e6,
         "kernel_gbps": fits["kernel_level"].bw_Bps / 1e9,
+        "ring_gbps": fits["kernel_level_ring4"].bw_Bps / 1e9,
     })
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="3-size smoke sweep for CI")
+    ap.add_argument("--iters", type=int, default=5)
+    args = ap.parse_args()
+    for r in run(iters=args.iters, quick=args.quick):
         print(r)

@@ -3,9 +3,13 @@ contending for the host memory system. The paper's observation: TX gets
 slight priority; unbalanced streams can block a single-buffered system.
 
 We run a loop-back pipeline (tx chunk -> device -> rx chunk) with both
-directions active and measure per-direction throughput under each policy."""
+directions active and measure per-direction throughput under each policy.
+The ring variant additionally overlaps the RX of round k with the TX of
+round k+1 via ``rx_async`` (three-way overlap minus the compute leg)."""
 
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -22,28 +26,41 @@ def run(total_mb: int = 32) -> list[dict]:
     rows = []
     payload = np.zeros((1 << 20) // 4, np.float32)  # 1 MiB chunks
     n = total_mb
-    for name, policy in [
-        ("polling", TransferPolicy.user_level_polling()),
+    for name, policy, overlap_rx in [
+        ("polling", TransferPolicy.user_level_polling(), False),
         ("interrupt-double-blocks", TransferPolicy(
             Management.INTERRUPT, Buffering.DOUBLE, Partitioning.BLOCKS,
-            block_bytes=256 << 10)),
+            block_bytes=256 << 10), False),
+        ("interrupt-ring4-overlapped", TransferPolicy.kernel_level_ring(
+            4, block_bytes=256 << 10), True),
     ]:
         eng = TransferEngine(policy)
-        # loop-back: every chunk goes out and comes straight back
-        import time
         t0 = time.perf_counter()
-        for _ in range(n):
-            dev = eng.tx(payload)
-            eng.rx(dev)
+        if overlap_rx:
+            # loop-back with RX on a completion worker: round k's RX drains
+            # while round k+1's TX streams (balanced TX/RX).
+            pending = None
+            for _ in range(n):
+                dev = eng.tx(payload)
+                if pending is not None:
+                    pending.wait()
+                pending = eng.rx_async(dev)
+            pending.wait()
+        else:
+            for _ in range(n):
+                dev = eng.tx(payload)
+                eng.rx(dev)
         wall = time.perf_counter() - t0
         s = eng.summary()
         rows.append({
             "bench": "txrx_balance", "driver": name,
             "total_mb": n, "wall_s": round(wall, 4),
+            "mb_per_s": round(n / max(wall, 1e-9), 2),
             "tx_gbps": round(s["tx"]["gbps"], 3),
             "rx_gbps": round(s["rx"]["gbps"], 3),
             "tx_faster_than_rx": bool(s["tx"]["gbps"] > s["rx"]["gbps"]),
         })
+        eng.close()
     return rows
 
 

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verification + a transfer-bench smoke run, so the benchmarks can't
+# silently rot. Run from the repo root:  bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: transfer_sweep --quick =="
+python benchmarks/transfer_sweep.py --quick --iters 2
+
+echo "CI OK"

@@ -34,12 +34,22 @@ class NullHopResult:
 
 
 class NullHopExecutor:
-    """Executes a RoShamBoCNN per-layer under a transfer policy."""
+    """Executes a RoShamBoCNN per-layer under a transfer policy.
 
-    def __init__(self, cnn: RoShamBoCNN, policy: TransferPolicy):
+    ``staged=True`` (default) streams through the engine's cached
+    :class:`~repro.core.transfer.StagedLayout` ring path — layer weights are
+    laid out once and re-staged copy-free on every subsequent frame;
+    ``staged=False`` keeps the seed per-frame pack path for comparison."""
+
+    def __init__(self, cnn: RoShamBoCNN, policy: TransferPolicy, *,
+                 staged: bool = True):
         self.cnn = cnn
         self.policy = policy
+        self.staged = staged
         self.engine = TransferEngine(policy)
+
+    def close(self) -> None:
+        self.engine.close()
 
     def run_frame(self, params: dict, frame: np.ndarray) -> NullHopResult:
         """frame: [B, H, W, C]. Per-layer streamed execution + final FC."""
@@ -60,7 +70,7 @@ class NullHopExecutor:
             layers.append((spec.name, [np.asarray(p["w"]), np.asarray(p["b"])],
                            make_apply(spec)))
 
-        executor = HostStreamingExecutor(self.engine)
+        executor = HostStreamingExecutor(self.engine, staged=self.staged)
         out_host, timing = executor.run(layers, np.asarray(frame))
 
         sparsity = []  # recompute per-layer zero fractions (oracle pass)

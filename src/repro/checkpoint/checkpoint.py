@@ -4,7 +4,8 @@ Format: one .npz per checkpoint (flattened pytree paths -> arrays) plus a
 small JSON manifest; writes go to a temp name and rename atomically so a
 crash mid-write never corrupts the latest checkpoint. RX (device->host) of
 the state is itself a policy-driven transfer: the async mode stages the
-device_get + write on the completion thread (the kernel-driver pattern) so
+device_get + write on a private completion worker (the kernel-driver
+pattern) so
 training continues during the write — the paper's 'free the PS for other
 tasks' argument, applied to checkpointing.
 
@@ -25,7 +26,7 @@ from typing import Any
 import jax
 import numpy as np
 
-from repro.core.transfer import Ticket, _completion_thread
+from repro.core.transfer import Ticket, _CompletionPool
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -107,9 +108,13 @@ class CheckpointManager:
     async_write: bool = True
     _pending: Ticket | None = None
     _lock: threading.Lock = None  # type: ignore[assignment]
+    _pool: _CompletionPool = None  # type: ignore[assignment]
 
     def __post_init__(self):
         self._lock = threading.Lock()
+        # one writer worker per manager: checkpoint writes never contend
+        # with transfer engines' completion pools
+        self._pool = _CompletionPool(workers=1)
 
     def maybe_save(self, step: int, state: Any) -> bool:
         if step == 0 or step % self.every:
@@ -121,7 +126,7 @@ class CheckpointManager:
         # snapshot to host NOW (device buffers may be donated next step),
         # write on the completion thread.
         flat_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
-        done, out = _completion_thread().submit(
+        done, out = self._pool.submit(
             lambda: save_checkpoint(self.directory, step, flat_state,
                                     keep=self.keep))
         self._pending = Ticket(done, out)

@@ -12,8 +12,11 @@ partitioning (unique / blocks) — at every memory boundary of a TPU system:
 
 from repro.core.transfer import (  # noqa: F401
     Buffering,
+    BufferInFlightError,
+    LayoutCache,
     Management,
     Partitioning,
+    StagedLayout,
     TransferPolicy,
     TransferEngine,
     TransferStats,

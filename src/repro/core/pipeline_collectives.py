@@ -26,9 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-
-def _axis_size(axis_name: str) -> int:
-    return lax.axis_size(axis_name)
+from repro.utils.jax_compat import axis_size as _axis_size  # noqa: F401
+from repro.utils.jax_compat import pvary
 
 
 def ring_all_gather(x: jax.Array, axis_name: str, *, axis: int = 0) -> jax.Array:
@@ -104,7 +103,7 @@ def overlapped_matmul_ag(
     idx = lax.axis_index(axis_name)
     m_local = x.shape[0]
     out = jnp.zeros((n * m_local,) + (w.shape[-1],), _dot_dtype(x, w))
-    out = lax.pvary(out, (axis_name,))  # mark carry as axis-varying for scan
+    out = pvary(out, (axis_name,))  # mark carry as axis-varying for scan
     perm = [(i, (i + 1) % n) for i in range(n)]
 
     def step(carry, s):
@@ -153,7 +152,7 @@ def overlapped_matmul_rs(
         acc = acc + chunk_dot(c).astype(acc.dtype)
         return lax.ppermute(acc, axis_name, perm), None
 
-    acc = lax.pvary(jnp.zeros((mc, w.shape[-1]), _dot_dtype(x, w)), (axis_name,))
+    acc = pvary(jnp.zeros((mc, w.shape[-1]), _dot_dtype(x, w)), (axis_name,))
     acc, _ = lax.scan(step, acc, jnp.arange(n - 1))
     return (acc + chunk_dot(idx)).astype(_dot_dtype(x, w))
 

@@ -1,4 +1,4 @@
-"""Per-layer streaming executor — the NullHop execution model, generalised.
+"""Per-layer streaming executor — the NullHop execution model on a ring.
 
 NullHop processes a multi-layer CNN *one layer at a time*: the host streams
 the layer's parameters (TX), then the input feature maps; the MAC array
@@ -9,10 +9,23 @@ transfer policy.
 
 Here the same execution model serves models whose parameters exceed device
 memory (or that we deliberately execute layer-resident to minimise HBM
-footprint): layer k's weights are staged host->device while layer k-1
-computes. With ``TransferPolicy.INTERRUPT`` + DOUBLE buffering the weight
-stream hides behind compute exactly as the paper's double-buffered blocks
-mode hides staging behind DMA.
+footprint). Under an INTERRUPT policy with ring depth >= 2 the executor runs
+**three-way overlap** — the paper's balanced-TX/RX goal:
+
+    TX(layer k+1)  ─┐
+    compute(k)      ├─ concurrent (per-engine completion workers + main thread)
+    RX(layer k-1)  ─┘
+
+Layer k+1's parameters are packed into their cached :class:`StagedLayout`
+staging buffer and stream host->device while layer k computes; layer k-1's
+output feature map streams device->host (``rx_async``) at the same time.
+Staging layouts are resolved once per layer identity through the engine's
+:class:`LayoutCache`, so steady-state frames do zero pack allocation — and
+zero pack *copies* when the host params are unchanged (inference weight
+streaming), the ZynqNet one-time-layout lesson.
+
+The seed's per-frame pack path (``np.concatenate`` per layer per frame,
+depth-2 max) is kept behind ``staged=False`` as the benchmark baseline.
 
 Two implementations:
 
@@ -33,15 +46,15 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.transfer import (
-    Buffering,
     Management,
+    StagedLayout,
     Ticket,
     TransferEngine,
-    TransferPolicy,
+    _bitcast_from_bytes,
+    reassemble_chunks,
 )
 
 
@@ -84,16 +97,22 @@ class FrameTiming:
 
 class HostStreamingExecutor:
     """Run a sequence of layers, staging each layer's params host->device
-    under the engine's policy, optionally prefetching the next layer.
+    under the engine's policy, with ring-depth-controlled prefetch.
 
     ``layers`` is a list of (name, param_host_arrays, apply_fn) where
     ``apply_fn(params_device_list, x)`` returns the layer output. With an
-    INTERRUPT policy the next layer's TX is issued *before* the current
-    layer's compute (double-buffer prefetch), reproducing the paper's
-    overlap; with POLLING everything serialises."""
+    INTERRUPT policy of ring depth >= 2 the executor overlaps layer k+1's TX
+    *and* layer k-1's RX with layer k's compute; with POLLING everything
+    serialises.
 
-    def __init__(self, engine: TransferEngine):
+    ``staged=False`` selects the legacy per-frame pack path (re-concatenates
+    params every frame) — kept only as the measured baseline for
+    ``BENCH_transfer.json``.
+    """
+
+    def __init__(self, engine: TransferEngine, *, staged: bool = True):
         self.engine = engine
+        self.staged = staged
 
     def run(
         self,
@@ -101,28 +120,103 @@ class HostStreamingExecutor:
         x: np.ndarray,
     ) -> tuple[np.ndarray, FrameTiming]:
         policy = self.engine.policy
-        prefetch = (
-            policy.management is Management.INTERRUPT
-            and policy.buffering is Buffering.DOUBLE
+        overlapped = (
+            policy.management is Management.INTERRUPT and policy.depth >= 2
         )
-        timing = FrameTiming()
+        if overlapped and self.staged:
+            return self._run_overlapped(layers, x)
+        return self._run_basic(layers, x, prefetch=overlapped)
 
-        # TX the input once (first layer's feature map)
+    # -- shared input staging ----------------------------------------------
+    def _tx_input(self, x: np.ndarray) -> tuple[jax.Array, float, int]:
         t0 = time.perf_counter()
         xa = np.asarray(x)
         dev_chunks = self.engine.tx(xa)
-        flat = (dev_chunks[0] if len(dev_chunks) == 1
-                else jnp.concatenate([c.reshape(-1) for c in dev_chunks]))
-        x_dev = flat.reshape(xa.shape)  # tx() streams a flat view
-        input_tx_s = time.perf_counter() - t0
+        x_dev = reassemble_chunks(dev_chunks).reshape(xa.shape)
+        return x_dev, time.perf_counter() - t0, xa.nbytes
+
+    # -- new path: cached layouts + three-way overlap -----------------------
+    def _run_overlapped(self, layers, x) -> tuple[np.ndarray, FrameTiming]:
+        engine = self.engine
+        policy = engine.policy
+        timing = FrameTiming()
+        x_dev, input_tx_s, input_bytes = self._tx_input(x)
+
+        layouts: list[StagedLayout] = [
+            engine.layouts.get((i, name), params)
+            for i, (name, params, _) in enumerate(layers)
+        ]
+
+        # TX window: keep up to depth-1 layer streams in flight ahead of the
+        # layer being computed (the descriptor-ring in-flight rule; slot
+        # `depth` is reserved for the concurrent RX stream).
+        tx_window = max(1, policy.depth - 1)
+        pending_tx: list[Ticket] = []
+        next_tx = 0
+
+        def issue_tx() -> None:
+            nonlocal next_tx
+            while next_tx < len(layers) and len(pending_tx) < tx_window:
+                payload = layouts[next_tx].pack(layers[next_tx][1])
+                pending_tx.append(
+                    engine.tx_async(payload, layout=layouts[next_tx]))
+                next_tx += 1
+
+        issue_tx()
+
+        pending_rx: tuple[int, Ticket] | None = None  # (layer idx, ticket)
+        host_out: np.ndarray | None = None
+
+        def drain_rx() -> None:
+            nonlocal pending_rx, host_out
+            if pending_rx is None:
+                return
+            j, ticket = pending_rx
+            t0 = time.perf_counter()
+            host_out = ticket.wait()[0]
+            timing.layers[j].rx_s += time.perf_counter() - t0
+            pending_rx = None
+
+        for i, (name, params_host, apply_fn) in enumerate(layers):
+            # --- TX: wait for this layer's in-flight params, then refill the
+            # ring window (layers i+1 .. i+depth-1 stream during compute)
+            t0 = time.perf_counter()
+            chunks = pending_tx.pop(0).wait()
+            params_dev = layouts[i].unpack(chunks)
+            issue_tx()
+            tx_s = time.perf_counter() - t0
+            tx_bytes = layouts[i].nbytes
+            if i == 0:
+                tx_s += input_tx_s
+                tx_bytes += input_bytes
+
+            # --- compute (layer k-1's RX and layer k+1's TX are in flight)
+            t0 = time.perf_counter()
+            y = apply_fn(params_dev, x_dev)
+            y.block_until_ready()
+            compute_s = time.perf_counter() - t0
+
+            rx_bytes = int(y.size) * y.dtype.itemsize
+            timing.layers.append(
+                LayerTiming(name, tx_s, compute_s, 0.0, tx_bytes, rx_bytes)
+            )
+            # --- RX: retire layer k-1's ticket, launch layer k's
+            drain_rx()
+            pending_rx = (i, engine.rx_async([y]))
+            x_dev = y  # next layer consumes device-resident output
+        drain_rx()
+        return host_out, timing
+
+    # -- legacy/basic path: per-frame pack, serial (or depth-2 TX prefetch) --
+    def _run_basic(self, layers, x, *, prefetch: bool) -> tuple[np.ndarray, FrameTiming]:
+        timing = FrameTiming()
+        x_dev, input_tx_s, input_bytes = self._tx_input(x)
 
         pending: Ticket | None = None
-        pending_params: list | None = None
         if prefetch and layers:
-            name0, params0, _ = layers[0]
-            stacked = _pack(params0)
-            pending = self.engine.tx_async(stacked)
+            pending = self.engine.tx_async(_pack(layers[0][1]))
 
+        host_out: np.ndarray | None = None
         for i, (name, params_host, apply_fn) in enumerate(layers):
             # --- TX params for this layer
             t0 = time.perf_counter()
@@ -136,10 +230,10 @@ class HostStreamingExecutor:
                 chunks = self.engine.tx(_pack(params_host))
                 params_dev = _unpack(chunks, params_host)
             tx_s = time.perf_counter() - t0
-            tx_bytes = sum(p.nbytes for p in params_host)
+            tx_bytes = sum(np.asarray(p).nbytes for p in params_host)
             if i == 0:
                 tx_s += input_tx_s
-                tx_bytes += np.asarray(x).nbytes
+                tx_bytes += input_bytes
 
             # --- compute
             t0 = time.perf_counter()
@@ -160,28 +254,24 @@ class HostStreamingExecutor:
 
 
 def _pack(arrays: list[np.ndarray]) -> np.ndarray:
-    """Flatten a param list into one contiguous staging payload (the paper
-    sends each layer's kernels as one stream)."""
+    """Seed-path pack: flatten a param list into one freshly-allocated
+    contiguous payload, every call. Superseded by
+    :meth:`repro.core.transfer.StagedLayout.pack`; kept as the measured
+    baseline."""
     if not arrays:
         return np.zeros((0,), np.float32)
     return np.concatenate([np.asarray(a).reshape(-1).view(np.uint8) for a in arrays])
 
 
 def _unpack(chunks: list[jax.Array], ref: list[np.ndarray]) -> list[jax.Array]:
-    flat = chunks[0] if len(chunks) == 1 else jnp.concatenate(
-        [c.reshape(-1) for c in chunks]
-    )
+    """Seed-path unpack: re-derives offsets from ``ref`` on every call (see
+    :meth:`StagedLayout.unpack` for the cached equivalent)."""
+    flat = reassemble_chunks(chunks)
     out, off = [], 0
     for a in ref:
         a = np.asarray(a)
-        out.append(
-            jax.lax.bitcast_convert_type(
-                flat[off : off + a.nbytes].reshape(a.shape + (a.dtype.itemsize,)),
-                a.dtype,
-            ).reshape(a.shape)
-            if a.dtype.itemsize > 1
-            else flat[off : off + a.nbytes].reshape(a.shape)
-        )
+        out.append(_bitcast_from_bytes(flat[off : off + a.nbytes], a.shape,
+                                       np.dtype(a.dtype)))
         off += a.nbytes
     return out
 

@@ -1,4 +1,4 @@
-"""Host<->device transfer engine with the paper's policy matrix.
+"""Host<->device descriptor-ring transfer engine with the paper's policy matrix.
 
 The paper evaluates how the *software policy* controlling DMA between the
 processing system (PS) and programmable logic (PL) determines delivered
@@ -12,17 +12,38 @@ bandwidth. The three managements map onto JAX host<->device semantics:
   cooperative scheduler which interleaves them with other registered tasks
   (sensor collection / normalization in the paper; data-prep and metric tasks
   here). Slightly higher latency, no dead-lock waits.
-- ``INTERRUPT`` — kernel-level interrupt driver: transfers run on a background
-  completion thread; the caller gets a ticket and is *notified* (callback /
-  event) on completion. Highest fixed overhead per transfer, best overlap,
-  memory-safety enforced (a buffer cannot be re-staged before completion —
-  the engine raises, mirroring the kernel driver's protection role).
+- ``INTERRUPT`` — kernel-level interrupt driver: transfers run on a
+  *per-engine* worker pool; the caller gets a ticket and is *notified*
+  (callback / event) on completion. Highest fixed overhead per transfer,
+  best overlap, memory-safety enforced (a staging slot cannot be re-staged
+  before completion — the engine raises, mirroring the kernel driver's
+  protection role).
 
-Buffering: ``SINGLE`` stages through one pinned buffer; ``DOUBLE`` alternates
-two, so chunk *k+1* is staged while chunk *k* is in flight.
+Descriptor ring
+---------------
+Buffering is a *ring* of N staging slots (the scatter-gather descriptor ring
+of the Xilinx AXI-DMA driver): chunk k+N can only be staged once chunk k's
+descriptor completed. ``Buffering.SINGLE`` and ``Buffering.DOUBLE`` are the
+degenerate rings of depth 1 and 2; ``Buffering.RING`` plus
+``TransferPolicy.ring_depth`` generalises to any depth, so the in-flight
+window (and therefore the achievable TX/compute/RX overlap) is a tunable
+policy knob instead of a hard-coded pair of buffers.
+
+Staged layouts
+--------------
+:class:`StagedLayout` precomputes the pack plan (offset / shape / dtype per
+array) for a fixed set of host arrays ONCE and owns a preallocated staging
+buffer that is reused for every subsequent frame: per-frame cost is at most
+one memcpy into the staging buffer — and zero when the arrays are unchanged
+since the last pack (the steady state of inference weight streaming). The
+per-engine :class:`LayoutCache` keys layouts by caller-chosen identity
+(e.g. layer name), so ``pack``/``unpack`` never re-derive offsets or
+re-allocate across frames. This is the ZynqNet lesson: staging *layout* is a
+one-time cost, not a per-frame one.
 
 Partitioning: ``UNIQUE`` sends the payload in one transfer; ``BLOCKS`` splits
-it into ``block_bytes`` chunks (only BLOCKS lets DOUBLE buffering overlap).
+it into ``block_bytes`` chunks (only BLOCKS lets a depth>=2 ring overlap
+within a single logical transfer).
 
 Everything here is *measured*, not simulated: on this container the device is
 CPU, but the staging/copy/dispatch structure (and therefore the relative
@@ -37,7 +58,7 @@ import math
 import queue
 import threading
 import time
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Any, Callable, Sequence
 
 import jax
@@ -53,6 +74,7 @@ class Management(enum.Enum):
 class Buffering(enum.Enum):
     SINGLE = "single"
     DOUBLE = "double"
+    RING = "ring"  # generalized descriptor ring; depth from TransferPolicy
 
 
 class Partitioning(enum.Enum):
@@ -60,24 +82,52 @@ class Partitioning(enum.Enum):
     BLOCKS = "blocks"
 
 
+_DEFAULT_RING_DEPTH = 4
+
+
 @dataclass(frozen=True)
 class TransferPolicy:
-    """The paper's full policy point. Carried in model/run configs."""
+    """The paper's full policy point. Carried in model/run configs.
+
+    ``ring_depth``: number of staging slots in the descriptor ring. 0 means
+    "derive from ``buffering``" (SINGLE=1, DOUBLE=2, RING=4); any positive
+    value overrides it. ``completion_workers`` sizes the per-engine worker
+    pool that plays the kernel-level interrupt driver.
+    """
 
     management: Management = Management.INTERRUPT
     buffering: Buffering = Buffering.DOUBLE
     partitioning: Partitioning = Partitioning.BLOCKS
     block_bytes: int = 1 << 20  # 1 MiB default chunk (paper crossover region)
+    ring_depth: int = 0  # 0 => derived from buffering
+    completion_workers: int = 2
+
+    def __post_init__(self) -> None:
+        if self.ring_depth < 0:
+            raise ValueError(f"ring_depth must be >= 0, got {self.ring_depth}")
+        if self.completion_workers < 1:
+            raise ValueError("completion_workers must be >= 1")
+
+    @property
+    def depth(self) -> int:
+        """Effective descriptor-ring depth (in-flight staging slots)."""
+        if self.ring_depth > 0:
+            return self.ring_depth
+        return {Buffering.SINGLE: 1, Buffering.DOUBLE: 2,
+                Buffering.RING: _DEFAULT_RING_DEPTH}[self.buffering]
 
     def with_(self, **kw) -> "TransferPolicy":
         return replace(self, **kw)
 
     @property
     def tag(self) -> str:
-        return (
+        base = (
             f"{self.management.value}-{self.buffering.value}-"
             f"{self.partitioning.value}"
         )
+        if self.ring_depth > 0 or self.buffering is Buffering.RING:
+            base += f"-d{self.depth}"
+        return base
 
     @staticmethod
     def user_level_polling() -> "TransferPolicy":
@@ -94,6 +144,14 @@ class TransferPolicy:
         return TransferPolicy(
             Management.INTERRUPT, Buffering.SINGLE, Partitioning.UNIQUE
         )
+
+    @staticmethod
+    def kernel_level_ring(depth: int = _DEFAULT_RING_DEPTH,
+                          block_bytes: int = 1 << 20) -> "TransferPolicy":
+        """The recommended hot-path policy: interrupt-driven depth-N ring."""
+        return TransferPolicy(Management.INTERRUPT, Buffering.RING,
+                              Partitioning.BLOCKS, block_bytes=block_bytes,
+                              ring_depth=depth)
 
 
 @dataclass
@@ -121,24 +179,47 @@ class TransferStats:
         )
 
 
-class _CompletionThread:
-    """The 'kernel-level interrupt driver': a background worker that executes
-    staged transfer descriptors and fires completion callbacks.
+class _CompletionPool:
+    """The 'kernel-level interrupt driver': per-engine worker pool executing
+    staged transfer descriptors and firing completion callbacks.
 
-    Mirrors the Xilinx AXI-DMA driver structure: a descriptor queue
-    (scatter-gather ring), a privileged worker, and interrupt-style
-    notification (here: ``threading.Event`` + optional callback)."""
+    Mirrors the Xilinx AXI-DMA driver structure — a descriptor queue, one or
+    more privileged workers, interrupt-style notification (``threading.Event``
+    + optional callback) — except each engine owns its own pool, so
+    concurrent engines (e.g. several serving instances) never serialize
+    through a shared completion thread. Workers are spawned on demand and
+    exit after ``idle_timeout_s`` without descriptors, so short-lived engines
+    don't leak threads."""
 
-    def __init__(self) -> None:
-        self._q: "queue.Queue[tuple[Callable[[], Any], threading.Event, list]]" = (
+    _SENTINEL = (None, None, None)
+
+    def __init__(self, workers: int = 2, idle_timeout_s: float = 30.0) -> None:
+        self.workers = max(1, workers)
+        self.idle_timeout_s = idle_timeout_s
+        self._q: "queue.Queue[tuple[Callable[[], Any] | None, threading.Event | None, list | None]]" = (
             queue.Queue()
         )
-        self._thread = threading.Thread(target=self._run, daemon=True)
-        self._thread.start()
+        self._lock = threading.Lock()
+        self._alive = 0
+        self._closed = False
 
     def _run(self) -> None:
         while True:
-            fn, done, out = self._q.get()
+            try:
+                fn, done, out = self._q.get(timeout=self.idle_timeout_s)
+            except queue.Empty:
+                # exit only when the queue is provably empty under the lock:
+                # submit() enqueues under the same lock, so a descriptor can
+                # never be stranded between our timeout and our exit.
+                with self._lock:
+                    if not self._q.empty():
+                        continue
+                    self._alive -= 1
+                return
+            if fn is None:  # sentinel from close()
+                with self._lock:
+                    self._alive -= 1
+                return
             try:
                 out.append(fn())
             except BaseException as e:  # surfaced at wait()
@@ -148,20 +229,21 @@ class _CompletionThread:
     def submit(self, fn: Callable[[], Any]) -> tuple[threading.Event, list]:
         done = threading.Event()
         out: list = []
-        self._q.put((fn, done, out))
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("submit() on a closed _CompletionPool")
+            self._q.put((fn, done, out))
+            while self._alive < self.workers:
+                threading.Thread(target=self._run, daemon=True).start()
+                self._alive += 1
         return done, out
 
-
-_COMPLETION: _CompletionThread | None = None
-_COMPLETION_LOCK = threading.Lock()
-
-
-def _completion_thread() -> _CompletionThread:
-    global _COMPLETION
-    with _COMPLETION_LOCK:
-        if _COMPLETION is None:
-            _COMPLETION = _CompletionThread()
-        return _COMPLETION
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            n = self._alive
+        for _ in range(n):
+            self._q.put(self._SENTINEL)
 
 
 class Ticket:
@@ -191,6 +273,150 @@ class BufferInFlightError(RuntimeError):
     the DMA engine; the kernel driver forbids it. So do we."""
 
 
+# ---------------------------------------------------------------------------
+# Staged layouts: precomputed pack plans + reusable staging buffers
+# ---------------------------------------------------------------------------
+
+def reassemble_chunks(chunks: Sequence[jax.Array]) -> jax.Array:
+    """Flatten a tx() chunk list back into one flat device array."""
+    import jax.numpy as jnp
+
+    if len(chunks) == 1:
+        return chunks[0].reshape(-1)
+    return jnp.concatenate([c.reshape(-1) for c in chunks])
+
+
+def _bitcast_from_bytes(seg: jax.Array, shape: tuple, dtype: np.dtype) -> jax.Array:
+    """Reinterpret a flat uint8 device segment as ``dtype`` with ``shape``."""
+    import jax.numpy as jnp
+
+    if dtype == np.uint8:
+        return seg.reshape(shape)
+    if dtype == np.bool_:
+        # packed bools are 0/1 bytes; bitcast to bool isn't supported
+        return (seg != 0).reshape(shape)
+    if dtype.itemsize == 1:
+        return jax.lax.bitcast_convert_type(seg, dtype).reshape(shape)
+    return jax.lax.bitcast_convert_type(
+        seg.reshape(shape + (dtype.itemsize,)), jnp.dtype(dtype))
+
+
+class StagedLayout:
+    """Precomputed pack/unpack plan for a fixed list of host arrays.
+
+    Computes (offset, shape, dtype, nbytes) per array once and preallocates a
+    single pinned-style uint8 staging buffer. ``pack`` copies each array into
+    its slot (skipping the copy entirely when the same array objects were
+    packed last time and ``force=False``); ``unpack`` slices/bitcasts device
+    chunks back into per-array device views using the cached offsets. Neither
+    allocates host memory after construction.
+    """
+
+    __slots__ = ("specs", "nbytes", "_staging", "_payload", "_busy",
+                 "_last_arrays", "pack_count", "copy_count")
+
+    def __init__(self, arrays: Sequence[np.ndarray]):
+        specs = []
+        off = 0
+        for a in arrays:
+            a = np.asarray(a)
+            specs.append((off, a.shape, np.dtype(a.dtype), a.nbytes))
+            off += a.nbytes
+        self.specs: tuple = tuple(specs)
+        self.nbytes = off
+        self._staging = np.empty(max(off, 1), np.uint8)
+        self._payload = self._staging[:off]  # stable view, identity-checkable
+        self._busy: threading.Event | None = None  # set by engine on async tx
+        # strong refs to the arrays staged last: identity comparison against
+        # live objects is sound, whereas remembering bare id()s is not (a
+        # freed array's id can be reused by a new allocation)
+        self._last_arrays: tuple | None = None
+        self.pack_count = 0
+        self.copy_count = 0
+
+    @property
+    def staging(self) -> np.ndarray:
+        return self._payload
+
+    def matches(self, arrays: Sequence[np.ndarray]) -> bool:
+        if len(arrays) != len(self.specs):
+            return False
+        return all(
+            np.asarray(a).shape == shape and np.dtype(np.asarray(a).dtype) == dtype
+            for a, (_, shape, dtype, _) in zip(arrays, self.specs)
+        )
+
+    def _check_not_busy(self, wait: bool) -> None:
+        busy = self._busy
+        if busy is not None and not busy.is_set():
+            if wait:
+                busy.wait()
+            else:
+                raise BufferInFlightError(
+                    "StagedLayout staging buffer re-packed while its transfer "
+                    "is in flight; wait for the ticket or pass wait=True"
+                )
+
+    def pack(self, arrays: Sequence[np.ndarray], *, wait: bool = True,
+             force: bool = False) -> np.ndarray:
+        """Copy ``arrays`` into the staging buffer; returns the SAME ndarray
+        view object every call. When the identical array objects were packed
+        last time, the memcpy is skipped (callers mutating arrays in place
+        must pass ``force=True``)."""
+        if not self.matches(arrays):
+            raise ValueError("array shapes/dtypes do not match this layout")
+        self._check_not_busy(wait)
+        self.pack_count += 1
+        unchanged = (
+            not force
+            and self._last_arrays is not None
+            and len(arrays) == len(self._last_arrays)
+            and all(a is b for a, b in zip(arrays, self._last_arrays))
+        )
+        if not unchanged:
+            for (off, shape, dtype, nb), a in zip(self.specs, arrays):
+                if nb == 0:
+                    continue
+                dst = self._staging[off:off + nb].view(dtype)
+                np.copyto(dst, np.asarray(a).reshape(-1))
+            self._last_arrays = tuple(arrays)
+            self.copy_count += 1
+        return self._payload
+
+    def unpack(self, chunks: Sequence[jax.Array]) -> list[jax.Array]:
+        """Slice device chunk(s) of a packed payload back into per-array
+        device views, using the cached offsets (no host round-trip)."""
+        flat = reassemble_chunks(chunks)
+        return [
+            _bitcast_from_bytes(flat[off:off + nb], shape, dtype)
+            for off, shape, dtype, nb in self.specs
+        ]
+
+
+class LayoutCache:
+    """Per-engine cache of :class:`StagedLayout` keyed by caller identity
+    (layer name/index). A hit returns the SAME layout object — and therefore
+    the same preallocated staging buffer — frame after frame."""
+
+    def __init__(self) -> None:
+        self._layouts: dict[Any, StagedLayout] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Any, arrays: Sequence[np.ndarray]) -> StagedLayout:
+        lay = self._layouts.get(key)
+        if lay is not None and lay.matches(arrays):
+            self.hits += 1
+            return lay
+        lay = StagedLayout(arrays)
+        self._layouts[key] = lay
+        self.misses += 1
+        return lay
+
+    def __len__(self) -> int:
+        return len(self._layouts)
+
+
 def _split(arr: np.ndarray, policy: TransferPolicy) -> list[np.ndarray]:
     """Partition a flat view of ``arr`` according to the policy."""
     flat = arr.reshape(-1)
@@ -205,16 +431,25 @@ class TransferEngine:
     """Executes host->device (TX) and device->host (RX) transfers under a
     :class:`TransferPolicy`, recording measured :class:`TransferStats`.
 
-    The engine owns the staging buffers (the paper's single/double buffer in
-    the *physical* space) and enforces completion ordering."""
+    The engine owns the descriptor ring (the paper's staging buffers in the
+    *physical* space, generalised to depth N), a :class:`LayoutCache` of
+    reusable staging layouts, and — under INTERRUPT management — a private
+    completion worker pool, so concurrent engines never contend on a global
+    thread. It enforces completion ordering: a ring slot is only re-acquired
+    once its descriptor completed."""
 
     def __init__(self, policy: TransferPolicy, device: jax.Device | None = None,
                  scheduler: "CooperativeScheduler | None" = None):
         self.policy = policy
         self.device = device or jax.devices()[0]
         self.stats: list[TransferStats] = []
-        self._buffers_busy: list[threading.Event | None] = [None, None]
+        self.layouts = LayoutCache()
+        # descriptor ring: one completion event per staging slot
+        self._buffers_busy: list[threading.Event | None] = [None] * policy.depth
         self._buf_idx = 0
+        self.max_inflight = 0  # high-water mark of concurrent descriptors
+        self._stats_lock = threading.Lock()
+        self._pool: _CompletionPool | None = None
         # SCHEDULED mode needs a scheduler; lazily import to avoid cycle.
         if scheduler is None and policy.management is Management.SCHEDULED:
             from repro.core.scheduler import CooperativeScheduler
@@ -222,9 +457,27 @@ class TransferEngine:
             scheduler = CooperativeScheduler()
         self._scheduler = scheduler
 
-    # -- staging-buffer safety (kernel-driver protection semantics) --------
+    # -- completion pool (per engine; lazy so POLLING engines stay threadless)
+    def _completion_pool(self) -> _CompletionPool:
+        if self._pool is None:
+            self._pool = _CompletionPool(self.policy.completion_workers)
+        return self._pool
+
+    def close(self) -> None:
+        """Release the completion workers (idle workers also time out)."""
+        if self._pool is not None:
+            self._pool.close()
+            self._pool = None
+
+    def __enter__(self) -> "TransferEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- staging-ring safety (kernel-driver protection semantics) ----------
     def _acquire_buffer(self) -> int:
-        n_buf = 2 if self.policy.buffering is Buffering.DOUBLE else 1
+        n_buf = len(self._buffers_busy)
         idx = self._buf_idx % n_buf
         busy = self._buffers_busy[idx]
         if busy is not None and not busy.is_set():
@@ -232,12 +485,16 @@ class TransferEngine:
                 busy.wait()  # kernel driver: safe, waits for completion
             else:
                 raise BufferInFlightError(
-                    f"staging buffer {idx} reused before completion "
+                    f"staging slot {idx} reused before completion "
                     f"(policy={self.policy.tag}); use INTERRUPT management or "
-                    f"DOUBLE buffering"
+                    f"a deeper ring"
                 )
         self._buf_idx += 1
         return idx
+
+    def _record(self, stats: TransferStats) -> None:
+        with self._stats_lock:
+            self.stats.append(stats)
 
     # -- TX: host -> device -------------------------------------------------
     def tx(self, host_array: np.ndarray) -> list[jax.Array]:
@@ -248,7 +505,7 @@ class TransferEngine:
             [(c, "tx") for c in chunks],
         )
         wall = time.perf_counter() - t0
-        self.stats.append(
+        self._record(
             TransferStats(host_array.nbytes, wall, len(chunks), "tx", self.policy.tag)
         )
         return out
@@ -260,7 +517,7 @@ class TransferEngine:
         t0 = time.perf_counter()
         out = self._run_chunks([(a, "rx") for a in device_arrays])
         wall = time.perf_counter() - t0
-        self.stats.append(
+        self._record(
             TransferStats(nbytes, wall, len(device_arrays), "rx", self.policy.tag)
         )
         return out
@@ -304,10 +561,11 @@ class TransferEngine:
             self._scheduler.drain()
             return results
 
-        # INTERRUPT: stage every chunk onto the completion thread. With DOUBLE
-        # buffering, chunk k+1 is staged while k is in flight (true overlap).
-        thread = _completion_thread()
-        depth = 2 if self.policy.buffering is Buffering.DOUBLE else 1
+        # INTERRUPT: stage chunks onto the descriptor ring. Up to ``depth``
+        # descriptors are in flight at once; chunk k+depth can only be staged
+        # after chunk k's completion fires (ring reuse rule).
+        pool = self._completion_pool()
+        depth = self.policy.depth
         tickets: list[Ticket | None] = [None] * len(items)
         results: list = [None] * len(items)
         inflight: list[int] = []
@@ -316,38 +574,72 @@ class TransferEngine:
                 j = inflight.pop(0)
                 results[j] = tickets[j].wait()
             idx = self._acquire_buffer()
-            done, out = thread.submit(
+            done, out = pool.submit(
                 lambda p=payload, d=direction: self._one(p, d)
             )
             self._buffers_busy[idx] = done
             tickets[i] = Ticket(done, out)
             inflight.append(i)
+            self.max_inflight = max(self.max_inflight, len(inflight))
         for j in inflight:
             results[j] = tickets[j].wait()
         return results
 
     # -- async API (INTERRUPT only): returns a ticket, caller is "interrupted"
     def tx_async(self, host_array: np.ndarray,
-                 callback: Callable[[list], None] | None = None) -> Ticket:
+                 callback: Callable[[list], None] | None = None,
+                 layout: StagedLayout | None = None) -> Ticket:
+        """Asynchronous TX. When ``layout`` is given (its staging buffer is
+        the payload), the layout is marked busy until completion so an unsafe
+        re-pack raises :class:`BufferInFlightError`."""
         if self.policy.management is not Management.INTERRUPT:
             raise ValueError("tx_async requires INTERRUPT management")
-        thread = _completion_thread()
+        pool = self._completion_pool()
         chunks = _split(np.asarray(host_array), self.policy)
+        nbytes = int(np.asarray(host_array).nbytes)
 
         def work():
-            # NB: runs ON the completion thread — execute chunks inline
-            # (re-entering the descriptor queue here would self-deadlock,
+            # NB: runs ON a completion worker — execute chunks inline
+            # (re-entering the descriptor queue here could self-deadlock,
             # like an IRQ handler waiting on its own IRQ).
+            t0 = time.perf_counter()
             out = []
             for c in chunks:
                 r = jax.device_put(c, self.device)
                 r.block_until_ready()
                 out.append(r)
+            self._record(TransferStats(nbytes, time.perf_counter() - t0,
+                                       len(chunks), "tx", self.policy.tag))
             if callback is not None:
                 callback(out)
             return out
 
-        done, out = thread.submit(work)
+        done, out = pool.submit(work)
+        if layout is not None:
+            layout._busy = done
+        return Ticket(done, out)
+
+    def rx_async(self, device_arrays: Sequence[jax.Array],
+                 callback: Callable[[list], None] | None = None) -> Ticket:
+        """Asynchronous RX: device arrays stream back to host on a completion
+        worker while the caller keeps computing. ``wait()`` returns the host
+        ndarray list."""
+        if self.policy.management is not Management.INTERRUPT:
+            raise ValueError("rx_async requires INTERRUPT management")
+        pool = self._completion_pool()
+        arrays = list(device_arrays)
+        nbytes = sum(int(a.size) * a.dtype.itemsize for a in arrays)
+
+        def work():
+            t0 = time.perf_counter()
+            out = [np.asarray(jax.device_get(a)) for a in arrays]
+            self._record(TransferStats(nbytes, time.perf_counter() - t0,
+                                       len(arrays), "rx", self.policy.tag))
+            if callback is not None:
+                callback(out)
+            return out
+
+        done, out = pool.submit(work)
         return Ticket(done, out)
 
     # -- reporting -----------------------------------------------------------

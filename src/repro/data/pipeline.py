@@ -9,10 +9,10 @@ under a :class:`TransferPolicy`:
 - POLLING   : device_put + block before the step (paper's user-level)
 - SCHEDULED : staging tasks interleaved with source work on the cooperative
               scheduler
-- INTERRUPT : background prefetch thread keeps a depth-1/2 queue of device
-              batches ready (single/double buffer) — the kernel-driver mode,
-              and the right default for training (stage batch k+1 during
-              step k).
+- INTERRUPT : background prefetch thread keeps a ring of ``policy.depth``
+              device batches ready (single/double buffer are rings of depth
+              1/2) — the kernel-driver mode, and the right default for
+              training (stage batch k+1..k+depth during step k).
 """
 
 from __future__ import annotations
@@ -26,7 +26,7 @@ import jax
 import numpy as np
 
 from repro.core.scheduler import CooperativeScheduler
-from repro.core.transfer import Buffering, Management, TransferPolicy
+from repro.core.transfer import Management, TransferPolicy
 from repro.models.config import ModelConfig
 
 
@@ -85,8 +85,9 @@ class StagedPipeline:
         self.policy = policy
         self.shardings = shardings
         self.step = start_step
-        self._q: "queue.Queue[Any]" = queue.Queue(
-            maxsize=2 if policy.buffering is Buffering.DOUBLE else 1)
+        # prefetch window = the policy's descriptor-ring depth (SINGLE=1,
+        # DOUBLE=2, RING=N): batch k+depth stages while step k runs.
+        self._q: "queue.Queue[Any]" = queue.Queue(maxsize=policy.depth)
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
         self._sched = (CooperativeScheduler()

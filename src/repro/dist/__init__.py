@@ -1,0 +1,20 @@
+"""repro.dist — elastic re-meshing and fault-tolerance policy.
+
+The distributed-systems face of the paper's lesson: just as the transfer
+engine bounds how long the PS is blocked on one DMA, the training loop must
+bound how long the fleet is blocked on one failed or straggling host.
+:mod:`repro.dist.elastic` plans the shrunken device mesh after a host loss;
+:mod:`repro.dist.fault` tracks restarts, stragglers, and skipped non-finite
+steps for the :class:`repro.train.loop.Trainer`;
+:mod:`repro.dist.sharding` maps parameter/batch/cache pytrees to
+NamedShardings on the production meshes.
+"""
+
+from repro.dist.elastic import MeshPlan, reshard_plan, shrink_mesh  # noqa: F401
+from repro.dist.fault import FaultPolicy, FaultState  # noqa: F401
+from repro.dist.sharding import (  # noqa: F401
+    batch_sharding_tree,
+    cache_sharding,
+    opt_state_sharding,
+    param_sharding,
+)

@@ -1,0 +1,64 @@
+"""Fault policy and per-run fault-event accounting.
+
+Used by :class:`repro.train.loop.Trainer`: every step's wall time and
+finite-ness verdict flow through :meth:`FaultState.record_step`, which flags
+stragglers (z-score over a rolling window, via
+:class:`repro.utils.timing.StepClock`) and counts steps the optimizer
+skipped because of non-finite gradients. Restart counting is incremented by
+the loop when it resumes from a checkpoint.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.utils.timing import StepClock
+
+
+@dataclass(frozen=True)
+class FaultPolicy:
+    """Knobs for loop-level fault tolerance. Defaults match the trainer."""
+
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+    straggler_window: int = 50
+    straggler_zscore: float = 4.0
+    skip_nonfinite: bool = True
+    max_restarts: int = 16
+
+
+@dataclass
+class FaultState:
+    """Mutable per-run fault counters (one per Trainer)."""
+
+    policy: FaultPolicy = field(default_factory=FaultPolicy)
+    restarts: int = 0
+    stragglers_detected: int = 0
+    steps_skipped_nonfinite: int = 0
+    steps_recorded: int = 0
+    _clock: StepClock | None = None
+
+    def __post_init__(self) -> None:
+        if self._clock is None:
+            self._clock = StepClock(window=self.policy.straggler_window,
+                                    zscore_threshold=self.policy.straggler_zscore)
+
+    def record_step(self, dt_s: float, step_ok: float = 1.0) -> bool:
+        """Record one step; returns True if the step was anomalous
+        (straggler wall time and/or skipped as non-finite)."""
+        self.steps_recorded += 1
+        straggler = self._clock.record(dt_s)
+        if straggler:
+            self.stragglers_detected += 1
+        skipped = step_ok < 0.5
+        if skipped:
+            self.steps_skipped_nonfinite += 1
+        return straggler or skipped
+
+    def summary(self) -> dict[str, int]:
+        return {
+            "steps": self.steps_recorded,
+            "restarts": self.restarts,
+            "stragglers": self.stragglers_detected,
+            "skipped_nonfinite": self.steps_skipped_nonfinite,
+        }

@@ -1,0 +1,104 @@
+"""Sharding rules: pytrees -> NamedShardings on the production meshes.
+
+The rules are deliberately conservative — an axis is only assigned to a
+tensor dimension when the dimension is exactly divisible by the mesh extent,
+otherwise the leaf (dimension) stays replicated. Replication is always
+*correct* (GSPMD inserts no resharding error, just more memory), so every
+spec these functions emit is safe on any mesh; the rules only decide what is
+profitably partitioned:
+
+- parameters / optimizer state: the model (tensor-parallel) axis on the last
+  divisible dimension (output features), falling back to the largest;
+- batches: the data-parallel axes (``pod`` x ``data`` when both exist) on the
+  leading (batch) dimension;
+- KV/SSM caches: data-parallel axes on the slot/batch dimension (dim 1 of
+  the layer-stacked layout).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _data_axes(sizes: dict[str, int], extent: int) -> tuple[str, ...] | None:
+    """Largest data-parallel axis group whose product divides ``extent``."""
+    for names in (("pod", "data"), ("data",)):
+        if all(n in sizes for n in names):
+            total = math.prod(sizes[n] for n in names)
+            if extent >= total and extent % total == 0:
+                return names
+    return None
+
+
+def _param_spec(shape: tuple[int, ...], sizes: dict[str, int]) -> P:
+    model = sizes.get("model", 1)
+    ndim = len(shape)
+    spec: list[Any] = [None] * ndim
+    if model > 1 and ndim >= 1:
+        # prefer the trailing (output-feature) dim, then the largest
+        for d in sorted(range(ndim),
+                        key=lambda d: (d == ndim - 1, shape[d]),
+                        reverse=True):
+            if shape[d] >= model and shape[d] % model == 0:
+                spec[d] = "model"
+                break
+    return P(*spec)
+
+
+def _named(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def param_sharding(params: Any, mesh) -> Any:
+    """Tensor-parallel sharding for a parameter pytree."""
+    sizes = _sizes(mesh)
+    return jax.tree.map(
+        lambda leaf: _named(mesh, _param_spec(tuple(leaf.shape), sizes)),
+        params)
+
+
+def opt_state_sharding(opt_state: Any, mesh) -> Any:
+    """Optimizer state mirrors the parameter rules (moments are
+    parameter-shaped; scalars like step counters replicate)."""
+    return param_sharding(opt_state, mesh)
+
+
+def batch_sharding_tree(batch: Any, mesh) -> Any:
+    """Data-parallel sharding for an input-batch pytree (batch dim 0)."""
+    sizes = _sizes(mesh)
+
+    def spec_for(leaf) -> NamedSharding:
+        shape = tuple(leaf.shape)
+        spec: list[Any] = [None] * len(shape)
+        if shape:
+            axes = _data_axes(sizes, shape[0])
+            if axes is not None:
+                spec[0] = axes if len(axes) > 1 else axes[0]
+        return _named(mesh, P(*spec))
+
+    return jax.tree.map(spec_for, batch)
+
+
+def cache_sharding(cache: Any, mesh) -> Any:
+    """Decode-cache sharding: slots (batch) on the data axes. Cache leaves
+    are layer-stacked ``[L, B, ...]``; per-layer lengths ``[L]`` replicate."""
+    sizes = _sizes(mesh)
+
+    def spec_for(leaf) -> NamedSharding:
+        shape = tuple(leaf.shape)
+        spec: list[Any] = [None] * len(shape)
+        if len(shape) >= 2:
+            axes = _data_axes(sizes, shape[1])
+            if axes is not None:
+                spec[1] = axes if len(axes) > 1 else axes[0]
+        return _named(mesh, P(*spec))
+
+    return jax.tree.map(spec_for, cache)

@@ -24,6 +24,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x renamed CompilerParams -> TPUCompilerParams; jax >= 0.5 renames
+# it back. Resolve whichever this jax provides.
+_CompilerParams = getattr(pltpu, "TPUCompilerParams", None) or pltpu.CompilerParams
+
 
 def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref,
                       dec_ref, *, q: int, h: int, p: int, g: int, n: int):
@@ -105,7 +109,7 @@ def ssd_intra_chunk_call(x: jax.Array, dt: jax.Array, a: jax.Array,
             pl.BlockSpec((1, 1, h, p, n), lambda i, z: (i, z, 0, 0, 0)),
             pl.BlockSpec((1, 1, h), lambda i, z: (i, z, 0)),
         ),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(xc, dtc, a, bc, cc)

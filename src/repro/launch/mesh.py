@@ -11,19 +11,17 @@ from __future__ import annotations
 
 import jax
 
+from repro.utils.jax_compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: int = 1):
     """Mesh over whatever devices exist (tests / smoke runs)."""
     n = len(jax.devices())
     data = n // model_parallel
-    return jax.make_mesh(
-        (data, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model_parallel), ("data", "model"))

@@ -6,8 +6,12 @@ classification frames streamed by the PS):
 - the engine batches up to ``max_batch`` prompts, prefills them into the
   KV cache, then decodes steps for the whole batch (continuous-batching
   lite: finished slots are refilled between decode bursts);
-- token transfers host<->device go through the TransferPolicy (a decoded
-  token is an RX; new prompts are TX) — measured like every other transfer.
+- token transfers host<->device go through a per-engine
+  :class:`TransferEngine` (a decoded token is an RX; new prompts are TX) —
+  measured like every other transfer. Each ServingEngine owns its own
+  completion worker pool, so concurrent engines never serialize through a
+  shared thread, and under INTERRUPT management the RX of decode step t
+  overlaps decode step t+1 (the paper's balanced TX/RX applied to serving).
 
 The decode step itself is the jitted function the decode_32k / long_500k
 dry-run cells lower.
@@ -16,14 +20,19 @@ dry-run cells lower.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.transfer import TransferPolicy
+from repro.core.transfer import (
+    Management,
+    TransferEngine,
+    TransferPolicy,
+    reassemble_chunks,
+)
 from repro.models.api import Model
 
 
@@ -56,10 +65,14 @@ class ServingEngine:
         self.params = params
         self.cfg = cfg
         self.policy = policy or TransferPolicy.kernel_level()
+        self.engine = TransferEngine(self.policy)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cfg.max_seq))
         self._decode = jax.jit(model.decode, donate_argnums=(2,))
         self._key = jax.random.PRNGKey(cfg.seed)
+
+    def close(self) -> None:
+        self.engine.close()
 
     def _sample(self, logits: jax.Array) -> jax.Array:
         logits = logits[:, -1, : self.model.cfg.vocab]
@@ -69,13 +82,19 @@ class ServingEngine:
         return jax.random.categorical(
             sub, logits / self.cfg.temperature)[:, None].astype(jnp.int32)
 
+    def _tx_prompts(self, prompts: np.ndarray) -> jax.Array:
+        """Stage the prompt batch through the transfer engine (measured TX)."""
+        arr = np.ascontiguousarray(prompts, dtype=np.int32)
+        return reassemble_chunks(self.engine.tx(arr)).reshape(arr.shape)
+
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
                  extra_inputs: dict | None = None) -> list[RequestResult]:
         """prompts: [B, S_prompt] int32 (already padded/batched)."""
         b = prompts.shape[0]
-        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        batch = {"tokens": self._tx_prompts(prompts)}
         if extra_inputs:
             batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
+        overlap_rx = self.policy.management is Management.INTERRUPT
 
         t0 = time.perf_counter()
         logits, cache = self._prefill(self.params, batch)
@@ -83,13 +102,24 @@ class ServingEngine:
         jax.block_until_ready(tok)
         prefill_s = time.perf_counter() - t0
 
-        out = [tok]
         t0 = time.perf_counter()
-        for _ in range(max_new_tokens - 1):
-            logits, cache = self._decode(self.params, tok, cache)
-            tok = self._sample(logits)
-            out.append(tok)
-        toks = np.asarray(jnp.concatenate(out, axis=1))
+        if overlap_rx:
+            # token t streams back on a completion worker while step t+1
+            # decodes — the decode loop never blocks on device->host copies.
+            tickets = [self.engine.rx_async([tok])]
+            for _ in range(max_new_tokens - 1):
+                logits, cache = self._decode(self.params, tok, cache)
+                tok = self._sample(logits)
+                tickets.append(self.engine.rx_async([tok]))
+            toks = np.concatenate([t.wait()[0] for t in tickets], axis=1)
+        else:
+            out = [tok]
+            for _ in range(max_new_tokens - 1):
+                logits, cache = self._decode(self.params, tok, cache)
+                tok = self._sample(logits)
+                out.append(tok)
+            toks = np.concatenate(
+                [self.engine.rx([t])[0].reshape(t.shape) for t in out], axis=1)
         decode_s = time.perf_counter() - t0
 
         return [RequestResult(prompts[i], toks[i], prefill_s, decode_s)

@@ -1,0 +1,45 @@
+"""Compat layer for the jax version span this repo runs on (0.4.x .. current).
+
+Newer jax renamed or added several APIs the code and tests use; resolve them
+once here so call sites stay on the modern spelling:
+
+- :func:`make_mesh` — drops ``axis_types`` where unsupported (pre-0.5 jax
+  has no explicit-sharding axis types; Auto was the only behaviour);
+- :func:`shard_map` — ``jax.shard_map`` (new) or
+  ``jax.experimental.shard_map`` (0.4.x);
+- :func:`pvary` — identity on jax versions without varying-axis tracking
+  (pre-0.6 shard_map does not type-check axis variance, so marking is a
+  no-op there).
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def make_mesh(shape, axis_names):
+    """jax.make_mesh with Auto axis types when the concept exists."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)
+
+
+def pvary(x, axis_names):
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_names)
+    return x
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mapped axis (inside shard_map/pmap)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    size = jax.core.axis_frame(axis_name)  # jax 0.4.x: returns the int
+    return size if isinstance(size, int) else size.size

@@ -1,0 +1,81 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+Property tests degrade gracefully: ``@given`` draws ``max_examples``
+pseudo-random samples from each strategy (seeded, so failures reproduce)
+and calls the test once per sample. No shrinking, no database, no
+``@example`` — install the real package (see requirements-dev.txt) for
+those. Only the strategy surface this repo uses is implemented.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample: Callable[[random.Random], Any]):
+        self._sample = sample
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._sample(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> _Strategy:
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Accepts and ignores everything but max_examples (deadline etc.)."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest must not see the drawn params as fixtures: hide the wrapped
+        # signature (keep only params not supplied by strategies).
+        params = [p for name, p in
+                  inspect.signature(fn).parameters.items()
+                  if name not in strats]
+        wrapper.__signature__ = inspect.Signature(params)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

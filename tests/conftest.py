@@ -17,6 +17,26 @@ def _seed_numpy():
     np.random.seed(0)
 
 
+# Test snippets are written against current-jax spellings (jax.shard_map,
+# AxisType, lax.pvary); install aliases when running on an older jax. Each
+# branch is a no-op on jax versions that already provide the API.
+_JAX_COMPAT_PREAMBLE = r"""
+import jax as _cjax
+if not hasattr(_cjax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _c_sm
+    _cjax.shard_map = _c_sm
+if not hasattr(_cjax.lax, "pvary"):
+    _cjax.lax.pvary = lambda _x, _names: _x
+if not hasattr(_cjax.sharding, "AxisType"):
+    class _CAxisType:
+        Auto = None
+    _cjax.sharding.AxisType = _CAxisType
+    _c_mm = _cjax.make_mesh
+    _cjax.make_mesh = (
+        lambda shape, names, axis_types=None, **kw: _c_mm(shape, names, **kw))
+"""
+
+
 def run_in_subprocess(code: str, n_devices: int = 8) -> str:
     """Run python code with N fake host devices; returns stdout."""
     import os
@@ -26,6 +46,7 @@ def run_in_subprocess(code: str, n_devices: int = 8) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = "src"
+    code = _JAX_COMPAT_PREAMBLE + code
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, env=env, cwd=os.path.dirname(
                              os.path.dirname(os.path.abspath(__file__))),

@@ -4,8 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dep — degrade to the seeded fallback sampler
+    from _hypothesis_fallback import given, settings, st
 
 from repro.models.layers.attention import attention_blocks, attention_unique
 from repro.models.layers.moe import moe_apply, moe_params

@@ -2,16 +2,22 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dep — degrade to the seeded fallback sampler
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.cost_model import TransferCostModel
 from repro.core.scheduler import CooperativeScheduler
 from repro.core.transfer import (
     Buffering,
     BufferInFlightError,
+    LayoutCache,
     Management,
     Partitioning,
+    StagedLayout,
     TransferEngine,
     TransferPolicy,
 )
@@ -133,3 +139,161 @@ def test_buffer_inflight_protection():
     eng._buffers_busy[0] = __import__("threading").Event()  # busy, never set
     with pytest.raises(BufferInFlightError):
         eng.tx(np.zeros(8, np.float32))
+
+
+# ---- descriptor ring ------------------------------------------------------
+
+def test_ring_depth_inflight_window():
+    """A depth-4 ring must actually keep >= 3 descriptors in flight when the
+    payload splits into more chunks than the ring holds."""
+    policy = TransferPolicy.kernel_level_ring(4, block_bytes=1 << 12)
+    eng = TransferEngine(policy)
+    x = np.random.rand(32 * 1024).astype(np.float32)  # 128 KiB -> 32 chunks
+    back = eng.rx(eng.tx(x))
+    flat = np.concatenate([np.asarray(b).reshape(-1) for b in back])
+    np.testing.assert_array_equal(flat, x)
+    assert policy.depth == 4
+    assert eng.max_inflight >= 3
+    eng.close()
+
+
+def test_ring_depth_derivation_and_tag():
+    assert TransferPolicy.user_level_polling().depth == 1
+    assert TransferPolicy(Management.INTERRUPT, Buffering.DOUBLE,
+                          Partitioning.BLOCKS).depth == 2
+    assert TransferPolicy.kernel_level_ring(7).depth == 7
+    assert TransferPolicy.kernel_level_ring(7).tag.endswith("-d7")
+    with pytest.raises(ValueError):
+        TransferPolicy(ring_depth=-1)
+
+
+def test_per_engine_pools_do_not_share_state():
+    """Concurrent engines own separate completion pools (serving case)."""
+    a = TransferEngine(TransferPolicy.kernel_level())
+    b = TransferEngine(TransferPolicy.kernel_level())
+    ta = a.tx_async(np.ones(1000, np.float32))
+    tb = b.tx_async(np.full(1000, 2.0, np.float32))
+    ta.wait(), tb.wait()
+    assert a._pool is not None and b._pool is not None
+    assert a._pool is not b._pool
+    a.close(), b.close()
+
+
+# ---- staged layouts -------------------------------------------------------
+
+def test_staged_layout_roundtrip_mixed_dtypes():
+    arrays = [np.random.rand(17, 3).astype(np.float32),
+              np.arange(11, dtype=np.int32),
+              np.random.rand(5).astype(np.float16)]
+    lay = StagedLayout(arrays)
+    eng = TransferEngine(TransferPolicy.kernel_level_ring(3))
+    out = lay.unpack(eng.tx(lay.pack(arrays)))
+    for o, a in zip(out, arrays):
+        np.testing.assert_array_equal(np.asarray(o), a)
+    eng.close()
+
+
+def test_staged_layout_cache_no_repack_across_frames():
+    """Frame 2..N must reuse the SAME staging buffer with zero copies."""
+    arrays = [np.random.rand(64, 8).astype(np.float32),
+              np.zeros(16, np.float32)]
+    cache = LayoutCache()
+    lay1 = cache.get("layer0", arrays)
+    buf1 = lay1.pack(arrays)
+    lay2 = cache.get("layer0", arrays)
+    buf2 = lay2.pack(arrays)
+    assert lay1 is lay2  # cache hit: same layout object
+    assert buf1 is buf2  # identical staging buffer, not a fresh allocation
+    assert cache.hits == 1 and cache.misses == 1
+    assert lay1.pack_count == 2 and lay1.copy_count == 1  # second pack free
+
+
+def test_staged_layout_repacks_when_arrays_change():
+    a1 = [np.ones(8, np.float32)]
+    a2 = [np.full(8, 3.0, np.float32)]
+    lay = StagedLayout(a1)
+    lay.pack(a1)
+    payload = lay.pack(a2)  # different objects -> must copy
+    assert lay.copy_count == 2
+    np.testing.assert_array_equal(payload.view(np.float32), a2[0])
+
+
+def test_staged_layout_fresh_arrays_never_stage_stale_data():
+    """id() reuse after GC must not fool the copy-skip: every pack with a
+    freshly allocated array must stage that array's bytes."""
+    lay = StagedLayout([np.zeros(1000, np.float32)])
+    for i in range(50):
+        payload = lay.pack([np.full(1000, float(i), np.float32)])
+        np.testing.assert_array_equal(payload.view(np.float32),
+                                      np.full(1000, float(i), np.float32))
+
+
+def test_staged_layout_one_byte_dtypes_roundtrip():
+    """int8/bool must come back with their dtype and values (not raw uint8)."""
+    arrays = [np.array([-1, 2, -3], np.int8),
+              np.array([True, False, True, True]),
+              np.arange(5, dtype=np.uint8)]
+    lay = StagedLayout(arrays)
+    eng = TransferEngine(TransferPolicy.kernel_level())
+    out = lay.unpack(eng.tx(lay.pack(arrays)))
+    for o, a in zip(out, arrays):
+        host = np.asarray(o)
+        assert host.dtype == a.dtype, (host.dtype, a.dtype)
+        np.testing.assert_array_equal(host, a)
+    eng.close()
+
+
+def test_completion_pool_survives_idle_timeout():
+    """A submit racing the workers' idle exit must not strand a descriptor
+    (ticket.wait would hang forever)."""
+    import time as _time
+    from repro.core.transfer import _CompletionPool
+    pool = _CompletionPool(workers=2, idle_timeout_s=0.02)
+    for _ in range(10):
+        _time.sleep(0.025)  # let workers hit (or race) the idle exit
+        done, out = pool.submit(lambda: 42)
+        assert done.wait(timeout=5.0), "descriptor stranded after idle exit"
+        assert out[0] == 42
+    pool.close()
+
+
+def test_staged_layout_busy_repack_raises():
+    """Re-packing a staging buffer whose TX is in flight is the user-level
+    corruption the kernel driver forbids."""
+    eng = TransferEngine(TransferPolicy.kernel_level_ring(2))
+    arrays = [np.zeros(1 << 22, np.float32)]  # large enough to stay in flight
+    lay = eng.layouts.get("big", arrays)
+    ticket = eng.tx_async(lay.pack(arrays), layout=lay)
+    if not ticket.complete:
+        with pytest.raises(BufferInFlightError):
+            lay.pack(arrays, wait=False, force=True)
+    ticket.wait()
+    lay.pack(arrays, wait=False, force=True)  # safe once complete
+    eng.close()
+
+
+def test_layout_mismatch_raises():
+    lay = StagedLayout([np.zeros(4, np.float32)])
+    with pytest.raises(ValueError):
+        lay.pack([np.zeros(5, np.float32)])
+
+
+# ---- async RX -------------------------------------------------------------
+
+def test_rx_async_ticket_semantics():
+    eng = TransferEngine(TransferPolicy.kernel_level())
+    dev = eng.tx(np.arange(4096, dtype=np.float32))
+    hits = []
+    t = eng.rx_async(dev, callback=hits.append)
+    out = t.wait()
+    assert t.complete and len(hits) == 1
+    flat = np.concatenate([o.reshape(-1) for o in out])
+    np.testing.assert_array_equal(flat, np.arange(4096, dtype=np.float32))
+    assert any(s.direction == "rx" for s in eng.stats)
+    eng.close()
+
+
+def test_rx_async_requires_interrupt():
+    eng = TransferEngine(TransferPolicy.user_level_polling())
+    with pytest.raises(ValueError):
+        eng.rx_async([])
