@@ -14,6 +14,7 @@ import time
 
 from benchmarks import (
     collective_overlap,
+    multichannel_sweep,
     policy_ablation,
     roofline,
     roshambo_table,
@@ -28,6 +29,7 @@ BENCHES = {
     "policy_ablation": policy_ablation.run,  # single/double x unique/blocks
     "txrx_balance": txrx_balance.run,  # loop-back scenario
     "streaming_layers": streaming_layers.run,  # NullHop model at LM scale
+    "multichannel_sweep": multichannel_sweep.run,  # striped rings + adaptive
     "collective_overlap": collective_overlap.run,  # blocks-mode collectives
     "roofline": roofline.run,  # reads dry-run artifacts
 }
@@ -66,6 +68,12 @@ def main() -> None:
             doc = streaming_layers.write_bench_json(rows)
             print(f"# wrote BENCH_transfer.json (ring/seed frames_per_s "
                   f"ratio {doc['frames_per_s_ratio_ring_over_seed']})")
+        if name == "multichannel_sweep":
+            doc = multichannel_sweep.merge_bench_json(rows)
+            mc = doc["multichannel"]
+            print(f"# merged multichannel rows into BENCH_transfer.json "
+                  f"(single-ring/multi tx us/B ratio "
+                  f"{mc['tx_us_per_byte_ratio_single_ring_over_multi']})")
 
 
 if __name__ == "__main__":

@@ -104,14 +104,18 @@ def run(n_layers: int = 8, d: int = 1024, f: int = 4096,
 
 def write_bench_json(rows: list[dict] | None = None,
                      path: pathlib.Path | str = BENCH_JSON) -> dict:
-    """Write the old-vs-new transfer comparison to BENCH_transfer.json."""
+    """Write the old-vs-new transfer comparison to BENCH_transfer.json,
+    preserving sections other benchmarks merged in (e.g. ``multichannel``
+    from benchmarks/multichannel_sweep.py)."""
     rows = rows if rows is not None else run()
     seed = min((r for r in rows if r["path"] == "seed-pack"
                 and r["policy"].startswith("interrupt")),
                key=lambda r: r["frame_ms"])
     ring = min((r for r in rows if r["path"] == "staged-ring"),
                key=lambda r: r["frame_ms"])
-    doc = {
+    path = pathlib.Path(path)
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    doc.update({
         "bench": "streaming_layers",
         "payload_bytes_per_layer": ring["bytes_per_layer"],
         "rows": rows,
@@ -121,8 +125,8 @@ def write_bench_json(rows: list[dict] | None = None,
             seed["tx_us_per_byte"] / max(ring["tx_us_per_byte"], 1e-12), 3),
         "frames_per_s_ratio_ring_over_seed": round(
             ring["frames_per_s"] / max(seed["frames_per_s"], 1e-12), 3),
-    }
-    pathlib.Path(path).write_text(json.dumps(doc, indent=2) + "\n")
+    })
+    path.write_text(json.dumps(doc, indent=2) + "\n")
     return doc
 
 

@@ -12,4 +12,7 @@ python -m pytest -x -q
 echo "== smoke: transfer_sweep --quick =="
 python benchmarks/transfer_sweep.py --quick --iters 2
 
+echo "== smoke: multichannel_sweep --quick =="
+python benchmarks/multichannel_sweep.py --quick
+
 echo "CI OK"

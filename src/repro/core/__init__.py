@@ -5,6 +5,8 @@ management (polling / scheduled / interrupt), buffering (single / double),
 partitioning (unique / blocks) — at every memory boundary of a TPU system:
 
 - host <-> device  : :mod:`repro.core.transfer` (measured on this machine)
+- multi-channel    : :mod:`repro.core.channels` (striped rings + adaptive
+                     cost-model policy, the NEURAghe/ZynqNet lesson)
 - HBM  <-> VMEM    : :mod:`repro.kernels` grids parameterized by the policy
 - chip <-> chip    : :mod:`repro.core.pipeline_collectives` (blocks-mode rings)
 - per-layer stream : :mod:`repro.core.streaming` (the NullHop execution model)
@@ -20,5 +22,12 @@ from repro.core.transfer import (  # noqa: F401
     TransferPolicy,
     TransferEngine,
     TransferStats,
+)
+from repro.core.channels import (  # noqa: F401
+    ChannelGroup,
+    ChannelPlan,
+    StagingPool,
+    calibrate_transfer,
+    plan_channels,
 )
 from repro.core.cost_model import TransferCostModel  # noqa: F401

@@ -1,0 +1,506 @@
+"""Multi-channel transfer rings + cost-model-adaptive policy selection.
+
+The paper's single AXI-DMA engine tops out well below the bus limit; NEURAghe
+and ZynqNet both reach peak PS<->PL throughput only by spreading one logical
+stream across *multiple* DMA channels and sizing blocks to the measured
+fixed-overhead/per-byte crossover. This module is that lesson at host<->device
+scale:
+
+:class:`ChannelGroup`
+    Shards one logical TX/RX across N :class:`~repro.core.transfer.
+    TransferEngine` descriptor rings ("channels"). TX stripes the flat
+    payload into N contiguous byte ranges (bytes-balanced, zero-copy views)
+    and issues them concurrently, one ring per channel; RX spreads device
+    arrays over the channels greedily by byte load. Chunk order is preserved
+    (stripes are contiguous and concatenated in channel order), so
+    :func:`~repro.core.transfer.reassemble_chunks` and
+    :meth:`~repro.core.transfer.StagedLayout.unpack` work unchanged — a
+    ChannelGroup duck-types a TransferEngine everywhere the executors care
+    (``policy`` / ``layouts`` / ``tx`` / ``rx`` / ``tx_async`` / ``rx_async``
+    / ``close`` / ``summary``). All channels target one device by default —
+    stripes must share a device to be concatenated back into one array —
+    and two engines on one CPU device still win: each owns a
+    completion-worker pool, so two stripes memcpy concurrently. Pass
+    ``devices=`` explicitly to stripe across distinct devices (consumers
+    must then be device-aware).
+
+:class:`StagingPool`
+    Size-classed free list of staging buffers shared by every channel's
+    :class:`~repro.core.transfer.LayoutCache`, so striped
+    :class:`~repro.core.transfer.StagedLayout` slots recycle allocations on
+    shape changes instead of reallocating per frame.
+
+:func:`calibrate_transfer` / :func:`plan_channels`
+    The adaptive policy chooser: a short TX sweep at construction fits the
+    paper's two-parameter model ``t(n) = t0 + n/BW``
+    (:class:`~repro.core.cost_model.TransferCostModel`), and the plan derives
+    ``block_bytes`` (the t0*BW crossover), ``ring_depth`` (enough slots to
+    cover the stripe) and the channel count (stripe only while each stripe
+    still amortizes its fixed overhead) instead of static policy constants.
+    :meth:`ChannelGroup.auto` wires the whole thing together.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.cost_model import TransferCostModel
+from repro.core.transfer import (
+    Buffering,
+    LayoutCache,
+    Management,
+    Partitioning,
+    StagedLayout,
+    Ticket,
+    TransferEngine,
+    TransferPolicy,
+    TransferStats,
+)
+
+_MIN_STRIPE_BYTES = 1 << 20  # below this a second channel costs more than t0
+_CAL_SIZES = (16 << 10, 128 << 10, 1 << 20, 8 << 20)
+_OVERHEAD_AMORT = 8.0  # a stripe must be worth >= this many t0's of wire time
+
+
+# ---------------------------------------------------------------------------
+# Shared staging-buffer pool
+# ---------------------------------------------------------------------------
+
+class StagingPool:
+    """Size-classed (power-of-two) free list of reusable staging buffers.
+
+    Shared across the layout caches of a :class:`ChannelGroup` so a layout
+    eviction (shape change between frames) returns its buffer for the next
+    layout of a similar size instead of hitting the allocator."""
+
+    def __init__(self) -> None:
+        self._free: dict[int, list[np.ndarray]] = {}
+        self._lock = threading.Lock()
+        self.allocations = 0
+        self.reuses = 0
+
+    @staticmethod
+    def _size_class(nbytes: int) -> int:
+        return 1 << max(12, int(nbytes - 1).bit_length())
+
+    def acquire(self, nbytes: int) -> np.ndarray:
+        sc = self._size_class(max(nbytes, 1))
+        with self._lock:
+            lst = self._free.get(sc)
+            if lst:
+                self.reuses += 1
+                return lst.pop()
+            self.allocations += 1
+        return np.empty(sc, np.uint8)
+
+    def release(self, buf: np.ndarray) -> None:
+        with self._lock:
+            self._free.setdefault(buf.nbytes, []).append(buf)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive policy chooser
+# ---------------------------------------------------------------------------
+
+def calibrate_transfer(device: jax.Device | None = None,
+                       sizes: Sequence[int] = _CAL_SIZES,
+                       repeats: int = 3) -> TransferCostModel:
+    """Short calibration sweep: measure TX at a few payload sizes and fit
+    ``t(n) = t0 + n/BW``. Runs once at group construction (~tens of ms).
+
+    Under load the samples can come back non-monotonic and the least-squares
+    slope degenerates (bw blows past any physical link). When that happens,
+    fall back to the two-point estimate: bandwidth from the largest sample
+    (t0 folded in, so it *under*-estimates — safe for planning) and overhead
+    from the smallest."""
+    device = device or jax.devices()[0]
+    ns, ts = [], []
+    for nbytes in sizes:
+        x = np.empty(nbytes, np.uint8)
+        best = float("inf")
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            jax.device_put(x, device).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        ns.append(nbytes)
+        ts.append(best)
+    model = TransferCostModel.fit(np.asarray(ns, np.float64),
+                                  np.asarray(ts, np.float64))
+    bw_direct = ns[-1] / max(ts[-1], 1e-9)
+    if model.bw_Bps > 10.0 * bw_direct or model.t0_s >= 0.5 * ts[-1]:
+        t0_direct = max(ts[0] - ns[0] / bw_direct, 1e-7)
+        model = TransferCostModel(t0_s=t0_direct, bw_Bps=bw_direct)
+    return model
+
+
+@dataclass(frozen=True)
+class ChannelPlan:
+    """Fitted policy point: what the cost model chose and why."""
+
+    n_channels: int
+    policy: TransferPolicy
+    model: TransferCostModel
+    payload_bytes: int
+
+    @property
+    def tag(self) -> str:
+        return f"adaptive-{self.n_channels}ch-{self.policy.tag}"
+
+    def row(self) -> dict:
+        """BENCH-friendly summary of the fitted choice."""
+        return {
+            "n_channels": self.n_channels,
+            "block_bytes": self.policy.block_bytes,
+            "ring_depth": self.policy.depth,
+            "partitioning": self.policy.partitioning.value,
+            "fit_t0_us": round(self.model.t0_s * 1e6, 3),
+            "fit_gbps": round(self.model.bw_Bps / 1e9, 3),
+            "payload_bytes": self.payload_bytes,
+        }
+
+
+def plan_channels(payload_bytes: int, *,
+                  model: TransferCostModel | None = None,
+                  device: jax.Device | None = None,
+                  max_channels: int = 4,
+                  min_stripe_bytes: int = _MIN_STRIPE_BYTES,
+                  completion_workers: int = 2) -> ChannelPlan:
+    """Pick channel count / ring depth / block size from the fitted model.
+
+    - channel count: stripe as wide as ``max_channels`` allows while (a)
+      the host has a copy engine (core) per channel — channels beyond that
+      just thrash the scheduler, the NEURAghe rule of one stream per HP
+      port — and (b) each stripe's wire time still amortizes the fixed
+      overhead (``stripe/BW >= _OVERHEAD_AMORT * t0``) and stays >= the
+      minimum stripe;
+    - block size: at least the ``t0*BW`` crossover (the paper's 'longer
+      enough packets' criterion), and large enough that a stripe splits
+      into only ~2x``completion_workers`` chunks — enough chunks to
+      double-buffer every worker, few enough to amortize per-chunk setup;
+    - ring depth: enough slots to cover the stripe's chunk count, clamped
+      to [2, 8] (depth 1 forfeits overlap; past ~8 slots buy nothing but
+      staging memory).
+    """
+    if model is None:
+        model = calibrate_transfer(device)
+    payload_bytes = max(int(payload_bytes), 1)
+    amortized = model.bw_Bps * model.t0_s * _OVERHEAD_AMORT
+    n = min(
+        max_channels,
+        max(1, os.cpu_count() or 1),
+        max(1, int(payload_bytes / max(amortized, 1.0))),
+        max(1, payload_bytes // max(min_stripe_bytes, 1)),
+    )
+    stripe = math.ceil(payload_bytes / n)
+    target_chunks = 2 * max(1, completion_workers)
+    block = max(model.optimal_block_bytes(stripe),
+                math.ceil(stripe / target_chunks))
+    n_chunks = math.ceil(stripe / block)
+    if n_chunks <= 1:
+        policy = TransferPolicy(Management.INTERRUPT, Buffering.RING,
+                                Partitioning.UNIQUE, block_bytes=block,
+                                ring_depth=2,
+                                completion_workers=completion_workers)
+    else:
+        depth = max(2, min(8, n_chunks))
+        policy = TransferPolicy(Management.INTERRUPT, Buffering.RING,
+                                Partitioning.BLOCKS, block_bytes=block,
+                                ring_depth=depth,
+                                completion_workers=completion_workers)
+    return ChannelPlan(n_channels=n, policy=policy, model=model,
+                       payload_bytes=payload_bytes)
+
+
+# ---------------------------------------------------------------------------
+# The channel group
+# ---------------------------------------------------------------------------
+
+class ChannelGroup:
+    """N descriptor-ring engines serving one logical transfer stream.
+
+    Duck-types :class:`TransferEngine` for the executors: same ``policy`` /
+    ``layouts`` / ``tx`` / ``rx`` / ``tx_async`` / ``rx_async`` / ``close``
+    surface, with payloads striped across the member rings."""
+
+    def __init__(self, policy: TransferPolicy | None = None, *,
+                 n_channels: int = 2,
+                 devices: Sequence[jax.Device] | None = None,
+                 pool: StagingPool | None = None,
+                 min_stripe_bytes: int = _MIN_STRIPE_BYTES,
+                 plan: ChannelPlan | None = None):
+        policy = policy or TransferPolicy.kernel_level_ring()
+        if policy.management is not Management.INTERRUPT:
+            raise ValueError(
+                "ChannelGroup stripes via tx_async/rx_async and therefore "
+                f"requires INTERRUPT management (got {policy.tag})")
+        if n_channels < 1:
+            raise ValueError(f"n_channels must be >= 1, got {n_channels}")
+        if devices is None:
+            # all channels target ONE device by default: consumers
+            # concatenate the striped chunks into a single array
+            # (reassemble_chunks / StagedLayout.unpack), which requires the
+            # chunks to share a device. This is the multi-channel-DMA-on-
+            # one-port analogue. Striping across distinct devices needs an
+            # explicit ``devices=`` and device-aware consumers.
+            devices = [jax.devices()[0]] * n_channels
+        self.policy = policy
+        self.plan = plan
+        self.n_channels = n_channels
+        self.min_stripe_bytes = max(int(min_stripe_bytes), 1)
+        self.staging_pool = pool or StagingPool()
+        self.layouts = LayoutCache(pool=self.staging_pool)
+        self.engines = [TransferEngine(policy, device=d) for d in devices]
+        self.stats: list[TransferStats] = []
+        self._stats_lock = threading.Lock()
+        self._rr = 0  # round-robin cursor for sub-stripe payloads
+        self._joiners: list[threading.Thread] = []
+
+    # -- lifecycle ----------------------------------------------------------
+    @classmethod
+    def auto(cls, payload_bytes: int, *,
+             max_channels: int = 4,
+             devices: Sequence[jax.Device] | None = None,
+             model: TransferCostModel | None = None,
+             pool: StagingPool | None = None) -> "ChannelGroup":
+        """Calibrate, fit, and build the group the cost model recommends."""
+        device = devices[0] if devices else None
+        plan = plan_channels(payload_bytes, model=model, device=device,
+                             max_channels=max_channels)
+        return cls(plan.policy, n_channels=plan.n_channels, devices=devices,
+                   pool=pool, plan=plan)
+
+    def close(self) -> None:
+        # joiners first (they wait on engine tickets, which need live pools)
+        with self._stats_lock:
+            joiners, self._joiners = self._joiners, []
+        for t in joiners:
+            t.join(timeout=5.0)
+        for eng in self.engines:
+            eng.close()
+
+    def __enter__(self) -> "ChannelGroup":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- bookkeeping ---------------------------------------------------------
+    @property
+    def tag(self) -> str:
+        return f"{self.n_channels}ch-{self.policy.tag}"
+
+    @property
+    def max_inflight(self) -> int:
+        return max((e.max_inflight for e in self.engines), default=0)
+
+    def _record(self, stats: TransferStats) -> None:
+        with self._stats_lock:
+            self.stats.append(stats)
+
+    def _next_channel(self) -> TransferEngine:
+        eng = self.engines[self._rr % self.n_channels]
+        self._rr += 1
+        return eng
+
+    def _delegated(self, direction: str, nbytes: int, n_items: int,
+                   callback: Callable[[list], None] | None):
+        """Completion callback for single-channel (sub-stripe) transfers:
+        records a group-level stat so ``summary()`` sees small transfers
+        too, then chains the caller's callback."""
+        t0 = time.perf_counter()
+
+        def cb(results: list) -> None:
+            self._record(TransferStats(nbytes, time.perf_counter() - t0,
+                                       n_items, direction, self.tag))
+            if callback is not None:
+                callback(results)
+
+        return cb
+
+    # -- striping ------------------------------------------------------------
+    def _stripes(self, flat: np.ndarray) -> list[np.ndarray]:
+        """Contiguous, bytes-balanced element ranges of ``flat`` — views, so
+        striping itself copies nothing. Payloads below 2 minimum stripes use
+        a single channel (a second channel would cost more than its t0)."""
+        n = self.n_channels
+        if flat.nbytes >= 2 * self.min_stripe_bytes:
+            n = min(n, max(1, flat.nbytes // self.min_stripe_bytes))
+        else:
+            n = 1
+        if n == 1:
+            return [flat]
+        return [s for s in np.array_split(flat, n) if s.size]
+
+    def _join(self, issue: list[Callable[[], Ticket]],
+              assemble: Callable[[list], list],
+              direction: str, nbytes: int, n_items: int,
+              master: threading.Event, ticket_out: list,
+              callback: Callable[[list], None] | None,
+              t0: float) -> None:
+        """Coordinator: issue every channel's transfer from its OWN thread
+        (a full ring back-pressures its submitter, so issuing serially from
+        one thread would serialize the channels), then wait and reassemble
+        in channel order."""
+        n = len(issue)
+        tickets: list = [None] * n
+        issue_errs: list = [None] * n
+
+        def issue_one(i: int) -> None:
+            try:
+                tickets[i] = issue[i]()
+            except BaseException as e:  # noqa: BLE001
+                issue_errs[i] = e
+
+        issuers = [threading.Thread(target=issue_one, args=(i,), daemon=True)
+                   for i in range(1, n)]
+        for t in issuers:
+            t.start()
+        issue_one(0)
+        for t in issuers:
+            t.join()
+
+        per_channel: list = [None] * n
+        err: BaseException | None = next(
+            (e for e in issue_errs if e is not None), None)
+        for i, ticket in enumerate(tickets):
+            if ticket is None:
+                continue
+            try:
+                per_channel[i] = ticket.wait()
+            except BaseException as e:  # noqa: BLE001 — surfaced at wait()
+                err = err or e
+        if err is not None:
+            ticket_out.append(err)
+        else:
+            results = assemble(per_channel)
+            self._record(TransferStats(nbytes, time.perf_counter() - t0,
+                                       n_items, direction, self.tag))
+            ticket_out.append(results)
+            if callback is not None:
+                try:
+                    callback(results)
+                except BaseException as e:  # noqa: BLE001
+                    ticket_out[0] = e
+        master.set()
+
+    def _spawn_joiner(self, issue, assemble, direction, nbytes, n_items,
+                      master, ticket_out, callback, t0) -> None:
+        # a few short-lived threads per *striped* transfer (~50 us spawn vs
+        # the >= 2*min_stripe_bytes transfer they issue/join); sub-stripe
+        # traffic takes the delegated path and never pays this.
+        t = threading.Thread(
+            target=self._join,
+            args=(issue, assemble, direction, nbytes, n_items, master,
+                  ticket_out, callback, t0),
+            daemon=True,
+        )
+        with self._stats_lock:
+            self._joiners = [j for j in self._joiners if j.is_alive()]
+            self._joiners.append(t)
+        t.start()
+
+    # -- TX -------------------------------------------------------------------
+    def tx_async(self, host_array: np.ndarray,
+                 callback: Callable[[list], None] | None = None,
+                 layout: StagedLayout | None = None) -> Ticket:
+        """Striped asynchronous TX: each stripe rides its own channel's ring.
+
+        The combined ticket completes when every channel drained; ``layout``
+        (when given) is marked busy for the whole group transfer before any
+        descriptor is submitted."""
+        arr = np.asarray(host_array)
+        flat = arr.reshape(-1)
+        stripes = self._stripes(flat)
+        if len(stripes) == 1:
+            # sub-stripe payload: no striping win — round-robin the channels
+            # so concurrent small transfers (serving tokens) still spread.
+            return self._next_channel().tx_async(
+                flat, callback=self._delegated("tx", int(arr.nbytes), 1,
+                                               callback),
+                layout=layout)
+        master = threading.Event()
+        ticket_out: list = []
+        t0 = time.perf_counter()
+        if layout is not None:
+            layout._busy = master  # busy BEFORE submit (whole-group window)
+        issue = [lambda eng=eng, s=s: eng.tx_async(s)
+                 for eng, s in zip(self.engines, stripes)]
+
+        def assemble(per_channel: list) -> list:
+            # stripes are contiguous in channel order: concatenating the
+            # chunk lists reproduces the flat payload for reassemble_chunks.
+            out: list = []
+            for chunks in per_channel:
+                out.extend(chunks)
+            return out
+
+        self._spawn_joiner(issue, assemble, "tx", int(arr.nbytes),
+                           len(stripes), master, ticket_out, callback, t0)
+        return Ticket(master, ticket_out)
+
+    def tx(self, host_array: np.ndarray) -> list[jax.Array]:
+        """Synchronous striped TX; returns the ordered device chunk list."""
+        return self.tx_async(host_array).wait()
+
+    # -- RX -------------------------------------------------------------------
+    def rx_async(self, device_arrays: Sequence[jax.Array],
+                 callback: Callable[[list], None] | None = None) -> Ticket:
+        """Striped asynchronous RX: arrays spread over channels greedily by
+        byte load; results come back in the original order."""
+        arrays = list(device_arrays)
+        nbytes = sum(int(a.size) * a.dtype.itemsize for a in arrays)
+        if len(arrays) <= 1 or nbytes < 2 * self.min_stripe_bytes:
+            return self._next_channel().rx_async(
+                arrays, callback=self._delegated("rx", nbytes, len(arrays),
+                                                 callback))
+        # greedy least-loaded assignment (bytes-balanced striping)
+        assign: list[list[int]] = [[] for _ in range(self.n_channels)]
+        loads = [0] * self.n_channels
+        for i, a in enumerate(arrays):
+            c = min(range(self.n_channels), key=loads.__getitem__)
+            assign[c].append(i)
+            loads[c] += int(a.size) * a.dtype.itemsize
+        master = threading.Event()
+        ticket_out: list = []
+        t0 = time.perf_counter()
+        used = [(c, idxs) for c, idxs in enumerate(assign) if idxs]
+        issue = [lambda c=c, idxs=idxs: self.engines[c].rx_async(
+            [arrays[i] for i in idxs]) for c, idxs in used]
+
+        def assemble(per_channel: list) -> list:
+            results: list = [None] * len(arrays)
+            for (_, idxs), outs in zip(used, per_channel):
+                for i, o in zip(idxs, outs):
+                    results[i] = o
+            return results
+
+        self._spawn_joiner(issue, assemble, "rx", nbytes, len(arrays), master,
+                           ticket_out, callback, t0)
+        return Ticket(master, ticket_out)
+
+    def rx(self, device_arrays: Sequence[jax.Array]) -> list[np.ndarray]:
+        """Synchronous striped RX; host arrays in the original order."""
+        return self.rx_async(device_arrays).wait()
+
+    # -- reporting ------------------------------------------------------------
+    def summary(self) -> dict[str, dict[str, float]]:
+        tx = [s for s in self.stats if s.direction == "tx"]
+        rx = [s for s in self.stats if s.direction == "rx"]
+
+        def agg(ss):
+            if not ss:
+                return {"us_per_byte": float("nan"), "gbps": float("nan")}
+            tot_b = sum(s.nbytes for s in ss)
+            tot_t = sum(s.wall_s for s in ss)
+            return {"us_per_byte": tot_t * 1e6 / max(tot_b, 1),
+                    "gbps": tot_b / max(tot_t, 1e-12) / 1e9}
+
+        return {"tx": agg(tx), "rx": agg(rx)}

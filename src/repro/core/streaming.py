@@ -105,12 +105,17 @@ class HostStreamingExecutor:
     *and* layer k-1's RX with layer k's compute; with POLLING everything
     serialises.
 
+    ``engine`` may be a single :class:`TransferEngine` or a
+    :class:`repro.core.channels.ChannelGroup` — the group stripes each
+    layer's payload across its member rings (multi-channel DMA), and the
+    executor code is identical because the group duck-types the engine.
+
     ``staged=False`` selects the legacy per-frame pack path (re-concatenates
     params every frame) — kept only as the measured baseline for
     ``BENCH_transfer.json``.
     """
 
-    def __init__(self, engine: TransferEngine, *, staged: bool = True):
+    def __init__(self, engine: "TransferEngine | Any", *, staged: bool = True):
         self.engine = engine
         self.staged = staged
 
@@ -141,6 +146,10 @@ class HostStreamingExecutor:
         policy = engine.policy
         timing = FrameTiming()
         x_dev, input_tx_s, input_bytes = self._tx_input(x)
+        if not layers:
+            # no layers: the frame is the transferred input itself, not None
+            host_out = engine.rx([x_dev])[0]
+            return host_out, timing
 
         layouts: list[StagedLayout] = [
             engine.layouts.get((i, name), params)
@@ -211,6 +220,9 @@ class HostStreamingExecutor:
     def _run_basic(self, layers, x, *, prefetch: bool) -> tuple[np.ndarray, FrameTiming]:
         timing = FrameTiming()
         x_dev, input_tx_s, input_bytes = self._tx_input(x)
+        if not layers:
+            host_out = self.engine.rx([x_dev])[0]
+            return host_out, timing
 
         pending: Ticket | None = None
         if prefetch and layers:

@@ -201,6 +201,7 @@ class _CompletionPool:
         )
         self._lock = threading.Lock()
         self._alive = 0
+        self._threads: list[threading.Thread] = []
         self._closed = False
 
     def _run(self) -> None:
@@ -234,16 +235,25 @@ class _CompletionPool:
                 raise RuntimeError("submit() on a closed _CompletionPool")
             self._q.put((fn, done, out))
             while self._alive < self.workers:
-                threading.Thread(target=self._run, daemon=True).start()
+                t = threading.Thread(target=self._run, daemon=True)
+                t.start()
+                self._threads.append(t)
                 self._alive += 1
+            self._threads = [t for t in self._threads if t.is_alive()]
         return done, out
 
     def close(self) -> None:
         with self._lock:
             self._closed = True
             n = self._alive
+            threads = list(self._threads)
         for _ in range(n):
             self._q.put(self._SENTINEL)
+        # join so no worker is still tearing down when the caller (possibly
+        # the interpreter at exit) proceeds — a dying worker racing runtime
+        # shutdown aborts the process from the C++ side.
+        for t in threads:
+            t.join(timeout=5.0)
 
 
 class Ticket:
@@ -313,9 +323,10 @@ class StagedLayout:
     """
 
     __slots__ = ("specs", "nbytes", "_staging", "_payload", "_busy",
-                 "_last_arrays", "pack_count", "copy_count")
+                 "_last_arrays", "pack_count", "copy_count", "_pool")
 
-    def __init__(self, arrays: Sequence[np.ndarray]):
+    def __init__(self, arrays: Sequence[np.ndarray], *,
+                 pool: "Any | None" = None):
         specs = []
         off = 0
         for a in arrays:
@@ -324,7 +335,14 @@ class StagedLayout:
             off += a.nbytes
         self.specs: tuple = tuple(specs)
         self.nbytes = off
-        self._staging = np.empty(max(off, 1), np.uint8)
+        # ``pool`` (e.g. repro.core.channels.StagingPool) recycles staging
+        # buffers across layouts, so a shape change (layout eviction) does
+        # not cost a fresh allocation on the next frame.
+        self._pool = pool
+        if pool is not None:
+            self._staging = pool.acquire(max(off, 1))
+        else:
+            self._staging = np.empty(max(off, 1), np.uint8)
         self._payload = self._staging[:off]  # stable view, identity-checkable
         self._busy: threading.Event | None = None  # set by engine on async tx
         # strong refs to the arrays staged last: identity comparison against
@@ -392,14 +410,31 @@ class StagedLayout:
             for off, shape, dtype, nb in self.specs
         ]
 
+    def release(self) -> None:
+        """Return the staging buffer to the pool; the layout is dead after.
+
+        A buffer whose transfer is still in flight is orphaned instead of
+        pooled (handing it to a new layout mid-DMA is the corruption the
+        kernel driver exists to prevent)."""
+        if self._pool is None or self._staging is None:
+            return
+        busy = self._busy
+        if busy is None or busy.is_set():
+            self._pool.release(self._staging)
+        self._staging = None
+        self._payload = None
+
 
 class LayoutCache:
     """Per-engine cache of :class:`StagedLayout` keyed by caller identity
     (layer name/index). A hit returns the SAME layout object — and therefore
-    the same preallocated staging buffer — frame after frame."""
+    the same preallocated staging buffer — frame after frame. An optional
+    staging ``pool`` is threaded into every layout so evicted layouts recycle
+    their buffers instead of leaking the allocation."""
 
-    def __init__(self) -> None:
+    def __init__(self, pool: Any | None = None) -> None:
         self._layouts: dict[Any, StagedLayout] = {}
+        self._pool = pool
         self.hits = 0
         self.misses = 0
 
@@ -408,7 +443,9 @@ class LayoutCache:
         if lay is not None and lay.matches(arrays):
             self.hits += 1
             return lay
-        lay = StagedLayout(arrays)
+        if lay is not None:
+            lay.release()  # stale shapes: recycle the old staging buffer
+        lay = StagedLayout(arrays, pool=self._pool)
         self._layouts[key] = lay
         self.misses += 1
         return lay
@@ -447,7 +484,12 @@ class TransferEngine:
         # descriptor ring: one completion event per staging slot
         self._buffers_busy: list[threading.Event | None] = [None] * policy.depth
         self._buf_idx = 0
+        self._ring_lock = threading.Lock()
+        self._slot_held = [False] * policy.depth
+        self._inflight = 0
+        self.slot_collisions = 0  # two concurrent holders of one slot (bug)
         self.max_inflight = 0  # high-water mark of concurrent descriptors
+        self.inflight_hwm = 0  # high-water mark of concurrently HELD slots
         self._stats_lock = threading.Lock()
         self._pool: _CompletionPool | None = None
         # SCHEDULED mode needs a scheduler; lazily import to avoid cycle.
@@ -476,21 +518,45 @@ class TransferEngine:
         self.close()
 
     # -- staging-ring safety (kernel-driver protection semantics) ----------
-    def _acquire_buffer(self) -> int:
-        n_buf = len(self._buffers_busy)
-        idx = self._buf_idx % n_buf
-        busy = self._buffers_busy[idx]
-        if busy is not None and not busy.is_set():
-            if self.policy.management is Management.INTERRUPT:
-                busy.wait()  # kernel driver: safe, waits for completion
-            else:
+    def _acquire_buffer(self) -> tuple[int, threading.Event]:
+        """Reserve the next descriptor-ring slot; returns ``(idx, release)``.
+
+        The caller owns the slot until it fires ``release`` (via
+        :meth:`_release_buffer`). Reservation installs a fresh completion
+        event under the ring lock *before* waiting on the previous holder, so
+        concurrent acquirers of the same slot chain FIFO on each other's
+        events instead of racing ``_buf_idx`` / colliding on a slot.
+        """
+        with self._ring_lock:
+            idx = self._buf_idx % len(self._buffers_busy)
+            prev = self._buffers_busy[idx]
+            if (prev is not None and not prev.is_set()
+                    and self.policy.management is not Management.INTERRUPT):
                 raise BufferInFlightError(
                     f"staging slot {idx} reused before completion "
                     f"(policy={self.policy.tag}); use INTERRUPT management or "
                     f"a deeper ring"
                 )
-        self._buf_idx += 1
-        return idx
+            release = threading.Event()
+            self._buffers_busy[idx] = release
+            self._buf_idx += 1
+        if prev is not None:
+            prev.wait()  # kernel driver: safe, waits for completion
+        with self._ring_lock:
+            if self._slot_held[idx]:
+                self.slot_collisions += 1
+            self._slot_held[idx] = True
+            self._inflight += 1
+            self.inflight_hwm = max(self.inflight_hwm, self._inflight)
+            self.max_inflight = max(self.max_inflight, self._inflight)
+        return idx, release
+
+    def _release_buffer(self, idx: int, release: threading.Event) -> None:
+        """Free a ring slot; wakes the next acquirer chained on ``release``."""
+        with self._ring_lock:
+            self._slot_held[idx] = False
+            self._inflight -= 1
+        release.set()
 
     def _record(self, stats: TransferStats) -> None:
         with self._stats_lock:
@@ -534,10 +600,13 @@ class TransferEngine:
             # user-level polling: issue, then spin until ready, per chunk.
             results = []
             for payload, direction in items:
-                self._acquire_buffer()
-                r = self._one(payload, direction)
-                if direction == "tx":
-                    r.block_until_ready()
+                idx, release = self._acquire_buffer()
+                try:
+                    r = self._one(payload, direction)
+                    if direction == "tx":
+                        r.block_until_ready()
+                finally:
+                    self._release_buffer(idx, release)
                 results.append(r)
             return results
 
@@ -548,11 +617,14 @@ class TransferEngine:
 
             def make_task(i, payload, direction):
                 def task():
-                    self._acquire_buffer()
-                    r = self._one(payload, direction)
-                    if direction == "tx":
-                        r.block_until_ready()
-                    results[i] = r
+                    idx, release = self._acquire_buffer()
+                    try:
+                        r = self._one(payload, direction)
+                        if direction == "tx":
+                            r.block_until_ready()
+                        results[i] = r
+                    finally:
+                        self._release_buffer(idx, release)
 
                 return task
 
@@ -563,7 +635,9 @@ class TransferEngine:
 
         # INTERRUPT: stage chunks onto the descriptor ring. Up to ``depth``
         # descriptors are in flight at once; chunk k+depth can only be staged
-        # after chunk k's completion fires (ring reuse rule).
+        # after chunk k's completion fires (ring reuse rule). Slot release
+        # happens on the completion worker, so acquisition (which may chain
+        # on a prior holder) never waits on work that cannot progress.
         pool = self._completion_pool()
         depth = self.policy.depth
         tickets: list[Ticket | None] = [None] * len(items)
@@ -573,11 +647,15 @@ class TransferEngine:
             while len(inflight) >= depth:
                 j = inflight.pop(0)
                 results[j] = tickets[j].wait()
-            idx = self._acquire_buffer()
-            done, out = pool.submit(
-                lambda p=payload, d=direction: self._one(p, d)
-            )
-            self._buffers_busy[idx] = done
+            idx, release = self._acquire_buffer()
+
+            def work(p=payload, d=direction, idx=idx, release=release):
+                try:
+                    return self._one(p, d)
+                finally:
+                    self._release_buffer(idx, release)
+
+            done, out = pool.submit(work)
             tickets[i] = Ticket(done, out)
             inflight.append(i)
             self.max_inflight = max(self.max_inflight, len(inflight))
@@ -586,6 +664,92 @@ class TransferEngine:
         return results
 
     # -- async API (INTERRUPT only): returns a ticket, caller is "interrupted"
+    def _submit_async(self, payloads: list, direction: str, nbytes: int,
+                      callback: Callable[[list], None] | None,
+                      layout: StagedLayout | None) -> Ticket:
+        """Stage ``payloads`` as ring descriptors, one per chunk.
+
+        Ring slots are acquired on the *caller* thread, so a full ring
+        back-pressures the submitter (the AXI-DMA enqueue semantics) and the
+        in-flight descriptor count stays <= ``policy.depth`` even across
+        concurrent async callers — the completion workers themselves never
+        wait on a slot, so slot hand-off always makes progress. The ticket's
+        master event fires after the LAST chunk completes; any chunk error is
+        re-raised from ``Ticket.wait``.
+
+        ``callback`` runs ON a completion worker. Like an IRQ handler, it
+        must not issue transfers on the same engine (acquisition can block
+        the worker on a slot only this pool can release — self-deadlock);
+        hand follow-up transfers to another thread via the ticket instead."""
+        pool = self._completion_pool()
+        master = threading.Event()
+        ticket_out: list = []
+        results: list = [None] * len(payloads)
+        # t0 is stamped when the FIRST chunk starts executing on a worker,
+        # so recorded TransferStats measure the transfer itself — not the
+        # caller's ring back-pressure or queue wait (keeps us/byte
+        # comparable with the synchronous paths across PRs).
+        state = {"remaining": len(payloads), "error": None, "t0": None}
+        state_lock = threading.Lock()
+
+        # Mark the staging buffer busy BEFORE any descriptor is submitted: a
+        # re-pack racing this call could otherwise slip between submit() and
+        # the flag assignment and corrupt the in-flight payload.
+        if layout is not None:
+            layout._busy = master
+
+        if not payloads:
+            ticket_out.append(results)
+            master.set()
+            return Ticket(master, ticket_out)
+
+        def finish_one(err: BaseException | None) -> None:
+            with state_lock:
+                if err is not None and state["error"] is None:
+                    state["error"] = err
+                state["remaining"] -= 1
+                last = state["remaining"] == 0
+            if not last:
+                return
+            first_err = state["error"]
+            if first_err is not None:
+                ticket_out.append(first_err)
+            else:
+                wall = time.perf_counter() - (state["t0"]
+                                              or time.perf_counter())
+                self._record(TransferStats(
+                    nbytes, wall, len(payloads), direction,
+                    self.policy.tag))
+                ticket_out.append(results)
+                if callback is not None:
+                    try:
+                        callback(results)
+                    except BaseException as e:  # surfaced at wait()
+                        ticket_out[0] = e
+            master.set()
+
+        for i, payload in enumerate(payloads):
+            idx, release = self._acquire_buffer()
+
+            def work(i=i, p=payload, idx=idx, release=release):
+                err = None
+                with state_lock:
+                    if state["t0"] is None:
+                        state["t0"] = time.perf_counter()
+                try:
+                    r = self._one(p, direction)
+                    if direction == "tx":
+                        r.block_until_ready()
+                    results[i] = r
+                except BaseException as e:
+                    err = e
+                finally:
+                    self._release_buffer(idx, release)
+                    finish_one(err)
+
+            pool.submit(work)
+        return Ticket(master, ticket_out)
+
     def tx_async(self, host_array: np.ndarray,
                  callback: Callable[[list], None] | None = None,
                  layout: StagedLayout | None = None) -> Ticket:
@@ -594,30 +758,10 @@ class TransferEngine:
         re-pack raises :class:`BufferInFlightError`."""
         if self.policy.management is not Management.INTERRUPT:
             raise ValueError("tx_async requires INTERRUPT management")
-        pool = self._completion_pool()
-        chunks = _split(np.asarray(host_array), self.policy)
-        nbytes = int(np.asarray(host_array).nbytes)
-
-        def work():
-            # NB: runs ON a completion worker — execute chunks inline
-            # (re-entering the descriptor queue here could self-deadlock,
-            # like an IRQ handler waiting on its own IRQ).
-            t0 = time.perf_counter()
-            out = []
-            for c in chunks:
-                r = jax.device_put(c, self.device)
-                r.block_until_ready()
-                out.append(r)
-            self._record(TransferStats(nbytes, time.perf_counter() - t0,
-                                       len(chunks), "tx", self.policy.tag))
-            if callback is not None:
-                callback(out)
-            return out
-
-        done, out = pool.submit(work)
-        if layout is not None:
-            layout._busy = done
-        return Ticket(done, out)
+        arr = np.asarray(host_array)
+        chunks = _split(arr, self.policy)
+        return self._submit_async(chunks, "tx", int(arr.nbytes), callback,
+                                  layout)
 
     def rx_async(self, device_arrays: Sequence[jax.Array],
                  callback: Callable[[list], None] | None = None) -> Ticket:
@@ -626,21 +770,9 @@ class TransferEngine:
         ndarray list."""
         if self.policy.management is not Management.INTERRUPT:
             raise ValueError("rx_async requires INTERRUPT management")
-        pool = self._completion_pool()
         arrays = list(device_arrays)
         nbytes = sum(int(a.size) * a.dtype.itemsize for a in arrays)
-
-        def work():
-            t0 = time.perf_counter()
-            out = [np.asarray(jax.device_get(a)) for a in arrays]
-            self._record(TransferStats(nbytes, time.perf_counter() - t0,
-                                       len(arrays), "rx", self.policy.tag))
-            if callback is not None:
-                callback(out)
-            return out
-
-        done, out = pool.submit(work)
-        return Ticket(done, out)
+        return self._submit_async(arrays, "rx", nbytes, callback, None)
 
     # -- reporting -----------------------------------------------------------
     def summary(self) -> dict[str, float]:

@@ -13,6 +13,13 @@ under a :class:`TransferPolicy`:
               device batches ready (single/double buffer are rings of depth
               1/2) — the kernel-driver mode, and the right default for
               training (stage batch k+1..k+depth during step k).
+
+When a transfer ``engine`` (a :class:`~repro.core.transfer.TransferEngine`
+or multi-channel :class:`~repro.core.channels.ChannelGroup`) is supplied and
+no shardings are requested, batches stage through its cached
+:class:`~repro.core.transfer.StagedLayout` — one reused staging buffer per
+batch shape, measured TX stats, and (for a group) the batch payload striped
+across channels.
 """
 
 from __future__ import annotations
@@ -80,10 +87,12 @@ class StagedPipeline:
     """Iterator of device-resident batches under a transfer policy."""
 
     def __init__(self, source: SyntheticLMSource, policy: TransferPolicy,
-                 shardings: Any | None = None, start_step: int = 0):
+                 shardings: Any | None = None, start_step: int = 0,
+                 engine: Any | None = None):
         self.source = source
         self.policy = policy
         self.shardings = shardings
+        self.engine = engine  # TransferEngine or ChannelGroup (optional)
         self.step = start_step
         # prefetch window = the policy's descriptor-ring depth (SINGLE=1,
         # DOUBLE=2, RING=N): batch k+depth stages while step k runs.
@@ -100,6 +109,15 @@ class StagedPipeline:
     def _put_device(self, host_batch: dict) -> Any:
         if self.shardings is not None:
             return jax.device_put(host_batch, self.shardings)
+        if self.engine is not None:
+            # stage through the engine's cached layout: the staging buffer
+            # is reused every step (same batch shapes), the TX is measured,
+            # and a ChannelGroup stripes it across its rings.
+            keys = sorted(host_batch)
+            arrays = [np.ascontiguousarray(host_batch[k]) for k in keys]
+            lay = self.engine.layouts.get(("batch", tuple(keys)), arrays)
+            dev = lay.unpack(self.engine.tx(lay.pack(arrays)))
+            return dict(zip(keys, dev))
         return jax.device_put(host_batch)
 
     def _prefetch_loop(self) -> None:

@@ -1,1 +1,2 @@
 from repro.serve.engine import ServeConfig, ServingEngine  # noqa: F401
+from repro.serve.continuous import ContinuousBatchingEngine, Request  # noqa: F401

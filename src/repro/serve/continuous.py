@@ -7,6 +7,13 @@ is the serving-side incarnation of the paper's scheduled/interrupt modes —
 the engine never blocks the whole batch on one request's completion, just
 as the kernel driver never blocks the PS on one DMA.
 
+Token movement rides the same :class:`~repro.core.transfer.TransferEngine`
+(or :class:`~repro.core.channels.ChannelGroup`) as the rest of the system:
+prompt admission is a measured TX, each decode step's token batch is a
+measured RX (issued ``rx_async`` under INTERRUPT so the device->host copy
+overlaps the host-side slot bookkeeping) — the paper's balanced TX/RX goal
+applied to serving, with per-transfer stats in ``engine.stats``.
+
 Supports the KV-cache families (dense / moe / vlm); the cache carries
 per-slot lengths [L, B] so heterogeneous requests decode correctly in one
 batch (the attention layer handles vector cache lengths).
@@ -22,6 +29,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.transfer import (
+    Management,
+    TransferEngine,
+    TransferPolicy,
+    reassemble_chunks,
+)
 from repro.models.api import Model
 
 
@@ -56,12 +69,19 @@ class ContinuousBatchingEngine:
     """Admits requests into B decode slots; one jitted step serves all."""
 
     def __init__(self, model: Model, params: Any, *, n_slots: int = 4,
-                 max_seq: int = 256, eos_token: int = -1):
+                 max_seq: int = 256, eos_token: int = -1,
+                 transfer: "TransferEngine | Any | None" = None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.eos = eos_token
+        # token movement (prompt TX, decoded-token RX) on a real engine —
+        # callers may hand in a shared TransferEngine or ChannelGroup, which
+        # close() then leaves alone (we only close what we created).
+        self._owns_transfer = transfer is None
+        self.transfer = transfer or TransferEngine(
+            TransferPolicy.kernel_level())
         if model.cfg.family in ("ssm", "hybrid"):
             raise NotImplementedError(
                 "continuous batching currently supports KV-cache families")
@@ -94,9 +114,11 @@ class ContinuousBatchingEngine:
             if self.slots[slot] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
+            prompt = np.ascontiguousarray(req.prompt[None], dtype=np.int32)
+            prompt_dev = reassemble_chunks(
+                self.transfer.tx(prompt)).reshape(prompt.shape)
             logits, one_cache = self._prefill1(
-                self.params, {"tokens": jnp.asarray(req.prompt[None],
-                                                    jnp.int32)})
+                self.params, {"tokens": prompt_dev})
             first = int(np.asarray(
                 logits[0, -1, : self.model.cfg.vocab].argmax(-1)))
             req.tokens.append(first)
@@ -126,19 +148,32 @@ class ContinuousBatchingEngine:
             return 0
         logits, self.cache = self._decode(self.params, self.tokens,
                                           self.cache)
-        nxt = np.asarray(logits[:, -1, : self.model.cfg.vocab].argmax(-1))
+        tok_dev = logits[:, -1, : self.model.cfg.vocab].argmax(-1)
+        # next-step input stays device-resident; only the bookkeeping copy
+        # crosses back to the host, as a measured RX on the engine. Under
+        # INTERRUPT it rides a completion worker while the next-step input
+        # prep dispatches.
+        ticket = (self.transfer.rx_async([tok_dev])
+                  if self.transfer.policy.management is Management.INTERRUPT
+                  else None)
+        self.tokens = tok_dev[:, None].astype(jnp.int32)
+        nxt = ticket.wait()[0] if ticket else self.transfer.rx([tok_dev])[0]
+        nxt = np.asarray(nxt).reshape(-1)
         for slot in active:
             self.slots[slot].tokens.append(int(nxt[slot]))
             self.lengths[slot] += 1
-        self.tokens = jnp.asarray(nxt[:, None], jnp.int32)
         self.steps += 1
         self._retire()
         return len(active)
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
         while (self.queue or any(s is not None for s in self.slots)):
+            if self.steps >= max_steps:  # check BEFORE stepping: exactly
+                break                    # max_steps decode steps, not +1
             if self.step() == 0 and not self.queue:
                 break
-            if self.steps > max_steps:
-                break
         return self.completed
+
+    def close(self) -> None:
+        if self._owns_transfer:
+            self.transfer.close()

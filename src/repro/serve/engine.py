@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.channels import ChannelGroup
 from repro.core.transfer import (
     Management,
     TransferEngine,
@@ -43,6 +44,10 @@ class ServeConfig:
     temperature: float = 0.0  # 0 => greedy
     eos_token: int = -1  # -1 => run to max_new_tokens
     seed: int = 0
+    # >1: stripe prompt TX across a ChannelGroup (with adaptive_transfer it
+    # is the planner's channel CEILING; 1 there means "planner's choice")
+    n_channels: int = 1
+    adaptive_transfer: bool = False  # calibrate + fit policy at construction
 
 
 @dataclass
@@ -64,8 +69,27 @@ class ServingEngine:
         self.model = model
         self.params = params
         self.cfg = cfg
-        self.policy = policy or TransferPolicy.kernel_level()
-        self.engine = TransferEngine(self.policy)
+        if cfg.adaptive_transfer:
+            if policy is not None:
+                raise ValueError(
+                    "adaptive_transfer fits the policy from calibration; "
+                    "passing an explicit policy alongside it would be "
+                    "silently ignored — choose one")
+            # fit the policy to THIS host: calibrate, then size block /
+            # ring depth / channel count for the prompt-batch payload. The
+            # default n_channels=1 leaves the count to the planner (up to 4).
+            prompt_bytes = cfg.max_batch * cfg.max_seq * 4  # int32 tokens
+            self.engine = ChannelGroup.auto(
+                prompt_bytes,
+                max_channels=cfg.n_channels if cfg.n_channels > 1 else 4)
+            self.policy = self.engine.policy
+        elif cfg.n_channels > 1:
+            self.policy = policy or TransferPolicy.kernel_level_ring()
+            self.engine = ChannelGroup(self.policy,
+                                       n_channels=cfg.n_channels)
+        else:
+            self.policy = policy or TransferPolicy.kernel_level()
+            self.engine = TransferEngine(self.policy)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cfg.max_seq))
         self._decode = jax.jit(model.decode, donate_argnums=(2,))

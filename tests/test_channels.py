@@ -1,0 +1,200 @@
+"""Multi-channel transfer rings: striping correctness, the shared staging
+pool, and the cost-model-adaptive policy chooser."""
+
+import numpy as np
+import pytest
+
+from repro.core.channels import (
+    ChannelGroup,
+    StagingPool,
+    calibrate_transfer,
+    plan_channels,
+)
+from repro.core.cost_model import TransferCostModel
+from repro.core.streaming import HostStreamingExecutor
+from repro.core.transfer import (
+    BufferInFlightError,
+    LayoutCache,
+    Management,
+    TransferPolicy,
+    reassemble_chunks,
+)
+
+
+def _group(n=2, **kw):
+    kw.setdefault("min_stripe_bytes", 1 << 14)  # stripe even small payloads
+    return ChannelGroup(TransferPolicy.kernel_level_ring(4, block_bytes=1 << 16),
+                        n_channels=n, **kw)
+
+
+# ---- striping round trips --------------------------------------------------
+
+@pytest.mark.parametrize("n_channels", [2, 3])
+def test_striped_roundtrip_bit_exact(n_channels):
+    """A payload striped across N channels must reassemble bit-exactly."""
+    g = _group(n_channels)
+    x = np.random.default_rng(0).standard_normal(100_003).astype(np.float32)
+    chunks = g.tx(x)
+    np.testing.assert_array_equal(np.asarray(reassemble_chunks(chunks)), x)
+    back = g.rx(chunks)
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(b).reshape(-1) for b in back]), x)
+    assert any(s.direction == "tx" for s in g.stats)
+    g.close()
+
+
+def test_striped_staged_layout_roundtrip():
+    """pack -> striped tx -> unpack across channels is bit-exact, and the
+    layout comes from the group's shared-pool cache."""
+    g = _group(2)
+    arrays = [np.random.default_rng(1).standard_normal((257, 33)).astype(np.float32),
+              np.arange(1001, dtype=np.int32),
+              np.random.default_rng(2).standard_normal(13).astype(np.float16)]
+    lay = g.layouts.get("layer0", arrays)
+    out = lay.unpack(g.tx(lay.pack(arrays)))
+    for o, a in zip(out, arrays):
+        np.testing.assert_array_equal(np.asarray(o), a)
+    assert g.layouts.misses == 1
+    g.close()
+
+
+def test_sub_stripe_payload_single_channel():
+    """Payloads below two minimum stripes ride ONE channel (striping a tiny
+    transfer costs more fixed overhead than it hides)."""
+    g = ChannelGroup(TransferPolicy.kernel_level_ring(2),
+                     n_channels=4, min_stripe_bytes=1 << 20)
+    x = np.arange(64, dtype=np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(reassemble_chunks(g.tx(x))), x)
+    # delegated to ONE member engine, but still visible in group stats
+    assert len(g.stats) == 1 and g.stats[0].direction == "tx"
+    assert sum(len(e.stats) for e in g.engines) == 1
+    g.close()
+
+
+def test_group_requires_interrupt():
+    with pytest.raises(ValueError):
+        ChannelGroup(TransferPolicy.user_level_polling(), n_channels=2)
+    with pytest.raises(ValueError):
+        ChannelGroup(n_channels=0)
+
+
+def test_group_layout_busy_window_covers_all_channels():
+    """The staging buffer stays busy until EVERY channel drained; a re-pack
+    inside the window must raise."""
+    g = _group(2)
+    arrays = [np.zeros(1 << 22, np.float32)]  # 16 MiB: stays in flight
+    lay = g.layouts.get("big", arrays)
+    ticket = g.tx_async(lay.pack(arrays), layout=lay)
+    assert lay._busy is not None  # marked before tx_async returned
+    if not ticket.complete:
+        with pytest.raises(BufferInFlightError):
+            lay.pack(arrays, wait=False, force=True)
+    ticket.wait()
+    lay.pack(arrays, wait=False, force=True)  # safe once complete
+    g.close()
+
+
+def test_group_runs_streaming_executor():
+    """A ChannelGroup duck-types TransferEngine through the three-way
+    overlap executor."""
+    import jax
+    import jax.numpy as jnp
+
+    def apply_fn(params, x):
+        (w,) = params
+        return jnp.tanh(x @ w)
+
+    jitted = jax.jit(apply_fn)
+    rng = np.random.default_rng(3)
+    layers = [(f"l{i}", [rng.standard_normal((32, 32)).astype(np.float32)],
+               jitted) for i in range(4)]
+    x = rng.standard_normal((2, 32)).astype(np.float32)
+    g = _group(2)
+    out, timing = HostStreamingExecutor(g).run(layers, x)
+    y = jnp.asarray(x)
+    for _, (w,), fn in layers:
+        y = fn([jnp.asarray(w)], y)
+    np.testing.assert_allclose(out, np.asarray(y), rtol=1e-5, atol=1e-5)
+    assert len(timing.layers) == 4
+    g.close()
+
+
+# ---- staging pool ----------------------------------------------------------
+
+def test_staging_pool_recycles_on_layout_eviction():
+    pool = StagingPool()
+    cache = LayoutCache(pool=pool)
+    a1 = [np.zeros(10_000, np.float32)]
+    lay1 = cache.get("k", a1)
+    buf1 = lay1._staging
+    assert pool.allocations == 1
+    # same key, new shapes: old layout evicted, its buffer pooled + reused
+    a2 = [np.zeros(9_000, np.float32)]  # same power-of-two size class
+    lay2 = cache.get("k", a2)
+    assert lay2 is not lay1
+    assert lay2._staging is buf1
+    assert pool.allocations == 1 and pool.reuses == 1
+
+
+def test_staging_pool_size_classes():
+    pool = StagingPool()
+    small = pool.acquire(100)
+    assert small.nbytes == 4096  # floor class
+    big = pool.acquire(4097)
+    assert big.nbytes == 8192
+    pool.release(big)
+    assert pool.acquire(5000) is big
+
+
+def test_busy_layout_not_pooled_on_eviction():
+    """An in-flight staging buffer must be orphaned, not handed to the next
+    layout (that would be the DMA corruption the driver forbids)."""
+    import threading
+    pool = StagingPool()
+    cache = LayoutCache(pool=pool)
+    lay1 = cache.get("k", [np.zeros(1000, np.float32)])
+    lay1._busy = threading.Event()  # in flight, never completes
+    cache.get("k", [np.zeros(900, np.float32)])  # evicts lay1
+    assert pool.reuses == 0 and pool.allocations == 2
+
+
+# ---- adaptive policy chooser ----------------------------------------------
+
+def test_plan_scales_with_payload():
+    model = TransferCostModel(t0_s=10e-6, bw_Bps=8e9)
+    big = plan_channels(48 << 20, model=model, max_channels=4)
+    small = plan_channels(4 << 10, model=model, max_channels=4)
+    assert big.n_channels >= small.n_channels
+    assert small.n_channels == 1  # 4 KiB can't amortize a second channel
+    assert big.policy.depth >= 2
+    assert big.policy.block_bytes >= model.optimal_block_bytes(48 << 20) // 4
+    assert "adaptive" in big.tag and big.row()["n_channels"] == big.n_channels
+
+
+def test_plan_blocks_cover_stripe():
+    """Chosen block/depth must tile the stripe: no degenerate 1-chunk BLOCKS
+    plan, no depth below 2 (that would forfeit overlap)."""
+    model = TransferCostModel(t0_s=50e-6, bw_Bps=4e9)
+    for payload in (1 << 20, 8 << 20, 64 << 20):
+        plan = plan_channels(payload, model=model, max_channels=4)
+        stripe = -(-payload // plan.n_channels)
+        import math
+        n_chunks = math.ceil(stripe / plan.policy.block_bytes)
+        assert 2 <= plan.policy.depth <= 8
+        if plan.policy.partitioning.value == "blocks":
+            assert n_chunks >= 2
+
+
+def test_calibrate_fits_positive_model():
+    model = calibrate_transfer(sizes=(4 << 10, 64 << 10, 1 << 20), repeats=1)
+    assert model.t0_s > 0 and model.bw_Bps > 0
+
+
+def test_auto_group_end_to_end():
+    model = TransferCostModel(t0_s=20e-6, bw_Bps=6e9)
+    g = ChannelGroup.auto(8 << 20, model=model, max_channels=2)
+    assert g.plan is not None and g.n_channels == g.plan.n_channels
+    x = np.random.default_rng(4).standard_normal(1 << 20).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(reassemble_chunks(g.tx(x))), x)
+    g.close()

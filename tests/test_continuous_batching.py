@@ -46,3 +46,33 @@ def test_more_requests_than_slots_all_complete():
     done = eng.run_to_completion()
     assert sorted(r.rid for r in done) == [0, 1, 2, 3, 4]
     assert all(len(r.tokens) == 4 for r in done)
+
+
+def test_run_to_completion_respects_max_steps():
+    """max_steps is exact: the old check ran max_steps + 1 decode steps."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(2)
+    eng = ContinuousBatchingEngine(model, params, n_slots=2, max_seq=128)
+    eng.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab, 8).astype(
+        np.int32), max_new_tokens=100))
+    eng.run_to_completion(max_steps=3)
+    assert eng.steps == 3
+    eng.close()
+
+
+def test_token_movement_rides_transfer_engine():
+    """Prompt admission is a measured TX and each decode step a measured RX
+    on the engine (the ROADMAP 'fold token movement onto the engine' item)."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(3)
+    eng = ContinuousBatchingEngine(model, params, n_slots=2, max_seq=64)
+    eng.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab, 6).astype(
+        np.int32), max_new_tokens=3))
+    eng.run_to_completion()
+    tx = [s for s in eng.transfer.stats if s.direction == "tx"]
+    rx = [s for s in eng.transfer.stats if s.direction == "rx"]
+    assert len(tx) == 1  # one admitted prompt
+    # prefill yields token 1; the remaining max_new_tokens-1 decode steps
+    # each RX one token batch
+    assert len(rx) == 2
+    eng.close()

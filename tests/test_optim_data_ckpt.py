@@ -116,6 +116,29 @@ def test_pipeline_modes_same_data(policy):
                                       ref_src.next_host_batch(i)["tokens"])
 
 
+def test_pipeline_engine_staged_batches_identical():
+    """Batches staged through a TransferEngine/ChannelGroup (cached layout,
+    measured TX, optional striping) must equal plain device_put batches."""
+    from repro.core.channels import ChannelGroup
+
+    src = SyntheticLMSource(DataConfig(global_batch=4, seq_len=16, seed=7),
+                            _cfg())
+    group = ChannelGroup(TransferPolicy.kernel_level_ring(2), n_channels=2,
+                         min_stripe_bytes=1 << 8)
+    pipe = StagedPipeline(src, TransferPolicy.user_level_polling(),
+                          engine=group)
+    batches = [next(pipe) for _ in range(2)]
+    pipe.close()
+    ref_src = SyntheticLMSource(DataConfig(global_batch=4, seq_len=16,
+                                           seed=7), _cfg())
+    for i, b in enumerate(batches):
+        ref = ref_src.next_host_batch(i)
+        for k in ref:
+            np.testing.assert_array_equal(np.asarray(b[k]), ref[k])
+    assert group.layouts.misses == 1 and group.layouts.hits == 1
+    group.close()
+
+
 def test_pipeline_labels_are_shifted_tokens():
     src = SyntheticLMSource(DataConfig(global_batch=2, seq_len=8), _cfg())
     b = src.next_host_batch(0)

@@ -107,3 +107,16 @@ def test_single_layer_and_empty_edge_cases():
                                atol=1e-5)
     assert len(timing.layers) == 1
     eng.close()
+
+
+@pytest.mark.parametrize("staged", [True, False])
+def test_empty_layer_list_returns_transferred_input(staged):
+    """Zero layers must hand back the round-tripped input, not None (the
+    overlapped path used to fall off the end with host_out=None)."""
+    eng = TransferEngine(TransferPolicy.kernel_level_ring(4))
+    x = np.random.rand(3, 8).astype(np.float32)
+    out, timing = HostStreamingExecutor(eng, staged=staged).run([], x)
+    assert out is not None
+    np.testing.assert_array_equal(np.asarray(out).reshape(x.shape), x)
+    assert timing.layers == []
+    eng.close()

@@ -77,6 +77,25 @@ def test_serving_greedy_deterministic():
     assert r1[0].tokens.shape == (8,)
 
 
+def test_serving_multichannel_matches_single():
+    """Striped prompt TX / token RX (ChannelGroup) must generate the same
+    tokens as the single-engine path."""
+    from repro.core.channels import ChannelGroup
+
+    cfg = smoke_config("qwen2.5-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.ones((2, 8), np.int32)
+    single = ServingEngine(model, params, ServeConfig(max_seq=64))
+    multi = ServingEngine(model, params, ServeConfig(max_seq=64,
+                                                     n_channels=2))
+    assert isinstance(multi.engine, ChannelGroup)
+    r1 = single.generate(prompts, max_new_tokens=6)
+    r2 = multi.generate(prompts, max_new_tokens=6)
+    np.testing.assert_array_equal(r1[0].tokens, r2[0].tokens)
+    single.close(), multi.close()
+
+
 def test_straggler_detection():
     clock = StepClock(window=20, zscore_threshold=3.0)
     for _ in range(15):

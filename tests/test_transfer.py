@@ -278,6 +278,142 @@ def test_layout_mismatch_raises():
         lay.pack([np.zeros(5, np.float32)])
 
 
+# ---- concurrency: the ring under parallel callers --------------------------
+
+def test_parallel_tx_threads_no_slot_collisions():
+    """Concurrent tx() from many threads: slot indices never collide, the
+    in-flight window never exceeds the ring depth, and every payload
+    round-trips bit-exactly."""
+    import threading
+
+    policy = TransferPolicy.kernel_level_ring(4, block_bytes=1 << 14)
+    eng = TransferEngine(policy)
+    n_threads, errors = 8, []
+
+    def worker(seed):
+        try:
+            x = np.full(16 * 1024, float(seed), np.float32)  # 64 KiB, 4 chunks
+            for _ in range(5):
+                back = eng.rx(eng.tx(x))
+                flat = np.concatenate([b.reshape(-1) for b in back])
+                np.testing.assert_array_equal(flat, x)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert eng.slot_collisions == 0
+    assert eng.inflight_hwm <= policy.depth
+    eng.close()
+
+
+def test_parallel_tx_async_respects_ring_depth():
+    """tx_async no longer bypasses the descriptor ring: concurrent async
+    callers stay within the in-flight window and never collide on a slot."""
+    import threading
+
+    policy = TransferPolicy(Management.INTERRUPT, Buffering.RING,
+                            Partitioning.BLOCKS, block_bytes=1 << 13,
+                            ring_depth=3)
+    eng = TransferEngine(policy)
+    tickets, lock, errors = [], threading.Lock(), []
+
+    def worker(seed):
+        try:
+            x = np.full(8192, float(seed), np.float32)  # 32 KiB, 4 chunks
+            t = eng.tx_async(x)
+            with lock:
+                tickets.append((t, x))
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    for ticket, x in tickets:
+        flat = np.concatenate(
+            [np.asarray(c).reshape(-1) for c in ticket.wait()])
+        np.testing.assert_array_equal(flat, x)
+    assert eng.slot_collisions == 0
+    assert eng.inflight_hwm <= policy.depth
+    eng.close()
+
+
+def test_mixed_sync_async_share_one_ring():
+    """tx() and tx_async()/rx_async() racing on one engine must all obey the
+    same slot-exclusivity invariant."""
+    import threading
+
+    policy = TransferPolicy.kernel_level_ring(2, block_bytes=1 << 13)
+    eng = TransferEngine(policy)
+    errors = []
+
+    def sync_worker():
+        try:
+            x = np.arange(4096, dtype=np.float32)
+            for _ in range(4):
+                np.testing.assert_array_equal(
+                    np.concatenate([b.reshape(-1) for b in eng.rx(eng.tx(x))]),
+                    x)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    def async_worker():
+        try:
+            x = np.full(4096, 7.0, np.float32)
+            for _ in range(4):
+                chunks = eng.tx_async(x).wait()
+                host = eng.rx_async(chunks).wait()
+                np.testing.assert_array_equal(
+                    np.concatenate([h.reshape(-1) for h in host]), x)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=sync_worker),
+               threading.Thread(target=async_worker)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert eng.slot_collisions == 0
+    assert eng.inflight_hwm <= policy.depth
+    eng.close()
+
+
+def test_layout_marked_busy_before_submit():
+    """The busy flag must be set BEFORE the descriptor reaches the pool —
+    the old submit-then-flag order left a window where a re-pack could
+    corrupt the in-flight staging buffer."""
+    from repro.core.transfer import _CompletionPool
+
+    eng = TransferEngine(TransferPolicy.kernel_level_ring(2))
+    arrays = [np.zeros(1024, np.float32)]
+    lay = eng.layouts.get("l", arrays)
+    seen = []
+    orig = _CompletionPool.submit
+
+    def spy(self, fn):
+        seen.append(lay._busy is not None and not lay._busy.is_set())
+        return orig(self, fn)
+
+    _CompletionPool.submit = spy
+    try:
+        eng.tx_async(lay.pack(arrays), layout=lay).wait()
+    finally:
+        _CompletionPool.submit = orig
+    assert seen and all(seen)
+    eng.close()
+
+
 # ---- async RX -------------------------------------------------------------
 
 def test_rx_async_ticket_semantics():
