@@ -1,0 +1,241 @@
+"""Static plan vs online refit under injected t0/BW drift.
+
+The ROADMAP's staleness scenario, made measurable: both engines are planned
+for the SAME baseline transfer behaviour, then the per-descriptor cost is
+drifted (fixed overhead up, bandwidth down — the signature of a host that
+picked up load, the paper's 'the driver path is the bottleneck' regime).
+The static :class:`~repro.core.channels.ChannelGroup` keeps flying its
+now-stale block size and pays the inflated per-chunk overhead dozens of
+times per payload; the :class:`~repro.core.adaptive.AdaptiveChannelGroup`
+re-fits t0/BW from its rolling chunk samples, re-plans (bigger blocks,
+fewer chunks, channel count re-derived), and swaps the plan at a drained
+ring. The headline row is ``recovery_ratio``: stale-static us/B over
+online-refit us/B in the post-drift steady state (>= 1.3 expected).
+
+Drift is injected through ``ChannelGroup(engine_factory=...)``: a
+:class:`TransferEngine` subclass whose ``_one`` sleeps
+``t0 + nbytes/BW`` per chunk on top of the real copy — the measured path
+stays real, only the simulated link condition changes.
+
+Results merge into ``BENCH_transfer.json`` under ``"adaptive_drift"``.
+``--quick`` shrinks payloads/iters for the CI smoke run (no JSON rewrite).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.adaptive import AdaptiveChannelGroup, AdaptiveConfig
+from repro.core.channels import ChannelGroup, plan_channels
+from repro.core.cost_model import TransferCostModel
+from repro.core.transfer import TransferEngine, TransferPolicy
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_transfer.json"
+
+# (t0_s, bw_Bps). Both t0 points sit above time.sleep's ~1 ms granularity
+# floor so the injected overhead is actually realized; the drifted point is
+# the paper's regime where the driver path (not the wire) bottlenecks, so a
+# stale small block size pays the inflated t0 once per chunk.
+BASELINE = (1e-3, 1e9)     # healthy host: ~1 MB optimal blocks
+DRIFTED = (10e-3, 2e9)     # loaded host: 10x overhead, optimal = whole payload
+QUICK_SCALE = 1            # payload sizes already cheap; quick trims iters
+
+
+class DriftProfile:
+    """Mutable synthetic link condition shared by every injected engine."""
+
+    def __init__(self, t0_s: float, bw_Bps: float):
+        self.t0_s = t0_s
+        self.bw_Bps = bw_Bps
+
+    def set(self, t0_s: float, bw_Bps: float) -> None:
+        self.t0_s = t0_s
+        self.bw_Bps = bw_Bps
+
+
+def drifting_engine_factory(profile: DriftProfile):
+    """Engine class whose every chunk pays the profile's t0 + n/BW.
+
+    A real DMA channel moves one descriptor at a time, so per-chunk
+    overhead cannot be hidden by sleeping on N completion workers at once:
+    chunks serialize on a per-engine lock. The lock wait sits OUTSIDE the
+    timed region (``_one_timed``) — queueing delay is not part of a
+    descriptor's service time, and folding it into the chunk samples would
+    poison the online fit with load-dependent noise. Striping across
+    engines still parallelizes — that is the multi-channel lesson the
+    planner is allowed to exploit."""
+    import threading
+
+    class DriftingEngine(TransferEngine):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            self._drift_lock = threading.Lock()
+
+        def _one_timed(self, payload, direction, out=None):
+            with self._drift_lock:  # serialize; wait excluded from sample
+                return super()._one_timed(payload, direction, out)
+
+        def _one(self, payload, direction, out=None):
+            if direction == "tx":
+                nbytes = int(np.asarray(payload).nbytes)
+            else:
+                nbytes = int(payload.size) * payload.dtype.itemsize
+            time.sleep(profile.t0_s + nbytes / profile.bw_Bps)
+            return super()._one(payload, direction, out)
+
+    return DriftingEngine
+
+
+def measure_model(factory, sizes=(16 << 10, 256 << 10, 2 << 20),
+                  repeats: int = 3) -> TransferCostModel:
+    """Fit the baseline model the PLANNER sees, by measuring single-chunk
+    transfers through an injected engine (so it includes the synthetic
+    link, exactly like construction-time calibration would). Warm up
+    first — the first device_put pays one-time dispatch/alloc costs that
+    would masquerade as a ~ms fixed overhead and poison the fit."""
+    eng = factory(TransferPolicy.user_level_polling())
+    for _ in range(2):
+        eng.tx(np.empty(sizes[0], np.uint8))
+    ns, ts = [], []
+    for n in sizes:
+        x = np.empty(n, np.uint8)
+        best = float("inf")
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            eng.tx(x)
+            best = min(best, time.perf_counter() - t0)
+        ts.append(best)
+        ns.append(n)
+    eng.close()
+    return TransferCostModel.fit(np.asarray(ns, np.float64),
+                                 np.asarray(ts, np.float64))
+
+
+def _phase(engine, payloads, iters: int, *, adapt: bool) -> float:
+    """Transfer the payload mix ``iters`` times; returns the MEDIAN
+    per-iteration us/B (one scheduler hiccup must not swing the phase)."""
+    per_iter = []
+    bytes_per_iter = sum(x.nbytes for x in payloads)
+    for _ in range(iters):
+        t_iter = 0.0
+        for x in payloads:
+            t0 = time.perf_counter()
+            engine.tx(x)
+            t_iter += time.perf_counter() - t0
+            if adapt:
+                engine.maybe_adapt()
+        per_iter.append(t_iter * 1e6 / max(bytes_per_iter, 1))
+    return sorted(per_iter)[len(per_iter) // 2]
+
+
+def run(quick: bool = False) -> list[dict]:
+    scale = QUICK_SCALE if quick else 1
+    sizes = [(2 << 20) // scale, (4 << 20) // scale, (8 << 20) // scale]
+    rng = np.random.default_rng(0)
+    payloads = [rng.integers(0, 255, n, dtype=np.uint8) for n in sizes]
+    pre_iters = 2 if quick else 3
+    settle_iters = 4 if quick else 8   # post-drift iters the refit may use
+    post_iters = 2 if quick else 5    # post-drift steady state (measured)
+
+    profile = DriftProfile(*BASELINE)
+    factory = drifting_engine_factory(profile)
+    model0 = measure_model(factory)
+    # max_channels=1: this benchmark isolates the paper's packet-length
+    # lesson (block sizing under a drifted t0/BW). Striping is measured by
+    # multichannel_sweep; letting the planner add channels here just
+    # oversubscribes the 2-core CI host and noises the comparison.
+    plan0 = plan_channels(max(sizes), model=model0, max_channels=1)
+
+    static = ChannelGroup(plan0.policy, n_channels=plan0.n_channels,
+                          engine_factory=factory)
+    online = AdaptiveChannelGroup(
+        max(sizes), model=model0, engine_factory=factory,
+        cfg=AdaptiveConfig(refit_every=2, hysteresis=2.0, min_samples=10,
+                           ewma_halflife=16, max_channels=1,
+                           sample_ttl_s=1.0))
+
+    rows: list[dict] = [{
+        "bench": "adaptive_drift", "variant": "baseline_plan",
+        "baseline_t0_us": BASELINE[0] * 1e6,
+        "baseline_gbps": BASELINE[1] / 1e9,
+        "drifted_t0_us": DRIFTED[0] * 1e6,
+        "drifted_gbps": DRIFTED[1] / 1e9,
+        **plan0.row(),
+    }]
+
+    # -- phase 1: both fly the baseline-fitted plan on the healthy link ----
+    us_static_pre = _phase(static, payloads, pre_iters, adapt=False)
+    us_online_pre = _phase(online, payloads, pre_iters, adapt=True)
+
+    # -- drift: the link condition changes under both engines --------------
+    profile.set(*DRIFTED)
+    _phase(static, payloads, settle_iters, adapt=False)   # same cost, no gain
+    _phase(online, payloads, settle_iters, adapt=True)    # refit + swap here
+
+    # -- phase 2: post-drift steady state ----------------------------------
+    us_static_post = _phase(static, payloads, post_iters, adapt=False)
+    us_online_post = _phase(online, payloads, post_iters, adapt=True)
+
+    adapt_row = online.adapt_summary()
+    for variant, pre, post in (("static", us_static_pre, us_static_post),
+                               ("online-refit", us_online_pre,
+                                us_online_post)):
+        rows.append({
+            "bench": "adaptive_drift", "variant": variant,
+            "payload_bytes": sum(sizes),
+            "pre_drift_us_per_byte": round(pre, 6),
+            "post_drift_us_per_byte": round(post, 6),
+        })
+    rows.append({
+        "bench": "adaptive_drift", "variant": "adaptation",
+        "recovery_ratio": round(us_static_post / max(us_online_post, 1e-12),
+                                3),
+        **adapt_row,
+    })
+    static.close()
+    online.close()
+    return rows
+
+
+def merge_bench_json(rows: list[dict],
+                     path: pathlib.Path | str = BENCH_JSON) -> dict:
+    """Fold the drift run into BENCH_transfer.json under ``adaptive_drift``."""
+    path = pathlib.Path(path)
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    static = next(r for r in rows if r["variant"] == "static")
+    online = next(r for r in rows if r["variant"] == "online-refit")
+    adapt = next(r for r in rows if r["variant"] == "adaptation")
+    doc["adaptive_drift"] = {
+        "rows": rows,
+        "static_post_drift_us_per_byte": static["post_drift_us_per_byte"],
+        "online_post_drift_us_per_byte": online["post_drift_us_per_byte"],
+        # the PR-3 headline: how much of the drift-induced loss the online
+        # refit claws back vs the stale static plan (>= 1.3 expected)
+        "recovery_ratio_static_over_online": adapt["recovery_ratio"],
+        "plan_swaps": adapt["swaps"],
+        "replans": adapt["replans"],
+        "refits": adapt["refits"],
+        "final_plan": adapt["plan"],
+    }
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small payloads/iters, no JSON rewrite (CI smoke)")
+    args = ap.parse_args()
+    bench_rows = run(quick=args.quick)
+    for r in bench_rows:
+        print(r)
+    if not args.quick:
+        doc = merge_bench_json(bench_rows)
+        ad = doc["adaptive_drift"]
+        print(f"wrote {BENCH_JSON}: post-drift static/online us/B recovery "
+              f"ratio {ad['recovery_ratio_static_over_online']}")

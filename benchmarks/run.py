@@ -13,6 +13,7 @@ import sys
 import time
 
 from benchmarks import (
+    adaptive_drift,
     collective_overlap,
     multichannel_sweep,
     policy_ablation,
@@ -30,6 +31,7 @@ BENCHES = {
     "txrx_balance": txrx_balance.run,  # loop-back scenario
     "streaming_layers": streaming_layers.run,  # NullHop model at LM scale
     "multichannel_sweep": multichannel_sweep.run,  # striped rings + adaptive
+    "adaptive_drift": adaptive_drift.run,  # online refit vs stale plan
     "collective_overlap": collective_overlap.run,  # blocks-mode collectives
     "roofline": roofline.run,  # reads dry-run artifacts
 }
@@ -74,6 +76,12 @@ def main() -> None:
             print(f"# merged multichannel rows into BENCH_transfer.json "
                   f"(single-ring/multi tx us/B ratio "
                   f"{mc['tx_us_per_byte_ratio_single_ring_over_multi']})")
+        if name == "adaptive_drift":
+            doc = adaptive_drift.merge_bench_json(rows)
+            ad = doc["adaptive_drift"]
+            print(f"# merged adaptive_drift rows into BENCH_transfer.json "
+                  f"(post-drift static/online recovery ratio "
+                  f"{ad['recovery_ratio_static_over_online']})")
 
 
 if __name__ == "__main__":

@@ -1,18 +1,27 @@
 #!/usr/bin/env bash
-# Tier-1 verification + a transfer-bench smoke run, so the benchmarks can't
-# silently rot. Run from the repo root:  bash scripts/ci.sh
+# Tier-1 verification + transfer-bench smoke runs, so the benchmarks can't
+# silently rot. Two pytest lanes: the fast lane excludes @pytest.mark.stress
+# (quick signal on every change), the full lane then runs the stress suite
+# so the concurrency invariants still gate CI. Run from the repo root:
+#   bash scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q
+echo "== tier-1 fast lane: pytest -m 'not stress' =="
+python -m pytest -x -q -m "not stress"
+
+echo "== full lane: stress suite =="
+python -m pytest -x -q -m "stress"
 
 echo "== smoke: transfer_sweep --quick =="
 python benchmarks/transfer_sweep.py --quick --iters 2
 
 echo "== smoke: multichannel_sweep --quick =="
 python benchmarks/multichannel_sweep.py --quick
+
+echo "== smoke: adaptive_drift --quick =="
+python benchmarks/adaptive_drift.py --quick
 
 echo "CI OK"

@@ -7,6 +7,8 @@ partitioning (unique / blocks) — at every memory boundary of a TPU system:
 - host <-> device  : :mod:`repro.core.transfer` (measured on this machine)
 - multi-channel    : :mod:`repro.core.channels` (striped rings + adaptive
                      cost-model policy, the NEURAghe/ZynqNet lesson)
+- online adaptation: :mod:`repro.core.adaptive` (rolling t0/BW refit,
+                     hysteresis-gated replans applied at ring-drain points)
 - HBM  <-> VMEM    : :mod:`repro.kernels` grids parameterized by the policy
 - chip <-> chip    : :mod:`repro.core.pipeline_collectives` (blocks-mode rings)
 - per-layer stream : :mod:`repro.core.streaming` (the NullHop execution model)
@@ -29,5 +31,12 @@ from repro.core.channels import (  # noqa: F401
     StagingPool,
     calibrate_transfer,
     plan_channels,
+)
+from repro.core.adaptive import (  # noqa: F401
+    AdaptiveChannelGroup,
+    AdaptiveConfig,
+    OnlineTransferController,
+    RollingFit,
+    choose_management,
 )
 from repro.core.cost_model import TransferCostModel  # noqa: F401

@@ -1,0 +1,628 @@
+"""Online transfer adaptation: rolling cost-model refit + safe plan swaps.
+
+The paper's central observation is that delivered PS<->PL throughput is set
+by the *software management* of the DMA engine, not by the AXI bus — and
+that the right management flips with packet size. The user-level polling
+driver has the lowest fixed overhead ``t0`` but blocks the host; the
+kernel-level interrupt driver pays a much larger ``t0`` (syscall, context
+switch, IRQ dispatch) yet sustains better bandwidth and overlap, so it wins
+only for "longer enough packets": the crossover payload solves
+
+    t0_poll + n / BW_poll  =  t0_intr + n / BW_intr.
+
+PR 2 fit that two-parameter model ``t(n) = t0 + n/BW`` ONCE, at
+:class:`~repro.core.channels.ChannelGroup` construction. But ``t0`` and
+``BW`` are not constants of the machine: they drift with host load,
+allocator state, and thermal/cgroup throttling (the ROADMAP's "plan goes
+stale" item; NEURAghe and ZynqNet both re-partition per layer for the same
+reason). This module closes the loop:
+
+:class:`RollingFit`
+    Bounded window of measured (nbytes, seconds) *chunk* samples with
+    EWMA-decayed weighted least squares — recent samples dominate, so a
+    step change in t0/BW is visible within a window instead of being
+    averaged into history. Fits are kept separately per direction and per
+    :class:`~repro.core.transfer.Management` mode, since the paper's whole
+    point is that those curves differ.
+
+:class:`OnlineTransferController`
+    Consumes per-descriptor chunk samples (every
+    :class:`~repro.core.transfer.TransferEngine` records them) plus
+    logical :class:`~repro.core.transfer.TransferStats`, refits on a
+    cadence, and proposes a new :class:`~repro.core.channels.ChannelPlan`
+    only when the fitted t0/BW drifted past a hysteresis ratio — noisy
+    samples must not flap the plan. The proposal re-runs
+    :func:`~repro.core.channels.plan_channels` (channel count, block_bytes,
+    ring_depth) and re-evaluates the polling-vs-interrupt crossover from
+    the per-mode fits.
+
+:class:`AdaptiveChannelGroup`
+    An engine facade that duck-types :class:`TransferEngine` /
+    :class:`ChannelGroup` (``policy`` / ``layouts`` / ``tx`` / ``rx`` /
+    ``tx_async`` / ``rx_async`` / ``close`` / ``summary``) and applies
+    accepted plans ONLY at safe points: a generation is swapped when no
+    transfer issued through the facade is still in flight — the ring is
+    drained, no slots are held, so the swap can never orphan a descriptor
+    or corrupt a staging buffer. Staging layouts and the staging pool
+    persist across generations (a replan must not re-pay the one-time
+    layout cost). Uniform traffic (every payload the same size) cannot
+    separate t0 from BW, so the facade injects a few tiny probe transfers
+    when the window is size-degenerate — the online equivalent of the
+    paper's packet-size sweep.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.channels import (
+    ChannelGroup,
+    ChannelPlan,
+    StagingPool,
+    calibrate_transfer,
+    plan_channels,
+)
+from repro.core.cost_model import TransferCostModel
+from repro.core.transfer import (
+    LayoutCache,
+    Management,
+    StagedLayout,
+    Ticket,
+    TransferEngine,
+    TransferPolicy,
+    TransferStats,
+    carve_flat_out,
+)
+
+
+@dataclass(frozen=True)
+class AdaptiveConfig:
+    """Knobs of the online controller."""
+
+    window: int = 256          # chunk samples kept per (direction, mode)
+    min_samples: int = 12      # no refit below this many samples
+    refit_every: int = 8       # consider a refit every N logical transfers
+    hysteresis: float = 1.5    # replan only past this t0/BW factor drift
+    ewma_halflife: float = 32  # sample-age halflife for fit weights
+    min_size_spread: float = 4.0  # max/min sample size needed to fit t0+BW
+    # wall-clock TTL: samples older than this leave the fit window. When
+    # the only small-size samples (probes) expire, the window goes
+    # size-degenerate and the facade re-probes — so probe freshness is
+    # self-regulating with cadence ~ttl, and a regime change can never be
+    # straddled by mixing old-regime smalls with new-regime larges (which
+    # fits a spurious slope).
+    sample_ttl_s: float = 5.0
+    max_channels: int = 4
+    completion_workers: int = 2   # per-engine workers in replanned policies
+    probe_sizes: tuple = (16 << 10, 128 << 10)  # degenerate-window probes
+
+
+class RollingFit:
+    """Rolling (nbytes, seconds) window + EWMA-weighted least squares.
+
+    Samples carry a wall-clock stamp and expire after ``ttl_s``: a fit must
+    never straddle a regime change by pairing old-regime small transfers
+    with new-regime large ones — that fits a steep spurious slope instead
+    of the new t0/BW."""
+
+    def __init__(self, window: int = 256, ewma_halflife: float = 32,
+                 min_size_spread: float = 4.0, ttl_s: float = 5.0):
+        self._samples: "collections.deque[tuple[int, float, float]]" = (
+            collections.deque(maxlen=window))
+        self.ewma_halflife = max(float(ewma_halflife), 1.0)
+        self.min_size_spread = min_size_spread
+        self.ttl_s = float(ttl_s)
+        self._lock = threading.Lock()
+
+    def add(self, nbytes: int, seconds: float) -> None:
+        if nbytes <= 0 or seconds <= 0:
+            return
+        with self._lock:
+            self._samples.append((int(nbytes), float(seconds),
+                                  time.monotonic()))
+
+    def _fresh(self) -> list[tuple[int, float]]:
+        cutoff = time.monotonic() - self.ttl_s
+        with self._lock:
+            while self._samples and self._samples[0][2] < cutoff:
+                self._samples.popleft()
+            return [(n, t) for n, t, _ in self._samples]
+
+    def __len__(self) -> int:
+        return len(self._fresh())
+
+    @property
+    def size_spread(self) -> float:
+        ns = [n for n, _ in self._fresh()]
+        if not ns:
+            return 1.0
+        return max(ns) / max(min(ns), 1)
+
+    def fit(self, min_samples: int = 2) -> TransferCostModel | None:
+        """Weighted fit of t = t0 + n/BW over the fresh window; ``None``
+        when the window is too small or size-degenerate (a single payload
+        size cannot separate fixed overhead from per-byte cost — the
+        caller should probe)."""
+        samples = self._fresh()
+        if len(samples) < max(min_samples, 2):
+            return None
+        ns = np.array([n for n, _ in samples], np.float64)
+        ts = np.array([t for _, t in samples], np.float64)
+        if ns.max() / max(ns.min(), 1.0) < self.min_size_spread:
+            return None
+        # newest sample gets weight 1, a sample ``halflife`` entries older
+        # gets 1/2 — the drifted regime out-weighs the stale one quickly.
+        age = np.arange(len(samples) - 1, -1, -1, dtype=np.float64)
+        w = 0.5 ** (age / self.ewma_halflife)
+        m = TransferCostModel.fit_weighted(ns, ts, w)
+        # a non-positive fitted slope (one stalled small-chunk sample can
+        # make small transfers look slower than large ones) gets clamped
+        # to an absurd bandwidth by fit_weighted; adopting it would read
+        # as enormous fake drift and force a spurious replan. A fitted BW
+        # far above anything actually OBSERVED is the same pathology.
+        bw_observed = float((ns / ts).max())
+        if m.bw_Bps > 50.0 * bw_observed:
+            return None
+        return m
+
+
+def choose_management(tx_fits: dict[str, TransferCostModel],
+                      payload_bytes: int,
+                      current: Management = Management.INTERRUPT
+                      ) -> Management:
+    """Polling-vs-interrupt crossover from the per-mode TX fits.
+
+    The paper's Fig. 4: the user-level polling driver wins below the
+    crossover payload, the kernel interrupt driver above it. With a fit
+    for only one mode there is nothing to compare — keep ``current``
+    (the mode we're running produces samples, the other mode's window
+    empties after its TTL; flipping on missing data would evict a
+    measured-good choice for an unmeasured one)."""
+    poll = tx_fits.get(Management.POLLING.value)
+    intr = tx_fits.get(Management.INTERRUPT.value)
+    if poll is None or intr is None:
+        return current
+    n_star = TransferCostModel.crossover_bytes(poll, intr)
+    return Management.POLLING if payload_bytes < n_star else Management.INTERRUPT
+
+
+class OnlineTransferController:
+    """Refit-and-replan logic, separated from transfer plumbing for tests.
+
+    ``record`` ingests logical transfer stats (payload sizing + cadence);
+    ``ingest_chunks`` drains per-descriptor samples from engines into the
+    per-(direction, mode) :class:`RollingFit` windows; ``propose`` refits
+    and returns a new plan only when drift beats the hysteresis."""
+
+    def __init__(self, payload_bytes: int, *,
+                 model: TransferCostModel | None = None,
+                 cfg: AdaptiveConfig | None = None,
+                 device: jax.Device | None = None):
+        self.cfg = cfg or AdaptiveConfig()
+        if model is None:
+            model = calibrate_transfer(device)
+        self.plan: ChannelPlan = plan_channels(
+            payload_bytes, model=model, max_channels=self.cfg.max_channels,
+            completion_workers=self.cfg.completion_workers)
+        # drift references: the per-direction fits the current plan was
+        # adopted under. RX gets its own reference — serving decode is
+        # RX-dominated, and TX-only drift detection would never see an
+        # RX slowdown (the ring/block policy governs both directions).
+        self._tx_ref: TransferCostModel = model
+        self._rx_ref: TransferCostModel | None = None
+        self._fits: dict[tuple[str, str], RollingFit] = {}
+        self._payloads: "collections.deque[int]" = collections.deque(maxlen=32)
+        self._payloads.append(max(int(payload_bytes), 1))
+        # RLock: propose() holds it end-to-end (plan/counter updates must
+        # be atomic across concurrent submitters) and calls _fit_for, which
+        # also guards the fits dict for the sample-ingestion paths.
+        self._lock = threading.RLock()
+        self._since_refit = 0
+        self._has_logical = False  # logical stats flowing? they own cadence
+        self.refits = 0
+        self.replans = 0
+        self.suppressed = 0  # hysteresis said "noise, keep the plan"
+        self.needs_probe = False
+
+    def _fit_for(self, direction: str, mode: str) -> RollingFit:
+        key = (direction, mode)
+        with self._lock:
+            fit = self._fits.get(key)
+            if fit is None:
+                fit = self._fits[key] = RollingFit(
+                    self.cfg.window, self.cfg.ewma_halflife,
+                    self.cfg.min_size_spread, self.cfg.sample_ttl_s)
+            return fit
+
+    # -- sample ingestion ---------------------------------------------------
+    def record(self, stats: TransferStats) -> None:
+        """Observer hook for logical transfers: tracks the payload mix the
+        plan should be sized for, and the refit cadence."""
+        with self._lock:
+            if stats.direction == "tx":
+                self._payloads.append(stats.nbytes)
+            self._has_logical = True
+            self._since_refit += 1
+
+    def add_chunk_sample(self, direction: str, mode: str, nbytes: int,
+                         seconds: float) -> None:
+        self._fit_for(direction, mode).add(nbytes, seconds)
+        with self._lock:
+            # chunk arrivals drive the refit cadence ONLY when no logical
+            # stats flow (a controller fed samples directly: tests,
+            # replayed traces). With live traffic, counting both would
+            # refit nearly every transfer — documented cadence is per
+            # logical transfer.
+            if not self._has_logical:
+                self._since_refit += 1
+
+    def ingest_chunks(self, engines: Sequence[TransferEngine]) -> int:
+        """Drain every engine's chunk-sample deque into the fit windows."""
+        n = 0
+        for eng in engines:
+            dq = eng.chunk_samples
+            while True:
+                try:
+                    direction, mode, nbytes, seconds = dq.popleft()
+                except IndexError:
+                    break
+                self.add_chunk_sample(direction, mode, nbytes, seconds)
+                n += 1
+        return n
+
+    # -- fitted state -------------------------------------------------------
+    def models(self) -> dict[tuple[str, str], TransferCostModel]:
+        """Latest per-(direction, mode) fits (only windows that can fit)."""
+        with self._lock:
+            fits = dict(self._fits)
+        out = {}
+        for key, fit in fits.items():
+            m = fit.fit(self.cfg.min_samples)
+            if m is not None:
+                out[key] = m
+        return out
+
+    @property
+    def payload_bytes(self) -> int:
+        """Plan for the LARGE payloads in the recent mix: striping decisions
+        are about the big transfers, not the token-sized ones between."""
+        return max(self._payloads) if self._payloads else 1
+
+    # -- the decision -------------------------------------------------------
+    def propose(self, *, force: bool = False) -> ChannelPlan | None:
+        """Refit; return a replacement plan iff t0/BW drifted past the
+        hysteresis threshold (or ``force``). ``None`` means: keep flying.
+
+        Holds the controller lock end-to-end: concurrent submitters must
+        not interleave plan/counter updates, or ``self.plan`` could end up
+        holding a different fit than the plan actually installed."""
+        with self._lock:
+            if not force and self._since_refit < self.cfg.refit_every:
+                return None
+            self._since_refit = 0
+            mode = self.plan.policy.management.value
+            fit = self._fit_for("tx", mode)
+            m = fit.fit(self.cfg.min_samples)
+            if m is None:
+                # window too small or size-degenerate: facade should probe
+                self.needs_probe = len(fit) >= self.cfg.min_samples
+                return None
+            self.needs_probe = False
+            self.refits += 1
+            rx_m = self._fit_for("rx", mode).fit(self.cfg.min_samples)
+            drift = TransferCostModel.drift_ratio(self._tx_ref, m)
+            if rx_m is not None:
+                if self._rx_ref is None:
+                    self._rx_ref = rx_m  # first RX visibility: baseline it
+                else:
+                    drift = max(drift, TransferCostModel.drift_ratio(
+                        self._rx_ref, rx_m))
+            if not force and drift < self.cfg.hysteresis:
+                self.suppressed += 1
+                return None
+            payload = self.payload_bytes
+            tx_fits = {md: mm for (d, md), mm in self.models().items()
+                       if d == "tx"}
+            tx_fits.setdefault(mode, m)
+            mgmt = choose_management(tx_fits, payload,
+                                     current=self.plan.policy.management)
+            if mgmt is Management.POLLING:
+                # below the crossover the user-level polling driver wins:
+                # one channel, one un-partitioned transfer, no worker pool.
+                plan = ChannelPlan(n_channels=1,
+                                   policy=TransferPolicy.user_level_polling(),
+                                   model=tx_fits.get(mgmt.value, m),
+                                   payload_bytes=payload)
+            else:
+                # size the plan from the fit of the mode it will RUN under
+                # (flipping polling->interrupt must not size blocks from
+                # polling's tiny t0), folded with the RX fit — the ring
+                # serves both directions, so plan for the slower one.
+                m_tx = tx_fits.get(Management.INTERRUPT.value, m)
+                m_plan = m_tx if rx_m is None else TransferCostModel(
+                    t0_s=max(m_tx.t0_s, rx_m.t0_s),
+                    bw_Bps=min(m_tx.bw_Bps, rx_m.bw_Bps))
+                plan = plan_channels(
+                    payload, model=m_plan, max_channels=self.cfg.max_channels,
+                    completion_workers=self.cfg.completion_workers)
+            # adoption (either outcome below) re-baselines drift detection
+            # on the fits that produced this decision.
+            self._tx_ref = tx_fits.get(plan.policy.management.value, m)
+            if rx_m is not None:
+                self._rx_ref = rx_m
+            if (plan.policy == self.plan.policy
+                    and plan.n_channels == self.plan.n_channels):
+                # same physical plan, refreshed model: adopt the fit (so
+                # future drift is measured against it) but don't swap
+                # generations — rebuilding identical rings buys nothing
+                # and perturbs traffic.
+                self.plan = plan
+                self.suppressed += 1
+                return None
+            self.replans += 1
+            self.plan = plan
+            return plan
+
+
+class AdaptiveChannelGroup:
+    """Self-tuning transfer engine: a :class:`ChannelGroup` (or, below the
+    polling crossover, a bare :class:`TransferEngine`) per plan generation,
+    swapped at safe points as the online controller replans.
+
+    Duck-types the engine surface the executors use. Safe-point rule: a new
+    generation is installed only when every ticket issued through this
+    facade has completed — ring drained, no slots in flight — and the swap
+    happens on the *submitting* thread, never on a completion worker (a
+    worker closing its own pool would self-deadlock). The layout cache and
+    staging pool are facade-owned and survive swaps."""
+
+    def __init__(self, payload_bytes: int, *,
+                 cfg: AdaptiveConfig | None = None,
+                 model: TransferCostModel | None = None,
+                 devices: Sequence[jax.Device] | None = None,
+                 pool: StagingPool | None = None,
+                 engine_factory: Callable[..., TransferEngine] | None = None):
+        self.cfg = cfg or AdaptiveConfig()
+        self._devices = devices
+        self._factory = engine_factory
+        self.staging_pool = pool or StagingPool()
+        self.layouts = LayoutCache(pool=self.staging_pool)
+        self.controller = OnlineTransferController(
+            payload_bytes, model=model, cfg=self.cfg,
+            device=devices[0] if devices else None)
+        # bounded: one record lands here per logical transfer (per decoded
+        # token in serving) — an unbounded list would grow forever in a
+        # long-running server and defeat the zero-alloc steady state.
+        self.stats: "collections.deque[TransferStats]" = collections.deque(
+            maxlen=4096)
+        self._lock = threading.Lock()
+        self._outstanding: list[Ticket] = []
+        # submitters currently between _enter() and their ticket being
+        # tracked (or their sync transfer finishing): the swap must also
+        # wait these out, or it could close an engine under a submit.
+        self._entrants = 0
+        self._pending_plan: ChannelPlan | None = None
+        self.generation = 0
+        self.swaps = 0
+        self.all_engines: list[TransferEngine] = []  # every generation's
+        self._group = self._build(self.controller.plan)
+
+    # -- generation lifecycle ------------------------------------------------
+    def _build(self, plan: ChannelPlan):
+        if plan.policy.management is Management.INTERRUPT:
+            g = ChannelGroup(plan.policy, n_channels=plan.n_channels,
+                             devices=self._devices, pool=self.staging_pool,
+                             plan=plan, engine_factory=self._factory,
+                             layouts=self.layouts)
+            engines = list(g.engines)
+        else:
+            factory = self._factory or TransferEngine
+            g = factory(plan.policy,
+                        device=self._devices[0] if self._devices else None)
+            engines = [g]
+        self.all_engines.extend(engines)
+        # keep only the most recent generations' engines (diagnostics /
+        # invariant checks); retired engines pinned forever would leak
+        # their stats lists across many swaps.
+        del self.all_engines[:-32]
+        g.add_observer(self._on_stats)
+        return g
+
+    def _on_stats(self, stats: TransferStats) -> None:
+        with self._lock:
+            self.stats.append(stats)
+        self.controller.record(stats)
+
+    @property
+    def plan(self) -> ChannelPlan:
+        return self.controller.plan
+
+    @property
+    def policy(self) -> TransferPolicy:
+        return self._group.policy
+
+    @property
+    def n_channels(self) -> int:
+        return getattr(self._group, "n_channels", 1)
+
+    @property
+    def engines(self) -> list[TransferEngine]:
+        return getattr(self._group, "engines", [self._group])
+
+    def close(self) -> None:
+        self._group.close()
+
+    def __enter__(self) -> "AdaptiveChannelGroup":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- adaptation ----------------------------------------------------------
+    def _drained(self) -> bool:
+        """True when nothing issued through the facade is still in flight
+        (no live ticket, no submitter mid-issue). Caller must hold the
+        lock."""
+        self._outstanding = [t for t in self._outstanding if not t.complete]
+        return not self._outstanding and self._entrants == 0
+
+    def _swap_locked(self) -> None:
+        """Install the pending generation. Caller holds the lock and has
+        verified the drain; runs on a submitting thread only."""
+        plan, self._pending_plan = self._pending_plan, None
+        old = self._group
+        self._group = self._build(plan)
+        self.generation += 1
+        self.swaps += 1
+        # old generation is fully drained: close() only reaps idle workers.
+        old.close()
+
+    def maybe_adapt(self, *, force: bool = False) -> bool:
+        """Refit from the live samples and swap plans if drift warrants it.
+
+        Called from executors at their natural safe points (end of frame /
+        batch boundary) — and implicitly before every submit. Returns True
+        when a new generation was installed."""
+        self.controller.ingest_chunks(self.engines)
+        if self._pending_plan is None:
+            plan = self.controller.propose(force=force)
+            if plan is not None:
+                with self._lock:
+                    self._pending_plan = plan
+            elif self.controller.needs_probe:
+                self._probe()
+        with self._lock:
+            if self._pending_plan is not None and self._drained():
+                self._swap_locked()
+                return True
+        return False
+
+    def _probe(self) -> None:
+        """Uniform traffic can't separate t0 from BW: issue a couple of tiny
+        transfers (the paper's packet-size sweep, online and cheap) so the
+        window regains size diversity."""
+        for nbytes in self.cfg.probe_sizes:
+            x = np.zeros(nbytes, np.uint8)
+            self._issue_tx(x, None, None).wait()
+        self.controller.ingest_chunks(self.engines)
+
+    # -- engine surface ------------------------------------------------------
+    def _enter(self):
+        """Per-submit safe-point check: apply a pending swap if the ring is
+        drained, then return the engine of the current generation. The
+        caller holds an entrant reference until its ticket is tracked (or
+        its sync transfer finished) — see :meth:`_leave`."""
+        if self._pending_plan is None:
+            self.controller.ingest_chunks(self.engines)
+            plan = self.controller.propose()
+            if plan is not None:
+                with self._lock:
+                    self._pending_plan = plan
+        with self._lock:
+            if self._pending_plan is not None and self._drained():
+                self._swap_locked()
+            self._entrants += 1
+            return self._group
+
+    def _leave(self, ticket: Ticket | None) -> None:
+        with self._lock:
+            self._entrants -= 1
+            self._outstanding = [t for t in self._outstanding
+                                 if not t.complete]
+            if ticket is not None:
+                self._outstanding.append(ticket)
+
+    @staticmethod
+    def _done_ticket(result: list) -> Ticket:
+        ev = threading.Event()
+        ev.set()
+        return Ticket(ev, [result])
+
+    def _issue_tx(self, arr: np.ndarray,
+                  callback: Callable[[list], None] | None,
+                  layout: StagedLayout | None) -> Ticket:
+        eng = self._enter()
+        ticket = None
+        try:
+            if eng.policy.management is Management.INTERRUPT:
+                ticket = eng.tx_async(arr, callback=callback, layout=layout)
+                return ticket
+            # polling generation: the submit IS the transfer (the paper's
+            # user-level driver blocks the host); hand back a done ticket.
+            chunks = eng.tx(np.asarray(arr))
+            if callback is not None:
+                callback(chunks)
+            return self._done_ticket(chunks)
+        finally:
+            self._leave(ticket)
+
+    def tx_async(self, host_array: np.ndarray,
+                 callback: Callable[[list], None] | None = None,
+                 layout: StagedLayout | None = None) -> Ticket:
+        return self._issue_tx(host_array, callback, layout)
+
+    def tx(self, host_array: np.ndarray) -> list[jax.Array]:
+        return self.tx_async(host_array).wait()
+
+    def rx_async(self, device_arrays: Sequence[jax.Array],
+                 callback: Callable[[list], None] | None = None,
+                 out: "np.ndarray | Sequence[np.ndarray] | None" = None
+                 ) -> Ticket:
+        eng = self._enter()
+        ticket = None
+        try:
+            if eng.policy.management is Management.INTERRUPT:
+                ticket = eng.rx_async(device_arrays, callback=callback,
+                                      out=out)
+                return ticket
+            arrays = list(device_arrays)
+            if out is not None and isinstance(out, np.ndarray):
+                # bare engines take per-array buffers; carve the flat array
+                out = carve_flat_out(out, arrays)
+            results = eng.rx(arrays, out=out)
+            if callback is not None:
+                callback(results)
+            return self._done_ticket(results)
+        finally:
+            self._leave(ticket)
+
+    def rx(self, device_arrays: Sequence[jax.Array],
+           out: "np.ndarray | Sequence[np.ndarray] | None" = None
+           ) -> list[np.ndarray]:
+        return self.rx_async(device_arrays, out=out).wait()
+
+    # -- reporting -----------------------------------------------------------
+    def summary(self) -> dict[str, dict[str, float]]:
+        with self._lock:
+            stats = list(self.stats)
+        tx = [s for s in stats if s.direction == "tx"]
+        rx = [s for s in stats if s.direction == "rx"]
+
+        def agg(ss):
+            if not ss:
+                return {"us_per_byte": float("nan"), "gbps": float("nan")}
+            tot_b = sum(s.nbytes for s in ss)
+            tot_t = sum(s.wall_s for s in ss)
+            return {"us_per_byte": tot_t * 1e6 / max(tot_b, 1),
+                    "gbps": tot_b / max(tot_t, 1e-12) / 1e9}
+
+        return {"tx": agg(tx), "rx": agg(rx)}
+
+    def adapt_summary(self) -> dict[str, Any]:
+        """Controller state for benchmarks/ROADMAP reporting."""
+        c = self.controller
+        return {
+            "generation": self.generation,
+            "swaps": self.swaps,
+            "refits": c.refits,
+            "replans": c.replans,
+            "suppressed": c.suppressed,
+            "plan": c.plan.row(),
+        }

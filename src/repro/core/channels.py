@@ -42,6 +42,7 @@ scale:
 
 from __future__ import annotations
 
+import collections
 import math
 import os
 import threading
@@ -63,6 +64,9 @@ from repro.core.transfer import (
     TransferEngine,
     TransferPolicy,
     TransferStats,
+    _STATS_WINDOW,
+    _check_out,
+    carve_flat_out,
 )
 
 _MIN_STRIPE_BYTES = 1 << 20  # below this a second channel costs more than t0
@@ -235,7 +239,9 @@ class ChannelGroup:
                  devices: Sequence[jax.Device] | None = None,
                  pool: StagingPool | None = None,
                  min_stripe_bytes: int = _MIN_STRIPE_BYTES,
-                 plan: ChannelPlan | None = None):
+                 plan: ChannelPlan | None = None,
+                 engine_factory: Callable[..., TransferEngine] | None = None,
+                 layouts: LayoutCache | None = None):
         policy = policy or TransferPolicy.kernel_level_ring()
         if policy.management is not Management.INTERRUPT:
             raise ValueError(
@@ -256,10 +262,20 @@ class ChannelGroup:
         self.n_channels = n_channels
         self.min_stripe_bytes = max(int(min_stripe_bytes), 1)
         self.staging_pool = pool or StagingPool()
-        self.layouts = LayoutCache(pool=self.staging_pool)
-        self.engines = [TransferEngine(policy, device=d) for d in devices]
-        self.stats: list[TransferStats] = []
+        # ``layouts`` may be handed in so plan generations (the online
+        # adaptive controller rebuilds the group on drift) keep their cached
+        # staging layouts instead of re-deriving every pack plan.
+        self.layouts = layouts or LayoutCache(pool=self.staging_pool)
+        # ``engine_factory`` builds each member ring; tests and the drift
+        # benchmark inject engines with synthetic timing through it.
+        factory = engine_factory or TransferEngine
+        self.engines = [factory(policy, device=d) for d in devices]
+        # bounded recent history (see TransferEngine.stats); aggregate
+        # totals live on the member engines' counters.
+        self.stats: "collections.deque[TransferStats]" = collections.deque(
+            maxlen=_STATS_WINDOW)
         self._stats_lock = threading.Lock()
+        self._observers: list[Callable[[TransferStats], None]] = []
         self._rr = 0  # round-robin cursor for sub-stripe payloads
         self._joiners: list[threading.Thread] = []
 
@@ -269,13 +285,15 @@ class ChannelGroup:
              max_channels: int = 4,
              devices: Sequence[jax.Device] | None = None,
              model: TransferCostModel | None = None,
-             pool: StagingPool | None = None) -> "ChannelGroup":
+             pool: StagingPool | None = None,
+             engine_factory: Callable[..., TransferEngine] | None = None
+             ) -> "ChannelGroup":
         """Calibrate, fit, and build the group the cost model recommends."""
         device = devices[0] if devices else None
         plan = plan_channels(payload_bytes, model=model, device=device,
                              max_channels=max_channels)
         return cls(plan.policy, n_channels=plan.n_channels, devices=devices,
-                   pool=pool, plan=plan)
+                   pool=pool, plan=plan, engine_factory=engine_factory)
 
     def close(self) -> None:
         # joiners first (they wait on engine tickets, which need live pools)
@@ -292,6 +310,11 @@ class ChannelGroup:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    def maybe_adapt(self, *, force: bool = False) -> bool:
+        """Safe-point adaptation hook (no-op: a plain group's plan is
+        fixed at construction; AdaptiveChannelGroup implements it)."""
+        return False
+
     # -- bookkeeping ---------------------------------------------------------
     @property
     def tag(self) -> str:
@@ -301,13 +324,24 @@ class ChannelGroup:
     def max_inflight(self) -> int:
         return max((e.max_inflight for e in self.engines), default=0)
 
+    def add_observer(self, fn: Callable[[TransferStats], None]) -> None:
+        """Subscribe to every group-level recorded stat (the refit feed)."""
+        with self._stats_lock:
+            self._observers.append(fn)
+
     def _record(self, stats: TransferStats) -> None:
+        if not stats.management:
+            stats.management = self.policy.management.value
         with self._stats_lock:
             self.stats.append(stats)
+            observers = list(self._observers)
+        for fn in observers:
+            fn(stats)
 
     def _next_channel(self) -> TransferEngine:
-        eng = self.engines[self._rr % self.n_channels]
-        self._rr += 1
+        with self._stats_lock:
+            eng = self.engines[self._rr % self.n_channels]
+            self._rr += 1
         return eng
 
     def _delegated(self, direction: str, nbytes: int, n_items: int,
@@ -451,16 +485,43 @@ class ChannelGroup:
         return self.tx_async(host_array).wait()
 
     # -- RX -------------------------------------------------------------------
+    def _rx_outs(self, arrays: list,
+                 out: "np.ndarray | Sequence[np.ndarray] | None") -> list:
+        """Normalise ``out=`` to one caller-owned buffer per device array.
+
+        Accepts either a sequence of per-array buffers or ONE flat
+        preallocated array covering the whole payload — the latter is carved
+        into per-array byte-range views (zero-copy), so striped ordered
+        reassembly lands each channel's result directly in the caller's
+        array at its final offset."""
+        if out is None:
+            return [None] * len(arrays)
+        if isinstance(out, np.ndarray):
+            return carve_flat_out(out, arrays)
+        # per-array buffers: validate count/writability/contiguity/sizes UP
+        # FRONT — a bad list failing mid-stripe on an issuer thread would
+        # surface as an opaque error after other channels already wrote.
+        return _check_out(arrays, out)
+
     def rx_async(self, device_arrays: Sequence[jax.Array],
-                 callback: Callable[[list], None] | None = None) -> Ticket:
+                 callback: Callable[[list], None] | None = None,
+                 out: "np.ndarray | Sequence[np.ndarray] | None" = None
+                 ) -> Ticket:
         """Striped asynchronous RX: arrays spread over channels greedily by
-        byte load; results come back in the original order."""
+        byte load; results come back in the original order.
+
+        ``out``: caller-owned destination — per-array buffers or one flat
+        array for the whole payload. Channels write their stripes straight
+        into it; the ticket yields the caller's buffers (or the flat
+        array's byte views), never fresh allocations."""
         arrays = list(device_arrays)
+        outs = self._rx_outs(arrays, out)
         nbytes = sum(int(a.size) * a.dtype.itemsize for a in arrays)
         if len(arrays) <= 1 or nbytes < 2 * self.min_stripe_bytes:
             return self._next_channel().rx_async(
                 arrays, callback=self._delegated("rx", nbytes, len(arrays),
-                                                 callback))
+                                                 callback),
+                out=outs if out is not None else None)
         # greedy least-loaded assignment (bytes-balanced striping)
         assign: list[list[int]] = [[] for _ in range(self.n_channels)]
         loads = [0] * self.n_channels
@@ -473,12 +534,14 @@ class ChannelGroup:
         t0 = time.perf_counter()
         used = [(c, idxs) for c, idxs in enumerate(assign) if idxs]
         issue = [lambda c=c, idxs=idxs: self.engines[c].rx_async(
-            [arrays[i] for i in idxs]) for c, idxs in used]
+            [arrays[i] for i in idxs],
+            out=([outs[i] for i in idxs] if out is not None else None))
+            for c, idxs in used]
 
         def assemble(per_channel: list) -> list:
             results: list = [None] * len(arrays)
-            for (_, idxs), outs in zip(used, per_channel):
-                for i, o in zip(idxs, outs):
+            for (_, idxs), ch_out in zip(used, per_channel):
+                for i, o in zip(idxs, ch_out):
                     results[i] = o
             return results
 
@@ -486,9 +549,12 @@ class ChannelGroup:
                            ticket_out, callback, t0)
         return Ticket(master, ticket_out)
 
-    def rx(self, device_arrays: Sequence[jax.Array]) -> list[np.ndarray]:
-        """Synchronous striped RX; host arrays in the original order."""
-        return self.rx_async(device_arrays).wait()
+    def rx(self, device_arrays: Sequence[jax.Array],
+           out: "np.ndarray | Sequence[np.ndarray] | None" = None
+           ) -> list[np.ndarray]:
+        """Synchronous striped RX; host arrays in the original order. With
+        ``out=`` the results land in the caller's preallocated buffers."""
+        return self.rx_async(device_arrays, out=out).wait()
 
     # -- reporting ------------------------------------------------------------
     def summary(self) -> dict[str, dict[str, float]]:

@@ -75,13 +75,40 @@ class TransferCostModel:
     @staticmethod
     def fit(nbytes: np.ndarray, seconds: np.ndarray) -> "TransferCostModel":
         """Least-squares fit of t = t0 + n/bw over measured (n, t) samples."""
+        return TransferCostModel.fit_weighted(nbytes, seconds, None)
+
+    @staticmethod
+    def fit_weighted(nbytes: np.ndarray, seconds: np.ndarray,
+                     weights: np.ndarray | None) -> "TransferCostModel":
+        """Weighted least-squares fit of t = t0 + n/bw.
+
+        ``weights`` (same length as the samples) biases the fit toward
+        recent samples — the online refit passes EWMA-decayed weights so a
+        drifting t0/BW shows up within a window instead of being averaged
+        away by stale history."""
         nbytes = np.asarray(nbytes, dtype=np.float64)
         seconds = np.asarray(seconds, dtype=np.float64)
         a = np.stack([np.ones_like(nbytes), nbytes], axis=1)
-        coef, *_ = np.linalg.lstsq(a, seconds, rcond=None)
+        b = seconds
+        if weights is not None:
+            w = np.sqrt(np.asarray(weights, dtype=np.float64))
+            a = a * w[:, None]
+            b = b * w
+        coef, *_ = np.linalg.lstsq(a, b, rcond=None)
         t0 = float(max(coef[0], 1e-9))
         inv_bw = float(max(coef[1], 1e-15))
         return TransferCostModel(t0_s=t0, bw_Bps=1.0 / inv_bw)
+
+    @staticmethod
+    def drift_ratio(a: "TransferCostModel", b: "TransferCostModel") -> float:
+        """Largest factor change between two fits, over t0 and BW (>= 1).
+
+        The online controller replans only when this exceeds its hysteresis
+        threshold — the 'did the host actually change' test."""
+        rt = max(a.t0_s / max(b.t0_s, 1e-12), b.t0_s / max(a.t0_s, 1e-12))
+        rb = max(a.bw_Bps / max(b.bw_Bps, 1e-3),
+                 b.bw_Bps / max(a.bw_Bps, 1e-3))
+        return max(rt, rb)
 
     @staticmethod
     def crossover_bytes(a: "TransferCostModel", b: "TransferCostModel") -> float:

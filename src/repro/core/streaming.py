@@ -115,9 +115,36 @@ class HostStreamingExecutor:
     ``BENCH_transfer.json``.
     """
 
-    def __init__(self, engine: "TransferEngine | Any", *, staged: bool = True):
+    def __init__(self, engine: "TransferEngine | Any", *, staged: bool = True,
+                 zero_copy_rx: bool = True):
         self.engine = engine
         self.staged = staged
+        # per-layer host output buffers, reused frame after frame: with
+        # ``zero_copy_rx`` each INTERIOR layer's fmap RX lands in the SAME
+        # executor-owned buffer every frame (``rx_async(..., out=)``), so
+        # steady-state frames allocate nothing on the readback side. The
+        # FINAL layer's output — the frame result handed to the caller —
+        # is always a fresh array, so callers may keep frames without them
+        # aliasing each other.
+        self.zero_copy_rx = zero_copy_rx
+        self._rx_bufs: dict[Any, np.ndarray] = {}
+
+    def _rx_out(self, key: Any, y: jax.Array, *,
+                last: bool) -> list[np.ndarray] | None:
+        if not self.zero_copy_rx or last:
+            return None
+        shape, dtype = tuple(y.shape), np.dtype(y.dtype)
+        buf = self._rx_bufs.get(key)
+        if buf is None or buf.shape != shape or buf.dtype != dtype:
+            buf = np.empty(shape, dtype)
+            self._rx_bufs[key] = buf
+        return [buf]
+
+    def _frame_end(self) -> None:
+        """End-of-frame safe point: the ring is drained (every ticket
+        retired), so an adaptive engine may swap its plan generation now
+        (no-op on plain engines/groups)."""
+        self.engine.maybe_adapt()
 
     def run(
         self,
@@ -129,8 +156,11 @@ class HostStreamingExecutor:
             policy.management is Management.INTERRUPT and policy.depth >= 2
         )
         if overlapped and self.staged:
-            return self._run_overlapped(layers, x)
-        return self._run_basic(layers, x, prefetch=overlapped)
+            out = self._run_overlapped(layers, x)
+        else:
+            out = self._run_basic(layers, x, prefetch=overlapped)
+        self._frame_end()
+        return out
 
     # -- shared input staging ----------------------------------------------
     def _tx_input(self, x: np.ndarray) -> tuple[jax.Array, float, int]:
@@ -209,9 +239,12 @@ class HostStreamingExecutor:
             timing.layers.append(
                 LayerTiming(name, tx_s, compute_s, 0.0, tx_bytes, rx_bytes)
             )
-            # --- RX: retire layer k-1's ticket, launch layer k's
+            # --- RX: retire layer k-1's ticket, launch layer k's — an
+            # interior fmap streams back into its reused host buffer; the
+            # final layer's (the caller's frame result) gets a fresh one
             drain_rx()
-            pending_rx = (i, engine.rx_async([y]))
+            pending_rx = (i, engine.rx_async(
+                [y], out=self._rx_out(i, y, last=i == len(layers) - 1)))
             x_dev = y  # next layer consumes device-resident output
         drain_rx()
         return host_out, timing
@@ -255,7 +288,8 @@ class HostStreamingExecutor:
 
             # --- RX (per the paper, each layer's output returns to the PS)
             t0 = time.perf_counter()
-            host_out = self.engine.rx([y])[0]
+            host_out = self.engine.rx(
+                [y], out=self._rx_out(i, y, last=i == len(layers) - 1))[0]
             rx_s = time.perf_counter() - t0
 
             timing.layers.append(

@@ -53,6 +53,7 @@ is real.
 
 from __future__ import annotations
 
+import collections
 import enum
 import math
 import queue
@@ -63,6 +64,14 @@ from typing import Any, Callable, Sequence
 
 import jax
 import numpy as np
+
+# Per-engine rolling window of (direction, management, nbytes, seconds)
+# chunk samples — the online cost-model refit (repro.core.adaptive) fits
+# t(n) = t0 + n/BW from these, so the window must bound memory on its own.
+_CHUNK_SAMPLE_WINDOW = 512
+# Per-engine/group window of recorded TransferStats (recent history for
+# summaries/tests; exact lifetime totals live in the *_total counters).
+_STATS_WINDOW = 4096
 
 
 class Management(enum.Enum):
@@ -163,6 +172,7 @@ class TransferStats:
     n_chunks: int
     direction: str  # "tx" (host->device) or "rx" (device->host)
     policy_tag: str
+    management: str = ""  # Management mode the transfer ran under
 
     @property
     def us_per_byte(self) -> float:
@@ -435,23 +445,79 @@ class LayoutCache:
     def __init__(self, pool: Any | None = None) -> None:
         self._layouts: dict[Any, StagedLayout] = {}
         self._pool = pool
-        self.hits = 0
+        self._lock = threading.Lock()  # serving/pipeline hit one cache from
+        self.hits = 0                  # several threads concurrently
         self.misses = 0
 
     def get(self, key: Any, arrays: Sequence[np.ndarray]) -> StagedLayout:
-        lay = self._layouts.get(key)
-        if lay is not None and lay.matches(arrays):
-            self.hits += 1
+        with self._lock:
+            lay = self._layouts.get(key)
+            if lay is not None and lay.matches(arrays):
+                self.hits += 1
+                return lay
+            if lay is not None:
+                lay.release()  # stale shapes: recycle the old staging buffer
+            lay = StagedLayout(arrays, pool=self._pool)
+            self._layouts[key] = lay
+            self.misses += 1
             return lay
-        if lay is not None:
-            lay.release()  # stale shapes: recycle the old staging buffer
-        lay = StagedLayout(arrays, pool=self._pool)
-        self._layouts[key] = lay
-        self.misses += 1
-        return lay
 
     def __len__(self) -> int:
         return len(self._layouts)
+
+
+def _check_out(arrays: Sequence[Any],
+               out: Sequence[np.ndarray] | None) -> list:
+    """Validate caller-owned RX destination buffers against device arrays.
+
+    Each buffer must be writable, C-contiguous, and byte-size-matched to
+    its array; dtype may differ (the copy is a byte-level landing, the
+    caller keeps whatever view it allocated). Contiguity is load-bearing:
+    ``reshape(-1)`` on a non-contiguous buffer would return a COPY and the
+    transfer would silently land in a temporary instead of the caller's
+    memory."""
+    if out is None:
+        return [None] * len(arrays)
+    outs = list(out)
+    if len(outs) != len(arrays):
+        raise ValueError(
+            f"out= needs one buffer per device array "
+            f"(got {len(outs)} buffers for {len(arrays)} arrays)")
+    for i, (a, o) in enumerate(zip(arrays, outs)):
+        need = int(a.size) * a.dtype.itemsize
+        o = np.asarray(o)
+        if not o.flags.writeable:
+            raise ValueError(f"out[{i}] is not writable")
+        if not o.flags.c_contiguous:
+            raise ValueError(
+                f"out[{i}] is not C-contiguous; the RX landing would copy "
+                f"into a temporary instead of the caller's buffer")
+        if o.nbytes != need:
+            raise ValueError(
+                f"out[{i}] holds {o.nbytes} bytes but the device array "
+                f"needs {need}")
+        outs[i] = o
+    return outs
+
+
+def carve_flat_out(out: np.ndarray, arrays: Sequence[Any]) -> list[np.ndarray]:
+    """Carve ONE caller-owned flat buffer into per-array byte-range views
+    (zero-copy), in array order — the striped-RX landing zone."""
+    total = sum(int(a.size) * a.dtype.itemsize for a in arrays)
+    if not out.flags.writeable:
+        raise ValueError("out= flat buffer is not writable")
+    if not out.flags.c_contiguous:
+        raise ValueError("out= flat buffer must be C-contiguous")
+    if out.nbytes != total:
+        raise ValueError(
+            f"out= holds {out.nbytes} bytes but the payload needs {total}")
+    flat = out.reshape(-1).view(np.uint8)
+    views, off = [], 0
+    for a in arrays:
+        nb = int(a.size) * a.dtype.itemsize
+        views.append(flat[off:off + nb])
+        off += nb
+    return views
 
 
 def _split(arr: np.ndarray, policy: TransferPolicy) -> list[np.ndarray]:
@@ -479,7 +545,11 @@ class TransferEngine:
                  scheduler: "CooperativeScheduler | None" = None):
         self.policy = policy
         self.device = device or jax.devices()[0]
-        self.stats: list[TransferStats] = []
+        # bounded: one record per logical transfer (per decoded token on
+        # the serving path) — unbounded history would leak in a
+        # long-running server; aggregates live in the *_total counters.
+        self.stats: "collections.deque[TransferStats]" = collections.deque(
+            maxlen=_STATS_WINDOW)
         self.layouts = LayoutCache()
         # descriptor ring: one completion event per staging slot
         self._buffers_busy: list[threading.Event | None] = [None] * policy.depth
@@ -491,6 +561,18 @@ class TransferEngine:
         self.max_inflight = 0  # high-water mark of concurrent descriptors
         self.inflight_hwm = 0  # high-water mark of concurrently HELD slots
         self._stats_lock = threading.Lock()
+        # aggregate byte/transfer counters, mutated ONLY under _stats_lock —
+        # the async completion path records from worker threads, so an
+        # unlocked read-modify-write here silently drops bytes under load.
+        self.tx_bytes_total = 0
+        self.rx_bytes_total = 0
+        self.tx_count = 0
+        self.rx_count = 0
+        self._observers: list[Callable[[TransferStats], None]] = []
+        # bounded deque: append/popleft are GIL-atomic, so samplers (workers)
+        # and the refit consumer need no extra lock here.
+        self.chunk_samples: "collections.deque[tuple[str, str, int, float]]" \
+            = collections.deque(maxlen=_CHUNK_SAMPLE_WINDOW)
         self._pool: _CompletionPool | None = None
         # SCHEDULED mode needs a scheduler; lazily import to avoid cycle.
         if scheduler is None and policy.management is Management.SCHEDULED:
@@ -510,6 +592,12 @@ class TransferEngine:
         if self._pool is not None:
             self._pool.close()
             self._pool = None
+
+    def maybe_adapt(self, *, force: bool = False) -> bool:
+        """Engine-surface hook for safe-point adaptation. A plain engine
+        has no online controller — executors call this unconditionally at
+        frame/batch/request boundaries; repro.core.adaptive overrides it."""
+        return False
 
     def __enter__(self) -> "TransferEngine":
         return self
@@ -558,9 +646,27 @@ class TransferEngine:
             self._inflight -= 1
         release.set()
 
+    def add_observer(self, fn: Callable[[TransferStats], None]) -> None:
+        """Subscribe to every recorded stat (the online-refit feed). The
+        observer runs on whichever thread completes the transfer; it must be
+        cheap and must not issue transfers on this engine."""
+        with self._stats_lock:
+            self._observers.append(fn)
+
     def _record(self, stats: TransferStats) -> None:
+        if not stats.management:
+            stats.management = self.policy.management.value
         with self._stats_lock:
             self.stats.append(stats)
+            if stats.direction == "tx":
+                self.tx_bytes_total += stats.nbytes
+                self.tx_count += 1
+            else:
+                self.rx_bytes_total += stats.nbytes
+                self.rx_count += 1
+            observers = list(self._observers)
+        for fn in observers:
+            fn(stats)
 
     # -- TX: host -> device -------------------------------------------------
     def tx(self, host_array: np.ndarray) -> list[jax.Array]:
@@ -568,7 +674,7 @@ class TransferEngine:
         chunks = _split(np.asarray(host_array), self.policy)
         t0 = time.perf_counter()
         out = self._run_chunks(
-            [(c, "tx") for c in chunks],
+            [(c, "tx", None) for c in chunks],
         )
         wall = time.perf_counter() - t0
         self._record(
@@ -577,34 +683,71 @@ class TransferEngine:
         return out
 
     # -- RX: device -> host -------------------------------------------------
-    def rx(self, device_arrays: Sequence[jax.Array]) -> list[np.ndarray]:
-        """Transfer device arrays back to host memory."""
-        nbytes = sum(int(a.size) * a.dtype.itemsize for a in device_arrays)
+    def rx(self, device_arrays: Sequence[jax.Array],
+           out: Sequence[np.ndarray] | None = None) -> list[np.ndarray]:
+        """Transfer device arrays back to host memory.
+
+        ``out``: optional caller-owned destination buffers, one per device
+        array (matching byte sizes). When given, results are written IN
+        PLACE and the returned list contains the caller's own buffer
+        objects — the zero-copy detokenize path."""
+        arrays = list(device_arrays)
+        outs = _check_out(arrays, out)
+        nbytes = sum(int(a.size) * a.dtype.itemsize for a in arrays)
         t0 = time.perf_counter()
-        out = self._run_chunks([(a, "rx") for a in device_arrays])
+        result = self._run_chunks(
+            [(a, "rx", o) for a, o in zip(arrays, outs)])
         wall = time.perf_counter() - t0
         self._record(
-            TransferStats(nbytes, wall, len(device_arrays), "rx", self.policy.tag)
+            TransferStats(nbytes, wall, len(arrays), "rx", self.policy.tag)
         )
-        return out
+        return result
 
     # -- chunk executor under the three managements -------------------------
-    def _one(self, payload, direction: str):
+    def _one(self, payload, direction: str, out: np.ndarray | None = None):
+        """Move ONE chunk (subclasses override to inject synthetic timing)."""
         if direction == "tx":
-            return jax.device_put(payload, self.device)
-        return np.asarray(jax.device_get(payload))
+            r = jax.device_put(payload, self.device)
+            r.block_until_ready()
+            return r
+        host = np.asarray(jax.device_get(payload))
+        if out is None:
+            return host
+        # zero-copy RX: land the bytes in the CALLER's buffer; the only
+        # steady-state work is the one unavoidable device->host copy. On
+        # the CPU backend ``device_get`` returns a VIEW of the device
+        # buffer (verified: shares memory, tracemalloc-silent), so this is
+        # exactly one memcpy and zero allocations; on an accelerator
+        # backend device_get itself is the DMA and the copyto is the
+        # host-side landing (a dlpack/pinned-buffer path could fuse them).
+        np.copyto(out.reshape(-1).view(np.uint8),
+                  host.reshape(-1).view(np.uint8))
+        return out
 
-    def _run_chunks(self, items: list[tuple[Any, str]]) -> list:
+    def _one_timed(self, payload, direction: str,
+                   out: np.ndarray | None = None):
+        """_one plus a (direction, mode, nbytes, seconds) chunk sample —
+        the per-descriptor timings the online refit fits t0/BW from."""
+        if direction == "tx":
+            nbytes = int(np.asarray(payload).nbytes)
+        else:
+            nbytes = int(payload.size) * payload.dtype.itemsize
+        t0 = time.perf_counter()
+        r = self._one(payload, direction, out)
+        self.chunk_samples.append(
+            (direction, self.policy.management.value, nbytes,
+             time.perf_counter() - t0))
+        return r
+
+    def _run_chunks(self, items: list[tuple[Any, str, Any]]) -> list:
         mgmt = self.policy.management
         if mgmt is Management.POLLING:
             # user-level polling: issue, then spin until ready, per chunk.
             results = []
-            for payload, direction in items:
+            for payload, direction, dst in items:
                 idx, release = self._acquire_buffer()
                 try:
-                    r = self._one(payload, direction)
-                    if direction == "tx":
-                        r.block_until_ready()
+                    r = self._one_timed(payload, direction, dst)
                 finally:
                     self._release_buffer(idx, release)
                 results.append(r)
@@ -615,21 +758,18 @@ class TransferEngine:
             # interleave other registered work between chunks.
             results: list = [None] * len(items)
 
-            def make_task(i, payload, direction):
+            def make_task(i, payload, direction, dst):
                 def task():
                     idx, release = self._acquire_buffer()
                     try:
-                        r = self._one(payload, direction)
-                        if direction == "tx":
-                            r.block_until_ready()
-                        results[i] = r
+                        results[i] = self._one_timed(payload, direction, dst)
                     finally:
                         self._release_buffer(idx, release)
 
                 return task
 
-            for i, (payload, direction) in enumerate(items):
-                self._scheduler.submit(make_task(i, payload, direction))
+            for i, (payload, direction, dst) in enumerate(items):
+                self._scheduler.submit(make_task(i, payload, direction, dst))
             self._scheduler.drain()
             return results
 
@@ -643,22 +783,25 @@ class TransferEngine:
         tickets: list[Ticket | None] = [None] * len(items)
         results: list = [None] * len(items)
         inflight: list[int] = []
-        for i, (payload, direction) in enumerate(items):
+        for i, (payload, direction, dst) in enumerate(items):
             while len(inflight) >= depth:
                 j = inflight.pop(0)
                 results[j] = tickets[j].wait()
             idx, release = self._acquire_buffer()
 
-            def work(p=payload, d=direction, idx=idx, release=release):
+            def work(p=payload, d=direction, o=dst, idx=idx, release=release):
                 try:
-                    return self._one(p, d)
+                    return self._one_timed(p, d, o)
                 finally:
                     self._release_buffer(idx, release)
 
             done, out = pool.submit(work)
             tickets[i] = Ticket(done, out)
             inflight.append(i)
-            self.max_inflight = max(self.max_inflight, len(inflight))
+            with self._ring_lock:
+                # under the ring lock: racing _acquire_buffer also updates
+                # this high-water mark, and lost updates hide depth bugs.
+                self.max_inflight = max(self.max_inflight, len(inflight))
         for j in inflight:
             results[j] = tickets[j].wait()
         return results
@@ -666,7 +809,8 @@ class TransferEngine:
     # -- async API (INTERRUPT only): returns a ticket, caller is "interrupted"
     def _submit_async(self, payloads: list, direction: str, nbytes: int,
                       callback: Callable[[list], None] | None,
-                      layout: StagedLayout | None) -> Ticket:
+                      layout: StagedLayout | None,
+                      outs: Sequence[np.ndarray | None] | None = None) -> Ticket:
         """Stage ``payloads`` as ring descriptors, one per chunk.
 
         Ring slots are acquired on the *caller* thread, so a full ring
@@ -730,17 +874,15 @@ class TransferEngine:
 
         for i, payload in enumerate(payloads):
             idx, release = self._acquire_buffer()
+            dst = outs[i] if outs is not None else None
 
-            def work(i=i, p=payload, idx=idx, release=release):
+            def work(i=i, p=payload, o=dst, idx=idx, release=release):
                 err = None
                 with state_lock:
                     if state["t0"] is None:
                         state["t0"] = time.perf_counter()
                 try:
-                    r = self._one(p, direction)
-                    if direction == "tx":
-                        r.block_until_ready()
-                    results[i] = r
+                    results[i] = self._one_timed(p, direction, o)
                 except BaseException as e:
                     err = e
                 finally:
@@ -764,15 +906,23 @@ class TransferEngine:
                                   layout)
 
     def rx_async(self, device_arrays: Sequence[jax.Array],
-                 callback: Callable[[list], None] | None = None) -> Ticket:
+                 callback: Callable[[list], None] | None = None,
+                 out: Sequence[np.ndarray] | None = None) -> Ticket:
         """Asynchronous RX: device arrays stream back to host on a completion
         worker while the caller keeps computing. ``wait()`` returns the host
-        ndarray list."""
+        ndarray list.
+
+        ``out``: caller-owned destination buffers (one per array, byte sizes
+        matching). The completion worker writes each result IN PLACE and the
+        ticket yields the caller's own buffer objects — steady state does
+        zero per-call host allocations (the serving detokenize path)."""
         if self.policy.management is not Management.INTERRUPT:
             raise ValueError("rx_async requires INTERRUPT management")
         arrays = list(device_arrays)
+        outs = _check_out(arrays, out)
         nbytes = sum(int(a.size) * a.dtype.itemsize for a in arrays)
-        return self._submit_async(arrays, "rx", nbytes, callback, None)
+        return self._submit_async(arrays, "rx", nbytes, callback, None,
+                                  outs=outs if out is not None else None)
 
     # -- reporting -----------------------------------------------------------
     def summary(self) -> dict[str, float]:

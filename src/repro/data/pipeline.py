@@ -117,6 +117,10 @@ class StagedPipeline:
             arrays = [np.ascontiguousarray(host_batch[k]) for k in keys]
             lay = self.engine.layouts.get(("batch", tuple(keys)), arrays)
             dev = lay.unpack(self.engine.tx(lay.pack(arrays)))
+            # batch boundary, TX retired: safe point for an online-adaptive
+            # engine to refit its cost model and swap plan generations
+            # (no-op on plain engines/groups).
+            self.engine.maybe_adapt()
             return dict(zip(keys, dev))
         return jax.device_put(host_batch)
 

@@ -93,6 +93,10 @@ class ContinuousBatchingEngine:
             length=jnp.zeros((model.cfg.n_layers, n_slots), jnp.int32))
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
         self.lengths = np.zeros(n_slots, np.int64)
+        # decoded-token landing zone: every step's RX writes this buffer in
+        # place (rx_async out=), so steady-state decode does zero per-step
+        # host allocation on the detokenize path.
+        self._tok_host = np.empty(n_slots, np.int32)
         self._decode = jax.jit(model.decode)
         self._prefill1 = jax.jit(lambda p, b: model.prefill(p, b, max_seq))
         self.steps = 0
@@ -153,17 +157,23 @@ class ContinuousBatchingEngine:
         # crosses back to the host, as a measured RX on the engine. Under
         # INTERRUPT it rides a completion worker while the next-step input
         # prep dispatches.
-        ticket = (self.transfer.rx_async([tok_dev])
+        out = [self._tok_host]  # reused every step: zero-copy detokenize
+        ticket = (self.transfer.rx_async([tok_dev], out=out)
                   if self.transfer.policy.management is Management.INTERRUPT
                   else None)
         self.tokens = tok_dev[:, None].astype(jnp.int32)
-        nxt = ticket.wait()[0] if ticket else self.transfer.rx([tok_dev])[0]
+        nxt = ticket.wait()[0] if ticket else self.transfer.rx(
+            [tok_dev], out=out)[0]
         nxt = np.asarray(nxt).reshape(-1)
         for slot in active:
             self.slots[slot].tokens.append(int(nxt[slot]))
             self.lengths[slot] += 1
         self.steps += 1
         self._retire()
+        # the step's RX ticket is retired — a drained-ring safe point for an
+        # online-adaptive transfer engine to swap plan generations (no-op
+        # on plain engines/groups).
+        self.transfer.maybe_adapt()
         return len(active)
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:

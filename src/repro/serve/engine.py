@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.adaptive import AdaptiveChannelGroup, AdaptiveConfig
 from repro.core.channels import ChannelGroup
 from repro.core.transfer import (
     Management,
@@ -48,6 +49,9 @@ class ServeConfig:
     # is the planner's channel CEILING; 1 there means "planner's choice")
     n_channels: int = 1
     adaptive_transfer: bool = False  # calibrate + fit policy at construction
+    # keep refitting the fitted policy from live traffic and swap plans at
+    # safe points (implies adaptive_transfer's construction-time calibration)
+    online_adaptation: bool = False
 
 
 @dataclass
@@ -69,7 +73,7 @@ class ServingEngine:
         self.model = model
         self.params = params
         self.cfg = cfg
-        if cfg.adaptive_transfer:
+        if cfg.adaptive_transfer or cfg.online_adaptation:
             if policy is not None:
                 raise ValueError(
                     "adaptive_transfer fits the policy from calibration; "
@@ -79,9 +83,16 @@ class ServingEngine:
             # ring depth / channel count for the prompt-batch payload. The
             # default n_channels=1 leaves the count to the planner (up to 4).
             prompt_bytes = cfg.max_batch * cfg.max_seq * 4  # int32 tokens
-            self.engine = ChannelGroup.auto(
-                prompt_bytes,
-                max_channels=cfg.n_channels if cfg.n_channels > 1 else 4)
+            max_ch = cfg.n_channels if cfg.n_channels > 1 else 4
+            if cfg.online_adaptation:
+                # construction-time calibration PLUS rolling refit: the
+                # engine keeps re-fitting t0/BW from live token/prompt
+                # traffic and swaps plans between requests (safe points).
+                self.engine = AdaptiveChannelGroup(
+                    prompt_bytes, cfg=AdaptiveConfig(max_channels=max_ch))
+            else:
+                self.engine = ChannelGroup.auto(prompt_bytes,
+                                                max_channels=max_ch)
             self.policy = self.engine.policy
         elif cfg.n_channels > 1:
             self.policy = policy or TransferPolicy.kernel_level_ring()
@@ -94,6 +105,10 @@ class ServingEngine:
             lambda p, b: model.prefill(p, b, cfg.max_seq))
         self._decode = jax.jit(model.decode, donate_argnums=(2,))
         self._key = jax.random.PRNGKey(cfg.seed)
+        # decoded-token landing zone, reused across generate() calls: each
+        # step's RX writes row t in place (rx_async out=), so the steady
+        # state detokenize path allocates nothing per token.
+        self._tok_buf = np.empty((0, 0), np.int32)
 
     def close(self) -> None:
         self.engine.close()
@@ -113,12 +128,21 @@ class ServingEngine:
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
                  extra_inputs: dict | None = None) -> list[RequestResult]:
-        """prompts: [B, S_prompt] int32 (already padded/batched)."""
+        """prompts: [B, S_prompt] int32 (already padded/batched).
+
+        NOT reentrant: one generate() at a time per ServingEngine (the
+        sampling key, KV-cache donation, and the reused ``_tok_buf`` token
+        matrix are engine state). Concurrent serving is the
+        ContinuousBatchingEngine's job; multiple ServingEngines may run in
+        parallel (each owns its transfer rings and buffers)."""
         b = prompts.shape[0]
+        max_new_tokens = max(1, max_new_tokens)  # prefill always emits one
         batch = {"tokens": self._tx_prompts(prompts)}
         if extra_inputs:
             batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
-        overlap_rx = self.policy.management is Management.INTERRUPT
+        # read the CURRENT policy off the engine: an online-adaptive engine
+        # may have swapped plan generations since construction.
+        overlap_rx = self.engine.policy.management is Management.INTERRUPT
 
         t0 = time.perf_counter()
         logits, cache = self._prefill(self.params, batch)
@@ -126,25 +150,37 @@ class ServingEngine:
         jax.block_until_ready(tok)
         prefill_s = time.perf_counter() - t0
 
+        if self._tok_buf.shape != (max_new_tokens, b):
+            self._tok_buf = np.empty((max_new_tokens, b), np.int32)
+
         t0 = time.perf_counter()
         if overlap_rx:
             # token t streams back on a completion worker while step t+1
-            # decodes — the decode loop never blocks on device->host copies.
-            tickets = [self.engine.rx_async([tok])]
-            for _ in range(max_new_tokens - 1):
+            # decodes — the decode loop never blocks on device->host copies,
+            # and each token lands in its reused row of _tok_buf (zero
+            # per-token host allocation).
+            tickets = [self.engine.rx_async([tok], out=[self._tok_buf[0]])]
+            for step in range(max_new_tokens - 1):
                 logits, cache = self._decode(self.params, tok, cache)
                 tok = self._sample(logits)
-                tickets.append(self.engine.rx_async([tok]))
-            toks = np.concatenate([t.wait()[0] for t in tickets], axis=1)
+                tickets.append(self.engine.rx_async(
+                    [tok], out=[self._tok_buf[step + 1]]))
+            for t in tickets:
+                t.wait()
+            toks = self._tok_buf.T
         else:
-            out = [tok]
-            for _ in range(max_new_tokens - 1):
-                logits, cache = self._decode(self.params, tok, cache)
-                tok = self._sample(logits)
-                out.append(tok)
-            toks = np.concatenate(
-                [self.engine.rx([t])[0].reshape(t.shape) for t in out], axis=1)
+            for step in range(max_new_tokens):
+                if step:
+                    logits, cache = self._decode(self.params, tok, cache)
+                    tok = self._sample(logits)
+                self.engine.rx([tok], out=[self._tok_buf[step]])
+            toks = self._tok_buf.T
         decode_s = time.perf_counter() - t0
+        # request boundary = safe point: let an adaptive engine swap plans
+        # (no-op on plain engines/groups).
+        self.engine.maybe_adapt()
 
-        return [RequestResult(prompts[i], toks[i], prefill_s, decode_s)
+        # one copy per REQUEST (not per token): results must outlive the
+        # reused _tok_buf, which the next generate() call overwrites.
+        return [RequestResult(prompts[i], toks[i].copy(), prefill_s, decode_s)
                 for i in range(b)]

@@ -1,0 +1,466 @@
+"""Online transfer adaptation: rolling refit math, hysteresis, plan swaps
+at safe points, zero-copy RX, and the mid-swap concurrency stress test."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.adaptive import (
+    AdaptiveChannelGroup,
+    AdaptiveConfig,
+    OnlineTransferController,
+    RollingFit,
+    choose_management,
+)
+from repro.core.cost_model import TransferCostModel
+from repro.core.transfer import (
+    Management,
+    TransferEngine,
+    TransferPolicy,
+    reassemble_chunks,
+)
+
+SIZES = (8 << 10, 64 << 10, 512 << 10, 2 << 20)
+
+
+def _feed(fit_or_ctl, model, sizes=SIZES, repeats=8, mode="interrupt"):
+    """Feed synthetic (n, t) samples drawn from ``model``."""
+    for _ in range(repeats):
+        for n in sizes:
+            t = model.time_unique(n)
+            if isinstance(fit_or_ctl, RollingFit):
+                fit_or_ctl.add(n, t)
+            else:
+                fit_or_ctl.add_chunk_sample("tx", mode, n, t)
+
+
+# ---- RollingFit ------------------------------------------------------------
+
+def test_rolling_fit_recovers_model():
+    m_true = TransferCostModel(t0_s=80e-6, bw_Bps=3e9)
+    fit = RollingFit(window=128, ewma_halflife=64)
+    _feed(fit, m_true)
+    m = fit.fit(4)
+    assert abs(m.t0_s - m_true.t0_s) / m_true.t0_s < 0.05
+    assert abs(m.bw_Bps - m_true.bw_Bps) / m_true.bw_Bps < 0.05
+
+
+def test_rolling_fit_converges_on_drift_trace():
+    """After a regime change, the EWMA-weighted fit must track the NEW
+    t0/BW once a window's worth of samples arrived — not the average of
+    both regimes."""
+    old = TransferCostModel(t0_s=50e-6, bw_Bps=4e9)
+    new = TransferCostModel(t0_s=1e-3, bw_Bps=1e9)
+    fit = RollingFit(window=128, ewma_halflife=8)
+    _feed(fit, old, repeats=6)
+    _feed(fit, new, repeats=10)
+    m = fit.fit(4)
+    assert abs(m.t0_s - new.t0_s) / new.t0_s < 0.25
+    assert abs(m.bw_Bps - new.bw_Bps) / new.bw_Bps < 0.25
+
+
+def test_rolling_fit_degenerate_size_returns_none():
+    """A single payload size cannot separate t0 from BW: no fit, so the
+    caller knows to probe."""
+    fit = RollingFit(window=64)
+    for _ in range(30):
+        fit.add(1 << 20, 1e-3)
+    assert fit.fit(4) is None
+    assert fit.size_spread == 1.0
+
+
+def test_rolling_fit_ttl_expires_stale_samples():
+    fit = RollingFit(window=64, ttl_s=0.05)
+    _feed(fit, TransferCostModel(t0_s=1e-4, bw_Bps=1e9), repeats=2)
+    assert len(fit) > 0
+    time.sleep(0.08)
+    assert len(fit) == 0 and fit.fit(2) is None
+
+
+# ---- controller: hysteresis + per-mode independence ------------------------
+
+def _controller(**cfg_kw):
+    cfg_kw.setdefault("min_samples", 8)
+    cfg_kw.setdefault("refit_every", 1)
+    cfg = AdaptiveConfig(**cfg_kw)
+    model = TransferCostModel(t0_s=100e-6, bw_Bps=2e9)
+    return OnlineTransferController(8 << 20, model=model, cfg=cfg), model
+
+
+def test_hysteresis_suppresses_noise_but_not_drift():
+    ctl, model = _controller(hysteresis=1.5)
+    # noise: samples within ~15% of the planned model -> no replan
+    noisy = TransferCostModel(t0_s=model.t0_s * 1.15,
+                              bw_Bps=model.bw_Bps * 0.85)
+    _feed(ctl, noisy)
+    for _ in range(5):
+        assert ctl.propose() is None
+    assert ctl.suppressed >= 1 and ctl.replans == 0
+    # drift: 5x t0 -> replan fires
+    drifted = TransferCostModel(t0_s=model.t0_s * 5, bw_Bps=model.bw_Bps)
+    _feed(ctl, drifted, repeats=20)
+    plan = ctl.propose()
+    assert plan is not None and ctl.replans == 1
+    assert abs(plan.model.t0_s - drifted.t0_s) / drifted.t0_s < 0.3
+
+
+def test_no_flapping_on_stationary_noise():
+    """Repeated proposes on stationary noisy samples must not keep
+    replanning (the plan-flapping failure mode)."""
+    ctl, model = _controller(hysteresis=1.5)
+    rng = np.random.default_rng(0)
+    for _ in range(60):
+        for n in SIZES:
+            t = model.time_unique(n) * float(rng.uniform(0.9, 1.12))
+            ctl.add_chunk_sample("tx", "interrupt", n, t)
+        ctl.propose()
+    assert ctl.replans <= 1  # at most one settle-in replan, then stable
+
+
+def test_per_mode_fits_stay_independent():
+    ctl, _ = _controller()
+    poll = TransferCostModel(t0_s=5e-6, bw_Bps=1.5e9)
+    intr = TransferCostModel(t0_s=200e-6, bw_Bps=3e9)
+    _feed(ctl, poll, mode="polling")
+    _feed(ctl, intr, mode="interrupt")
+    models = ctl.models()
+    mp = models[("tx", "polling")]
+    mi = models[("tx", "interrupt")]
+    assert abs(mp.t0_s - poll.t0_s) / poll.t0_s < 0.05
+    assert abs(mi.t0_s - intr.t0_s) / intr.t0_s < 0.05
+    assert abs(mp.bw_Bps - poll.bw_Bps) / poll.bw_Bps < 0.05
+    assert abs(mi.bw_Bps - intr.bw_Bps) / intr.bw_Bps < 0.05
+
+
+def test_choose_management_crossover():
+    poll = TransferCostModel(t0_s=2e-6, bw_Bps=2e9)
+    intr = TransferCostModel(t0_s=30e-6, bw_Bps=3e9)
+    fits = {"polling": poll, "interrupt": intr}
+    n_star = TransferCostModel.crossover_bytes(poll, intr)
+    assert choose_management(fits, int(n_star // 2)) is Management.POLLING
+    assert choose_management(fits, int(n_star * 2)) is Management.INTERRUPT
+    # one-sided data: default to INTERRUPT
+    assert choose_management({"interrupt": intr}, 64) is Management.INTERRUPT
+
+
+def test_controller_replans_to_polling_below_crossover():
+    """With per-mode fits on both sides and a small payload mix, the
+    replanned policy must cross to the user-level polling driver."""
+    ctl, model = _controller(hysteresis=1.1)
+    small_sizes = (1 << 10, 4 << 10, 16 << 10, 64 << 10)
+    poll = TransferCostModel(t0_s=2e-6, bw_Bps=2e9)
+    intr = TransferCostModel(t0_s=500e-6, bw_Bps=2.5e9)
+    for _ in range(8):
+        for n in small_sizes:
+            ctl.add_chunk_sample("tx", "polling", n, poll.time_unique(n))
+            ctl.add_chunk_sample("tx", "interrupt", n, intr.time_unique(n))
+    ctl._payloads.clear()
+    ctl._payloads.append(16 << 10)  # typical payload: far below crossover
+    plan = ctl.propose(force=True)
+    assert plan is not None
+    assert plan.policy.management is Management.POLLING
+    assert plan.n_channels == 1
+
+
+def test_rx_drift_alone_triggers_replan():
+    """Serving decode is RX-dominated: an RX-only slowdown must trigger a
+    replan even when the TX window shows no drift at all."""
+    ctl, model = _controller(hysteresis=1.5)
+    rx_healthy = TransferCostModel(t0_s=120e-6, bw_Bps=2e9)
+    # steady TX + healthy RX: propose adopts the RX baseline, no replan
+    for _ in range(3):
+        _feed(ctl, model)
+        for n in SIZES:
+            ctl.add_chunk_sample("rx", "interrupt", n,
+                                 rx_healthy.time_unique(n))
+        ctl.propose()
+    assert ctl.replans == 0
+    # RX t0 inflates 10x while TX stays put
+    rx_drifted = TransferCostModel(t0_s=1.2e-3, bw_Bps=1e9)
+    for _ in range(20):
+        _feed(ctl, model, repeats=1)
+        for n in SIZES:
+            ctl.add_chunk_sample("rx", "interrupt", n,
+                                 rx_drifted.time_unique(n))
+        ctl.propose()
+    assert ctl.replans >= 1
+    # the adopted plan is sized for the SLOWER direction (RX's bigger t0)
+    assert ctl.plan.model.t0_s > model.t0_s * 2
+
+
+def test_flip_back_to_interrupt_uses_interrupt_fit():
+    """Crossing POLLING -> INTERRUPT must size blocks from the INTERRUPT
+    mode's fit (its large t0), not the polling fit's tiny one."""
+    ctl, _ = _controller(hysteresis=1.1)
+    poll = TransferCostModel(t0_s=2e-6, bw_Bps=2e9)
+    intr = TransferCostModel(t0_s=800e-6, bw_Bps=3e9)
+    # start from a POLLING plan
+    from repro.core.channels import ChannelPlan
+    ctl.plan = ChannelPlan(n_channels=1,
+                           policy=TransferPolicy.user_level_polling(),
+                           model=poll, payload_bytes=16 << 10)
+    ctl._tx_ref = poll
+    _feed(ctl, poll, mode="polling")
+    _feed(ctl, intr, mode="interrupt")
+    ctl._payloads.clear()
+    ctl._payloads.append(64 << 20)  # payload far ABOVE the crossover
+    plan = ctl.propose(force=True)
+    assert plan is not None
+    assert plan.policy.management is Management.INTERRUPT
+    # block size must reflect interrupt's ~800us t0 (t0*BW ~ 2.4 MB), not
+    # polling's 2us (t0*BW ~ 4 KB)
+    assert plan.policy.block_bytes >= (1 << 20)
+
+
+# ---- adaptive group: swaps at safe points ---------------------------------
+
+def _drifted_group(**cfg_kw):
+    cfg_kw.setdefault("min_samples", 8)
+    cfg_kw.setdefault("refit_every", 1)
+    g = AdaptiveChannelGroup(
+        8 << 20, model=TransferCostModel(t0_s=100e-6, bw_Bps=2e9),
+        cfg=AdaptiveConfig(**cfg_kw))
+    return g
+
+
+def test_group_swaps_generation_on_forced_drift():
+    g = _drifted_group()
+    x = np.random.default_rng(0).standard_normal(1 << 18).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(reassemble_chunks(g.tx(x))), x)
+    layouts_before = g.layouts
+    # inject a 10x-t0 regime and force the safe-point swap
+    drifted = TransferCostModel(t0_s=4e-3, bw_Bps=1e9)
+    _feed(g.controller, drifted, repeats=16)
+    assert g.maybe_adapt(force=True) is True
+    assert g.generation == 1 and g.swaps == 1
+    # the new generation still transfers correctly and KEPT the layout
+    # cache (a replan must not re-pay the one-time staging layout cost)
+    assert g.layouts is layouts_before
+    np.testing.assert_array_equal(np.asarray(reassemble_chunks(g.tx(x))), x)
+    back = g.rx(g.tx(x))
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(b).reshape(-1) for b in back]), x)
+    g.close()
+
+
+def test_group_defers_swap_while_ring_in_flight():
+    """A pending plan must NOT be applied while a ticket is outstanding —
+    the ring-drained safe-point rule."""
+    g = _drifted_group()
+    x = np.zeros(1 << 22, np.float32)  # large enough to stay in flight
+    ticket = g.tx_async(x)
+    _feed(g.controller, TransferCostModel(t0_s=4e-3, bw_Bps=1e9), repeats=16)
+    plan = g.controller.propose(force=True)
+    assert plan is not None
+    with g._lock:
+        g._pending_plan = plan
+    if not ticket.complete:
+        # in-flight: adapt must hold the old generation
+        swapped_early = g.maybe_adapt()
+        if not ticket.complete:
+            assert not swapped_early and g.generation == 0
+    ticket.wait()
+    assert g.maybe_adapt() is True  # drained now: swap applies
+    assert g.generation == 1
+    g.close()
+
+
+def test_group_runs_streaming_executor():
+    from repro.core.streaming import HostStreamingExecutor
+    import jax
+    import jax.numpy as jnp
+
+    def apply_fn(params, x):
+        (w,) = params
+        return jnp.tanh(x @ w)
+
+    jitted = jax.jit(apply_fn)
+    rng = np.random.default_rng(3)
+    layers = [(f"l{i}", [rng.standard_normal((32, 32)).astype(np.float32)],
+               jitted) for i in range(4)]
+    x = rng.standard_normal((2, 32)).astype(np.float32)
+    g = _drifted_group()
+    out, timing = HostStreamingExecutor(g).run(layers, x)
+    y = jnp.asarray(x)
+    for _, (w,), fn in layers:
+        y = fn([jnp.asarray(w)], y)
+    np.testing.assert_allclose(out, np.asarray(y), rtol=1e-5, atol=1e-5)
+    assert len(timing.layers) == 4
+    g.close()
+
+
+# ---- zero-copy RX ----------------------------------------------------------
+
+def test_rx_out_identity_and_zero_alloc_steady_state():
+    """Steady-state rx(out=) must return the CALLER's buffer object every
+    call and perform no per-call host DATA allocation (tracemalloc must
+    not see the megabyte-scale payload being re-allocated)."""
+    import tracemalloc
+
+    eng = TransferEngine(TransferPolicy.user_level_polling())
+    nbytes = 1 << 20
+    dev = eng.tx(np.arange(nbytes // 4, dtype=np.int32))
+    assert len(dev) == 1
+    buf = np.empty(nbytes // 4, np.int32)
+    eng.rx(dev, out=[buf])  # warm the path
+    tracemalloc.start()
+    for _ in range(5):
+        res = eng.rx(dev, out=[buf])
+        assert res[0] is buf  # identity: landed in place
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    # bookkeeping objects only — never a fresh payload-sized buffer
+    assert peak < nbytes // 2, f"steady-state RX allocated {peak} bytes"
+    np.testing.assert_array_equal(buf, np.arange(nbytes // 4, dtype=np.int32))
+    eng.close()
+
+
+def test_rx_out_validation():
+    eng = TransferEngine(TransferPolicy.kernel_level())
+    dev = eng.tx(np.zeros(64, np.float32))
+    with pytest.raises(ValueError):
+        eng.rx(dev, out=[np.empty(63, np.float32)])  # size mismatch
+    with pytest.raises(ValueError):
+        eng.rx(dev, out=[])  # count mismatch
+    ro = np.empty(64, np.float32)
+    ro.flags.writeable = False
+    with pytest.raises(ValueError):
+        eng.rx(dev, out=[ro])
+    # non-contiguous buffer: reshape(-1) would copy and the transfer would
+    # silently land in a temporary — must be rejected up front
+    col = np.empty((64, 2), np.float32)[:, 0]
+    with pytest.raises(ValueError):
+        eng.rx(dev, out=[col])
+    eng.close()
+
+
+def test_group_rx_out_flat_array_ordered_reassembly():
+    """ChannelGroup.rx(out=<one flat array>) must write each striped chunk
+    at its final offset in the caller's array."""
+    from repro.core.channels import ChannelGroup
+
+    g = ChannelGroup(TransferPolicy.kernel_level_ring(4, block_bytes=1 << 16),
+                     n_channels=2, min_stripe_bytes=1 << 14)
+    x = np.random.default_rng(1).standard_normal(200_003).astype(np.float32)
+    chunks = g.tx(x)
+    out = np.empty_like(x)
+    res = g.rx(chunks, out=out)
+    np.testing.assert_array_equal(out, x)
+    assert all(np.shares_memory(out, r) for r in res)
+    # a wrong-length per-array out list must fail fast and clearly, BEFORE
+    # any channel wrote into caller memory
+    assert len(chunks) > 1
+    with pytest.raises(ValueError):
+        g.rx(chunks, out=[np.empty_like(x)])
+    g.close()
+
+
+# ---- the fix: exact byte accounting under concurrent async traffic ---------
+
+def test_async_byte_totals_exact_from_8_threads():
+    """Counters updated on the async completion path must be lock-protected:
+    8 threads of tx_async/rx_async, byte totals must match EXACTLY."""
+    eng = TransferEngine(TransferPolicy.kernel_level_ring(4,
+                                                          block_bytes=1 << 14))
+    n_threads, iters, n_elems = 8, 6, 16 * 1024
+    per_tx = n_elems * 4
+    errors = []
+
+    def worker(seed):
+        try:
+            x = np.full(n_elems, float(seed), np.float32)
+            for _ in range(iters):
+                chunks = eng.tx_async(x).wait()
+                eng.rx_async(chunks).wait()
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    expected = n_threads * iters * per_tx
+    assert eng.tx_bytes_total == expected
+    assert eng.rx_bytes_total == expected
+    assert eng.tx_count == n_threads * iters
+    assert eng.rx_count == n_threads * iters
+    assert sum(s.nbytes for s in eng.stats if s.direction == "tx") == expected
+    assert sum(s.nbytes for s in eng.stats if s.direction == "rx") == expected
+    eng.close()
+
+
+# ---- stress: hammer engine + group through a mid-run plan swap -------------
+
+@pytest.mark.stress
+def test_stress_mid_run_plan_swap():
+    """8 threads hammer one TransferEngine and one AdaptiveChannelGroup;
+    between two traffic phases the group swaps its plan generation. No
+    ring-safety bypass, no slot collisions, no lost completions."""
+    eng = TransferEngine(TransferPolicy.kernel_level_ring(3,
+                                                          block_bytes=1 << 14))
+    group = _drifted_group(min_samples=8, refit_every=1)
+    n_threads, iters, n_elems = 8, 4, 16 * 1024
+    per_tx = n_elems * 4
+    barrier = threading.Barrier(n_threads + 1)
+    errors = []
+
+    def hammer(seed):
+        try:
+            x = np.full(n_elems, float(seed), np.float32)
+            for phase in range(2):
+                barrier.wait(timeout=30)        # wait#1 / wait#2
+                if phase == 1:
+                    barrier.wait(timeout=30)    # wait#3: main swapped
+                for _ in range(iters):
+                    dev = eng.tx_async(x).wait()
+                    host = eng.rx_async(dev).wait()
+                    flat = np.concatenate([np.asarray(h).reshape(-1)
+                                           for h in host])
+                    np.testing.assert_array_equal(flat, x)
+                    chunks = group.tx(x)
+                    out = np.empty_like(x)
+                    group.rx(chunks, out=out)
+                    np.testing.assert_array_equal(out, x)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    barrier.wait(timeout=30)  # wait#1: phase 0 traffic starts
+    barrier.wait(timeout=30)  # wait#2: every thread finished phase 0
+    # mid-run swap: threads are parked at wait#3, the ring is drained —
+    # force the replan, then release phase 1 onto the NEW generation.
+    _feed(group.controller, TransferCostModel(t0_s=4e-3, bw_Bps=1e9),
+          repeats=16)
+    swapped = group.maybe_adapt(force=True)
+    barrier.wait(timeout=30)  # wait#3: phase 1 traffic starts
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert swapped and group.swaps >= 1  # the mid-run swap happened
+
+    # ring-safety invariants across EVERY generation's engines + the engine
+    for e in [eng] + group.all_engines:
+        assert e.slot_collisions == 0
+        assert e.inflight_hwm <= e.policy.depth
+
+    # no lost completions: every logical transfer recorded, bytes exact
+    expected = n_threads * 2 * iters * per_tx
+    assert eng.tx_bytes_total == expected
+    assert eng.rx_bytes_total == expected
+    # group TX also carries the controller's probe transfers — distinct
+    # sizes, so filter to the hammer payload size and demand exactness
+    g_tx = sum(s.nbytes for s in group.stats
+               if s.direction == "tx" and s.nbytes == per_tx)
+    g_rx = sum(s.nbytes for s in group.stats if s.direction == "rx")
+    assert g_tx == expected
+    assert g_rx == expected
+    eng.close()
+    group.close()

@@ -65,6 +65,9 @@ def test_second_frame_hits_layout_cache():
     assert eng.layouts.misses == 4 and eng.layouts.hits == 0
     out2, _ = ex.run(layers, x)
     assert eng.layouts.misses == 4 and eng.layouts.hits == 4  # no re-derive
+    # the frame result must be a FRESH array each run (interior layers
+    # reuse zero-copy RX buffers, the final layer never does)
+    assert out1 is not out2
     np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
     # steady state: the host params are the same objects -> zero pack copies
     for key in [(i, f"l{i}") for i in range(4)]:

@@ -96,6 +96,28 @@ def test_serving_multichannel_matches_single():
     single.close(), multi.close()
 
 
+def test_serving_online_adaptation_matches_single():
+    """The online-adaptive engine (rolling refit + safe-point plan swaps)
+    must serve byte-identical greedy tokens — adaptation may change HOW
+    bytes move, never WHAT arrives."""
+    from repro.core.adaptive import AdaptiveChannelGroup
+
+    cfg = smoke_config("qwen2.5-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.ones((2, 8), np.int32)
+    single = ServingEngine(model, params, ServeConfig(max_seq=64))
+    online = ServingEngine(model, params,
+                           ServeConfig(max_seq=64, online_adaptation=True))
+    assert isinstance(online.engine, AdaptiveChannelGroup)
+    r1 = single.generate(prompts, max_new_tokens=6)
+    r2 = online.generate(prompts, max_new_tokens=6)
+    r3 = online.generate(prompts, max_new_tokens=6)  # across a safe point
+    np.testing.assert_array_equal(r1[0].tokens, r2[0].tokens)
+    np.testing.assert_array_equal(r2[0].tokens, r3[0].tokens)
+    single.close(), online.close()
+
+
 def test_straggler_detection():
     clock = StepClock(window=20, zscore_threshold=3.0)
     for _ in range(15):
