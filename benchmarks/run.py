@@ -17,6 +17,7 @@ from benchmarks import (
     collective_overlap,
     multichannel_sweep,
     policy_ablation,
+    qos_contention,
     roofline,
     roshambo_table,
     streaming_layers,
@@ -32,6 +33,7 @@ BENCHES = {
     "streaming_layers": streaming_layers.run,  # NullHop model at LM scale
     "multichannel_sweep": multichannel_sweep.run,  # striped rings + adaptive
     "adaptive_drift": adaptive_drift.run,  # online refit vs stale plan
+    "qos_contention": qos_contention.run,  # shared-runtime QoS arbitration
     "collective_overlap": collective_overlap.run,  # blocks-mode collectives
     "roofline": roofline.run,  # reads dry-run artifacts
 }
@@ -39,7 +41,8 @@ BENCHES = {
 
 def _derived(row: dict) -> str:
     for k in ("tx_us_per_byte", "roundtrip_ms", "frame_ms",
-              "dominant_term_s", "collective_bytes_per_dev", "tx_gbps"):
+              "dominant_term_s", "collective_bytes_per_dev", "tx_gbps",
+              "token_rx_p99_ms"):
         if k in row:
             return f"{k}={row[k]}"
     return ""
@@ -82,6 +85,13 @@ def main() -> None:
             print(f"# merged adaptive_drift rows into BENCH_transfer.json "
                   f"(post-drift static/online recovery ratio "
                   f"{ad['recovery_ratio_static_over_online']})")
+        if name == "qos_contention":
+            doc = qos_contention.merge_bench_json(rows)
+            qc = doc["qos_contention"]
+            print(f"# merged qos_contention rows into BENCH_transfer.json "
+                  f"(token-RX p99 per-engine/runtime ratio "
+                  f"{qc['p99_ratio_per_engine_over_runtime']}, fifo/runtime "
+                  f"{qc['p99_ratio_fifo_over_runtime']})")
 
 
 if __name__ == "__main__":

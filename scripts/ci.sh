@@ -12,7 +12,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 fast lane: pytest -m 'not stress' =="
 python -m pytest -x -q -m "not stress"
 
-echo "== full lane: stress suite =="
+echo "== full lane: stress suite (incl. 4-class runtime hammer) =="
 python -m pytest -x -q -m "stress"
 
 echo "== smoke: transfer_sweep --quick =="
@@ -23,5 +23,8 @@ python benchmarks/multichannel_sweep.py --quick
 
 echo "== smoke: adaptive_drift --quick =="
 python benchmarks/adaptive_drift.py --quick
+
+echo "== smoke: qos_contention --quick =="
+python benchmarks/qos_contention.py --quick
 
 echo "CI OK"

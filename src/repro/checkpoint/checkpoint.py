@@ -26,7 +26,8 @@ from typing import Any
 import jax
 import numpy as np
 
-from repro.core.transfer import Ticket, _CompletionPool
+from repro.core.runtime import DedicatedWorkerPool
+from repro.core.transfer import Ticket
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -108,13 +109,14 @@ class CheckpointManager:
     async_write: bool = True
     _pending: Ticket | None = None
     _lock: threading.Lock = None  # type: ignore[assignment]
-    _pool: _CompletionPool = None  # type: ignore[assignment]
+    _pool: DedicatedWorkerPool = None  # type: ignore[assignment]
 
     def __post_init__(self):
         self._lock = threading.Lock()
-        # one writer worker per manager: checkpoint writes never contend
-        # with transfer engines' completion pools
-        self._pool = _CompletionPool(workers=1)
+        # one DEDICATED writer worker per manager: a multi-second write
+        # must never occupy a shared TransferRuntime worker (that is
+        # the head-of-line blocking the runtime's QoS exists to stop)
+        self._pool = DedicatedWorkerPool(workers=1)
 
     def maybe_save(self, step: int, state: Any) -> bool:
         if step == 0 or step % self.every:

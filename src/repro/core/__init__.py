@@ -4,6 +4,9 @@ Implements the policy matrix evaluated by Rios-Navarro et al. (2018) —
 management (polling / scheduled / interrupt), buffering (single / double),
 partitioning (unique / blocks) — at every memory boundary of a TPU system:
 
+- completion dispatch: :mod:`repro.core.runtime` (ONE shared interrupt-style
+                     TransferRuntime arbitrating every engine's completions
+                     by QoS class — the paper's kernel driver, centralized)
 - host <-> device  : :mod:`repro.core.transfer` (measured on this machine)
 - multi-channel    : :mod:`repro.core.channels` (striped rings + adaptive
                      cost-model policy, the NEURAghe/ZynqNet lesson)
@@ -14,6 +17,17 @@ partitioning (unique / blocks) — at every memory boundary of a TPU system:
 - per-layer stream : :mod:`repro.core.streaming` (the NullHop execution model)
 """
 
+from repro.core.runtime import (  # noqa: F401
+    CooperativeScheduler,
+    PollingBackend,
+    PriorityClass,
+    QosSpec,
+    ScheduledBackend,
+    TransferRuntime,
+    backend_for,
+    get_runtime,
+    set_runtime,
+)
 from repro.core.transfer import (  # noqa: F401
     Buffering,
     BufferInFlightError,

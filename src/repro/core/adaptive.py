@@ -54,6 +54,9 @@ reason). This module closes the loop:
 from __future__ import annotations
 
 import collections
+import json
+import os
+import pathlib
 import threading
 import time
 from dataclasses import dataclass
@@ -70,7 +73,10 @@ from repro.core.channels import (
     plan_channels,
 )
 from repro.core.cost_model import TransferCostModel
+from repro.core.runtime import PriorityClass, TransferRuntime
 from repro.core.transfer import (
+    Buffering,
+    Partitioning,
     LayoutCache,
     Management,
     StagedLayout,
@@ -172,10 +178,38 @@ class RollingFit:
             return None
         return m
 
+    # -- warm-start persistence ---------------------------------------------
+    def to_state(self) -> dict:
+        """Serializable snapshot: samples carry their AGE (monotonic stamps
+        don't survive a process), newest last."""
+        now = time.monotonic()
+        with self._lock:
+            return {"samples": [[int(n), float(t), round(now - ts, 6)]
+                                for n, t, ts in self._samples]}
+
+    @classmethod
+    def from_state(cls, state: dict, *, window: int = 256,
+                   ewma_halflife: float = 32, min_size_spread: float = 4.0,
+                   ttl_s: float = 5.0, refresh: bool = True) -> "RollingFit":
+        """Rebuild a window from :meth:`to_state`. With ``refresh`` (the
+        warm-start default) samples are restamped as fresh — the point is
+        seeding the NEW session's first fit from the old session's
+        steady state, not replaying wall-clock ages that the TTL would
+        expire on arrival. Live traffic then out-weighs the seed within a
+        halflife."""
+        fit = cls(window=window, ewma_halflife=ewma_halflife,
+                  min_size_spread=min_size_spread, ttl_s=ttl_s)
+        now = time.monotonic()
+        for n, t, age in state.get("samples", []):
+            stamp = now if refresh else now - float(age)
+            fit._samples.append((int(n), float(t), stamp))
+        return fit
+
 
 def choose_management(tx_fits: dict[str, TransferCostModel],
                       payload_bytes: int,
-                      current: Management = Management.INTERRUPT
+                      current: Management = Management.INTERRUPT,
+                      interrupt_extra_t0_s: float = 0.0
                       ) -> Management:
     """Polling-vs-interrupt crossover from the per-mode TX fits.
 
@@ -184,11 +218,21 @@ def choose_management(tx_fits: dict[str, TransferCostModel],
     for only one mode there is nothing to compare — keep ``current``
     (the mode we're running produces samples, the other mode's window
     empties after its TTL; flipping on missing data would evict a
-    measured-good choice for an unmeasured one)."""
+    measured-good choice for an unmeasured one).
+
+    ``interrupt_extra_t0_s``: queue-wait the interrupt path pays beyond
+    its per-descriptor service time — the shared runtime's measured
+    per-class dispatch latency under the CURRENT traffic mix. Polling
+    never queues, so under contention the crossover moves right (exactly
+    the paper's arbitration-overhead term, now measured from real serving
+    traces instead of assumed zero)."""
     poll = tx_fits.get(Management.POLLING.value)
     intr = tx_fits.get(Management.INTERRUPT.value)
     if poll is None or intr is None:
         return current
+    if interrupt_extra_t0_s > 0.0:
+        intr = TransferCostModel(t0_s=intr.t0_s + interrupt_extra_t0_s,
+                                 bw_Bps=intr.bw_Bps)
     n_star = TransferCostModel.crossover_bytes(poll, intr)
     return Management.POLLING if payload_bytes < n_star else Management.INTERRUPT
 
@@ -226,6 +270,10 @@ class OnlineTransferController:
         self._lock = threading.RLock()
         self._since_refit = 0
         self._has_logical = False  # logical stats flowing? they own cadence
+        # EWMA of the shared runtime's per-class dispatch latency for this
+        # stream — the interrupt driver's measured queue-wait, folded into
+        # the crossover decision (see choose_management).
+        self._dispatch_t0_s = 0.0
         self.refits = 0
         self.replans = 0
         self.suppressed = 0  # hysteresis said "noise, keep the plan"
@@ -276,6 +324,18 @@ class OnlineTransferController:
                 self.add_chunk_sample(direction, mode, nbytes, seconds)
                 n += 1
         return n
+
+    def note_dispatch_latency(self, seconds: float,
+                              alpha: float = 0.25) -> None:
+        """Fold a measured runtime dispatch latency (queue wait before a
+        descriptor starts service) into the interrupt-mode effective t0
+        used by the crossover decision. EWMA so serving bursts show up
+        quickly and idle periods decay back toward zero."""
+        if seconds < 0:
+            return
+        with self._lock:
+            self._dispatch_t0_s = ((1 - alpha) * self._dispatch_t0_s
+                                   + alpha * float(seconds))
 
     # -- fitted state -------------------------------------------------------
     def models(self) -> dict[tuple[str, str], TransferCostModel]:
@@ -331,8 +391,9 @@ class OnlineTransferController:
             tx_fits = {md: mm for (d, md), mm in self.models().items()
                        if d == "tx"}
             tx_fits.setdefault(mode, m)
-            mgmt = choose_management(tx_fits, payload,
-                                     current=self.plan.policy.management)
+            mgmt = choose_management(
+                tx_fits, payload, current=self.plan.policy.management,
+                interrupt_extra_t0_s=self._dispatch_t0_s)
             if mgmt is Management.POLLING:
                 # below the crossover the user-level polling driver wins:
                 # one channel, one un-partitioned transfer, no worker pool.
@@ -370,6 +431,92 @@ class OnlineTransferController:
             self.plan = plan
             return plan
 
+    # -- warm-start persistence ---------------------------------------------
+    _STATE_VERSION = 1
+
+    def save(self, path: "str | os.PathLike") -> None:
+        """Persist the fitted state (plan, drift references, per-mode fit
+        windows) so the NEXT session seeds its first :class:`ChannelPlan`
+        from this session's steady state instead of re-calibrating.
+        Atomic write (tmp + rename): a crash mid-save never corrupts the
+        warm-start file."""
+        with self._lock:
+            state = {
+                "version": self._STATE_VERSION,
+                "payload_bytes": self.payload_bytes,
+                "plan": _plan_to_state(self.plan),
+                "tx_ref": {"t0_s": self._tx_ref.t0_s,
+                           "bw_Bps": self._tx_ref.bw_Bps},
+                "rx_ref": (None if self._rx_ref is None else
+                           {"t0_s": self._rx_ref.t0_s,
+                            "bw_Bps": self._rx_ref.bw_Bps}),
+                "fits": {f"{d}:{m}": fit.to_state()
+                         for (d, m), fit in self._fits.items()},
+            }
+        path = pathlib.Path(path)
+        tmp = path.with_suffix(path.suffix + ".tmp")
+        tmp.write_text(json.dumps(state, indent=2) + "\n")
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: "str | os.PathLike", *,
+             cfg: AdaptiveConfig | None = None,
+             device: jax.Device | None = None) -> "OnlineTransferController":
+        """Rebuild a controller from :meth:`save` — NO calibration sweep:
+        the saved fit is the model, the saved plan is the first plan, and
+        the fit windows are re-seeded (restamped fresh) so the first
+        ``propose()`` has data to detect drift against."""
+        state = json.loads(pathlib.Path(path).read_text())
+        if state.get("version") != cls._STATE_VERSION:
+            raise ValueError(
+                f"warm-start state version {state.get('version')!r} != "
+                f"{cls._STATE_VERSION} ({path})")
+        cfg = cfg or AdaptiveConfig()
+        model = TransferCostModel(**state["tx_ref"])
+        ctl = cls(state["payload_bytes"], model=model, cfg=cfg, device=device)
+        ctl.plan = _plan_from_state(state["plan"])
+        ctl._tx_ref = model
+        ctl._rx_ref = (None if state.get("rx_ref") is None else
+                       TransferCostModel(**state["rx_ref"]))
+        for key, fstate in state.get("fits", {}).items():
+            direction, mode = key.split(":", 1)
+            ctl._fits[(direction, mode)] = RollingFit.from_state(
+                fstate, window=cfg.window, ewma_halflife=cfg.ewma_halflife,
+                min_size_spread=cfg.min_size_spread, ttl_s=cfg.sample_ttl_s)
+        return ctl
+
+
+def _plan_to_state(plan: ChannelPlan) -> dict:
+    p = plan.policy
+    return {
+        "n_channels": plan.n_channels,
+        "payload_bytes": plan.payload_bytes,
+        "model": {"t0_s": plan.model.t0_s, "bw_Bps": plan.model.bw_Bps},
+        "policy": {
+            "management": p.management.value,
+            "buffering": p.buffering.value,
+            "partitioning": p.partitioning.value,
+            "block_bytes": p.block_bytes,
+            "ring_depth": p.ring_depth,
+            "completion_workers": p.completion_workers,
+        },
+    }
+
+
+def _plan_from_state(state: dict) -> ChannelPlan:
+    ps = state["policy"]
+    policy = TransferPolicy(
+        management=Management(ps["management"]),
+        buffering=Buffering(ps["buffering"]),
+        partitioning=Partitioning(ps["partitioning"]),
+        block_bytes=int(ps["block_bytes"]),
+        ring_depth=int(ps["ring_depth"]),
+        completion_workers=int(ps["completion_workers"]),
+    )
+    return ChannelPlan(n_channels=int(state["n_channels"]), policy=policy,
+                       model=TransferCostModel(**state["model"]),
+                       payload_bytes=int(state["payload_bytes"]))
+
 
 class AdaptiveChannelGroup:
     """Self-tuning transfer engine: a :class:`ChannelGroup` (or, below the
@@ -388,15 +535,46 @@ class AdaptiveChannelGroup:
                  model: TransferCostModel | None = None,
                  devices: Sequence[jax.Device] | None = None,
                  pool: StagingPool | None = None,
-                 engine_factory: Callable[..., TransferEngine] | None = None):
+                 engine_factory: Callable[..., TransferEngine] | None = None,
+                 runtime: TransferRuntime | None = None,
+                 priority: PriorityClass = PriorityClass.LAYER,
+                 state_path: "str | os.PathLike | None" = None):
         self.cfg = cfg or AdaptiveConfig()
         self._devices = devices
         self._factory = engine_factory
+        self._runtime = runtime
+        self.priority = priority
+        self.state_path = state_path
         self.staging_pool = pool or StagingPool()
         self.layouts = LayoutCache(pool=self.staging_pool)
-        self.controller = OnlineTransferController(
-            payload_bytes, model=model, cfg=self.cfg,
-            device=devices[0] if devices else None)
+        # warm start: a previous session's steady-state fit seeds the first
+        # plan (no calibration sweep); otherwise calibrate as before. The
+        # state file is a CACHE: corrupt, version-mismatched, or sized for
+        # a very different payload -> fall back to a cold start, never
+        # fail construction over it.
+        self.controller = None
+        self.warm_started = False
+        if (state_path is not None and model is None
+                and os.path.exists(state_path)):
+            try:
+                ctl = OnlineTransferController.load(
+                    state_path, cfg=self.cfg,
+                    device=devices[0] if devices else None)
+                saved = ctl.payload_bytes
+                if not (payload_bytes / 4 <= saved <= payload_bytes * 4):
+                    raise ValueError(
+                        f"saved plan sized for {saved} bytes, caller asked "
+                        f"for {payload_bytes} — too far apart to reuse")
+                # the new session's payload joins the mix the planner sees
+                ctl._payloads.append(max(int(payload_bytes), 1))
+                self.controller = ctl
+                self.warm_started = True
+            except Exception:  # noqa: BLE001 — stale cache, cold-start
+                self.controller = None
+        if self.controller is None:
+            self.controller = OnlineTransferController(
+                payload_bytes, model=model, cfg=self.cfg,
+                device=devices[0] if devices else None)
         # bounded: one record lands here per logical transfer (per decoded
         # token in serving) — an unbounded list would grow forever in a
         # long-running server and defeat the zero-alloc steady state.
@@ -420,12 +598,14 @@ class AdaptiveChannelGroup:
             g = ChannelGroup(plan.policy, n_channels=plan.n_channels,
                              devices=self._devices, pool=self.staging_pool,
                              plan=plan, engine_factory=self._factory,
-                             layouts=self.layouts)
+                             layouts=self.layouts, runtime=self._runtime,
+                             priority=self.priority)
             engines = list(g.engines)
         else:
             factory = self._factory or TransferEngine
             g = factory(plan.policy,
-                        device=self._devices[0] if self._devices else None)
+                        device=self._devices[0] if self._devices else None,
+                        runtime=self._runtime, priority=self.priority)
             engines = [g]
         self.all_engines.extend(engines)
         # keep only the most recent generations' engines (diagnostics /
@@ -457,7 +637,26 @@ class AdaptiveChannelGroup:
         return getattr(self._group, "engines", [self._group])
 
     def close(self) -> None:
-        self._group.close()
+        """Idempotent; persists the fitted state first when ``state_path``
+        was given (the next session warm-starts from it)."""
+        if getattr(self, "_facade_closed", False):
+            return
+        self._facade_closed = True
+        try:
+            if self.state_path is not None:
+                try:
+                    self.save_state(self.state_path)
+                except Exception:  # noqa: BLE001 — persistence is
+                    pass           # best-effort; teardown must not fail
+        finally:
+            self._group.close()  # engines MUST deregister even if save blew
+
+    def save_state(self, path: "str | os.PathLike | None" = None) -> None:
+        """Persist the controller's fitted state for warm-starting."""
+        target = path if path is not None else self.state_path
+        if target is None:
+            raise ValueError("no state path given")
+        self.controller.save(target)
 
     def __enter__(self) -> "AdaptiveChannelGroup":
         return self
@@ -481,8 +680,31 @@ class AdaptiveChannelGroup:
         self._group = self._build(plan)
         self.generation += 1
         self.swaps += 1
-        # old generation is fully drained: close() only reaps idle workers.
+        # old generation is fully drained, so close() drain-deregisters
+        # immediately; the retired engines permanently reject submits
+        # (nothing holds them — the facade now routes to the new build).
         old.close()
+
+    @property
+    def runtime(self) -> TransferRuntime | None:
+        """The shared runtime the current generation dispatches on."""
+        if self._runtime is not None:
+            return self._runtime
+        return getattr(self._group, "runtime", None)
+
+    def _ingest_dispatch_latency(self) -> None:
+        """Feed the runtime's per-class dispatch latency (the queue wait
+        this stream's completions pay under the current traffic mix) into
+        the controller's crossover decision — real serving traces, not an
+        assumed-zero arbitration cost. No recent samples means the
+        contention is over: decay toward zero instead of holding the
+        burst-era value forever (a stale inflated t0 would pin the plan
+        at POLLING long after the queue emptied)."""
+        rt = self.runtime
+        if rt is None:
+            return
+        lat = rt.recent_dispatch_latency(self.priority)
+        self.controller.note_dispatch_latency(lat if lat is not None else 0.0)
 
     def maybe_adapt(self, *, force: bool = False) -> bool:
         """Refit from the live samples and swap plans if drift warrants it.
@@ -491,6 +713,7 @@ class AdaptiveChannelGroup:
         batch boundary) — and implicitly before every submit. Returns True
         when a new generation was installed."""
         self.controller.ingest_chunks(self.engines)
+        self._ingest_dispatch_latency()
         if self._pending_plan is None:
             plan = self.controller.propose(force=force)
             if plan is not None:
@@ -547,12 +770,14 @@ class AdaptiveChannelGroup:
 
     def _issue_tx(self, arr: np.ndarray,
                   callback: Callable[[list], None] | None,
-                  layout: StagedLayout | None) -> Ticket:
+                  layout: StagedLayout | None,
+                  priority: PriorityClass | None = None) -> Ticket:
         eng = self._enter()
         ticket = None
         try:
             if eng.policy.management is Management.INTERRUPT:
-                ticket = eng.tx_async(arr, callback=callback, layout=layout)
+                ticket = eng.tx_async(arr, callback=callback, layout=layout,
+                                      priority=priority)
                 return ticket
             # polling generation: the submit IS the transfer (the paper's
             # user-level driver blocks the host); hand back a done ticket.
@@ -565,22 +790,25 @@ class AdaptiveChannelGroup:
 
     def tx_async(self, host_array: np.ndarray,
                  callback: Callable[[list], None] | None = None,
-                 layout: StagedLayout | None = None) -> Ticket:
-        return self._issue_tx(host_array, callback, layout)
+                 layout: StagedLayout | None = None,
+                 priority: PriorityClass | None = None) -> Ticket:
+        return self._issue_tx(host_array, callback, layout, priority)
 
-    def tx(self, host_array: np.ndarray) -> list[jax.Array]:
-        return self.tx_async(host_array).wait()
+    def tx(self, host_array: np.ndarray,
+           priority: PriorityClass | None = None) -> list[jax.Array]:
+        return self.tx_async(host_array, priority=priority).wait()
 
     def rx_async(self, device_arrays: Sequence[jax.Array],
                  callback: Callable[[list], None] | None = None,
-                 out: "np.ndarray | Sequence[np.ndarray] | None" = None
+                 out: "np.ndarray | Sequence[np.ndarray] | None" = None,
+                 priority: PriorityClass | None = None
                  ) -> Ticket:
         eng = self._enter()
         ticket = None
         try:
             if eng.policy.management is Management.INTERRUPT:
                 ticket = eng.rx_async(device_arrays, callback=callback,
-                                      out=out)
+                                      out=out, priority=priority)
                 return ticket
             arrays = list(device_arrays)
             if out is not None and isinstance(out, np.ndarray):
@@ -594,9 +822,11 @@ class AdaptiveChannelGroup:
             self._leave(ticket)
 
     def rx(self, device_arrays: Sequence[jax.Array],
-           out: "np.ndarray | Sequence[np.ndarray] | None" = None
+           out: "np.ndarray | Sequence[np.ndarray] | None" = None,
+           priority: PriorityClass | None = None
            ) -> list[np.ndarray]:
-        return self.rx_async(device_arrays, out=out).wait()
+        return self.rx_async(device_arrays, out=out,
+                             priority=priority).wait()
 
     # -- reporting -----------------------------------------------------------
     def summary(self) -> dict[str, dict[str, float]]:

@@ -54,6 +54,7 @@ import jax
 import numpy as np
 
 from repro.core.cost_model import TransferCostModel
+from repro.core.runtime import PriorityClass, TransferRuntime
 from repro.core.transfer import (
     Buffering,
     LayoutCache,
@@ -241,7 +242,9 @@ class ChannelGroup:
                  min_stripe_bytes: int = _MIN_STRIPE_BYTES,
                  plan: ChannelPlan | None = None,
                  engine_factory: Callable[..., TransferEngine] | None = None,
-                 layouts: LayoutCache | None = None):
+                 layouts: LayoutCache | None = None,
+                 runtime: TransferRuntime | None = None,
+                 priority: PriorityClass = PriorityClass.LAYER):
         policy = policy or TransferPolicy.kernel_level_ring()
         if policy.management is not Management.INTERRUPT:
             raise ValueError(
@@ -267,9 +270,15 @@ class ChannelGroup:
         # staging layouts instead of re-deriving every pack plan.
         self.layouts = layouts or LayoutCache(pool=self.staging_pool)
         # ``engine_factory`` builds each member ring; tests and the drift
-        # benchmark inject engines with synthetic timing through it.
+        # benchmark inject engines with synthetic timing through it. ALL
+        # stripes share one runtime (None = the process default): striping
+        # multiplies channels, never completion pools.
+        self.priority = priority
+        self._runtime = runtime
         factory = engine_factory or TransferEngine
-        self.engines = [factory(policy, device=d) for d in devices]
+        self.engines = [factory(policy, device=d, runtime=runtime,
+                                priority=priority) for d in devices]
+        self._closed = False
         # bounded recent history (see TransferEngine.stats); aggregate
         # totals live on the member engines' counters.
         self.stats: "collections.deque[TransferStats]" = collections.deque(
@@ -286,23 +295,41 @@ class ChannelGroup:
              devices: Sequence[jax.Device] | None = None,
              model: TransferCostModel | None = None,
              pool: StagingPool | None = None,
-             engine_factory: Callable[..., TransferEngine] | None = None
+             engine_factory: Callable[..., TransferEngine] | None = None,
+             runtime: TransferRuntime | None = None,
+             priority: PriorityClass = PriorityClass.LAYER
              ) -> "ChannelGroup":
         """Calibrate, fit, and build the group the cost model recommends."""
         device = devices[0] if devices else None
         plan = plan_channels(payload_bytes, model=model, device=device,
                              max_channels=max_channels)
         return cls(plan.policy, n_channels=plan.n_channels, devices=devices,
-                   pool=pool, plan=plan, engine_factory=engine_factory)
+                   pool=pool, plan=plan, engine_factory=engine_factory,
+                   runtime=runtime, priority=priority)
 
     def close(self) -> None:
-        # joiners first (they wait on engine tickets, which need live pools)
+        """Idempotent: joiners first (they wait on engine tickets, which
+        need live runtime workers), then member engines deregister."""
+        if self._closed:
+            return
+        self._closed = True
         with self._stats_lock:
             joiners, self._joiners = self._joiners, []
         for t in joiners:
             t.join(timeout=5.0)
         for eng in self.engines:
             eng.close()
+
+    @property
+    def runtime(self) -> TransferRuntime | None:
+        """The (shared) runtime the member engines dispatch on."""
+        if self._runtime is not None:
+            return self._runtime
+        for eng in self.engines:
+            rt = getattr(eng, "runtime", None)
+            if rt is not None:
+                return rt
+        return None
 
     def __enter__(self) -> "ChannelGroup":
         return self
@@ -444,7 +471,8 @@ class ChannelGroup:
     # -- TX -------------------------------------------------------------------
     def tx_async(self, host_array: np.ndarray,
                  callback: Callable[[list], None] | None = None,
-                 layout: StagedLayout | None = None) -> Ticket:
+                 layout: StagedLayout | None = None,
+                 priority: PriorityClass | None = None) -> Ticket:
         """Striped asynchronous TX: each stripe rides its own channel's ring.
 
         The combined ticket completes when every channel drained; ``layout``
@@ -459,13 +487,13 @@ class ChannelGroup:
             return self._next_channel().tx_async(
                 flat, callback=self._delegated("tx", int(arr.nbytes), 1,
                                                callback),
-                layout=layout)
+                layout=layout, priority=priority)
         master = threading.Event()
         ticket_out: list = []
         t0 = time.perf_counter()
         if layout is not None:
             layout._busy = master  # busy BEFORE submit (whole-group window)
-        issue = [lambda eng=eng, s=s: eng.tx_async(s)
+        issue = [lambda eng=eng, s=s: eng.tx_async(s, priority=priority)
                  for eng, s in zip(self.engines, stripes)]
 
         def assemble(per_channel: list) -> list:
@@ -480,9 +508,10 @@ class ChannelGroup:
                            len(stripes), master, ticket_out, callback, t0)
         return Ticket(master, ticket_out)
 
-    def tx(self, host_array: np.ndarray) -> list[jax.Array]:
+    def tx(self, host_array: np.ndarray,
+           priority: PriorityClass | None = None) -> list[jax.Array]:
         """Synchronous striped TX; returns the ordered device chunk list."""
-        return self.tx_async(host_array).wait()
+        return self.tx_async(host_array, priority=priority).wait()
 
     # -- RX -------------------------------------------------------------------
     def _rx_outs(self, arrays: list,
@@ -505,7 +534,8 @@ class ChannelGroup:
 
     def rx_async(self, device_arrays: Sequence[jax.Array],
                  callback: Callable[[list], None] | None = None,
-                 out: "np.ndarray | Sequence[np.ndarray] | None" = None
+                 out: "np.ndarray | Sequence[np.ndarray] | None" = None,
+                 priority: PriorityClass | None = None
                  ) -> Ticket:
         """Striped asynchronous RX: arrays spread over channels greedily by
         byte load; results come back in the original order.
@@ -521,7 +551,7 @@ class ChannelGroup:
             return self._next_channel().rx_async(
                 arrays, callback=self._delegated("rx", nbytes, len(arrays),
                                                  callback),
-                out=outs if out is not None else None)
+                out=outs if out is not None else None, priority=priority)
         # greedy least-loaded assignment (bytes-balanced striping)
         assign: list[list[int]] = [[] for _ in range(self.n_channels)]
         loads = [0] * self.n_channels
@@ -535,7 +565,8 @@ class ChannelGroup:
         used = [(c, idxs) for c, idxs in enumerate(assign) if idxs]
         issue = [lambda c=c, idxs=idxs: self.engines[c].rx_async(
             [arrays[i] for i in idxs],
-            out=([outs[i] for i in idxs] if out is not None else None))
+            out=([outs[i] for i in idxs] if out is not None else None),
+            priority=priority)
             for c, idxs in used]
 
         def assemble(per_channel: list) -> list:
@@ -550,11 +581,12 @@ class ChannelGroup:
         return Ticket(master, ticket_out)
 
     def rx(self, device_arrays: Sequence[jax.Array],
-           out: "np.ndarray | Sequence[np.ndarray] | None" = None
+           out: "np.ndarray | Sequence[np.ndarray] | None" = None,
+           priority: PriorityClass | None = None
            ) -> list[np.ndarray]:
         """Synchronous striped RX; host arrays in the original order. With
         ``out=`` the results land in the caller's preallocated buffers."""
-        return self.rx_async(device_arrays, out=out).wait()
+        return self.rx_async(device_arrays, out=out, priority=priority).wait()
 
     # -- reporting ------------------------------------------------------------
     def summary(self) -> dict[str, dict[str, float]]:

@@ -1,66 +1,9 @@
-"""Cooperative scheduler — the paper's 'user-level scheduled' driver.
+"""Back-compat shim — :class:`CooperativeScheduler` moved to
+:mod:`repro.core.runtime`, where it is the user-level 'scheduled' backend
+of the unified TransferRuntime interface (the paper's three management
+modes as three backends of one abstraction). Import from there."""
 
-The paper's intermediate mode keeps everything at user level but routes DMA
-requests through a scheduler so the application is never stuck in a dead-lock
-wait: between DMA chunks the scheduler runs other registered tasks (in the
-paper: collecting DVS events and normalising them into frames).
-
-This is a plain round-robin cooperative scheduler: ``submit`` enqueues a
-transfer task, ``register_background`` adds a recurring task that is given a
-slice between transfer tasks, ``drain`` runs until the transfer queue is
-empty. Single-threaded by design — the point of this mode is avoiding
-threads/interrupts while still not monopolising the CPU."""
-
-from __future__ import annotations
-
-import collections
-import time
-from dataclasses import dataclass, field
-from typing import Callable
-
-
-@dataclass
-class SchedulerStats:
-    transfer_tasks_run: int = 0
-    background_slices_run: int = 0
-    drain_calls: int = 0
-    total_background_s: float = 0.0
-
-
-class CooperativeScheduler:
-    def __init__(self, background_budget_s: float = 50e-6):
-        self._transfers: collections.deque[Callable[[], None]] = collections.deque()
-        self._background: list[Callable[[], None]] = []
-        self._bg_cursor = 0
-        self.background_budget_s = background_budget_s
-        self.stats = SchedulerStats()
-
-    def submit(self, task: Callable[[], None]) -> None:
-        self._transfers.append(task)
-
-    def register_background(self, task: Callable[[], None]) -> None:
-        """Register a recurring background task (e.g. data normalisation)."""
-        self._background.append(task)
-
-    def _run_background_slice(self) -> None:
-        if not self._background:
-            return
-        t0 = time.perf_counter()
-        # round-robin through background tasks within the budget
-        while time.perf_counter() - t0 < self.background_budget_s:
-            task = self._background[self._bg_cursor % len(self._background)]
-            self._bg_cursor += 1
-            task()
-            self.stats.background_slices_run += 1
-            if not self._background:
-                break
-        self.stats.total_background_s += time.perf_counter() - t0
-
-    def drain(self) -> None:
-        """Run transfer tasks to completion, interleaving background slices."""
-        self.stats.drain_calls += 1
-        while self._transfers:
-            task = self._transfers.popleft()
-            task()
-            self.stats.transfer_tasks_run += 1
-            self._run_background_slice()
+from repro.core.runtime import (  # noqa: F401
+    CooperativeScheduler,
+    SchedulerStats,
+)

@@ -113,12 +113,23 @@ class HostStreamingExecutor:
     ``staged=False`` selects the legacy per-frame pack path (re-concatenates
     params every frame) — kept only as the measured baseline for
     ``BENCH_transfer.json``.
+
+    ``sensor_fn``: optional frame-ingest callable, registered as a
+    ``SENSOR``-class background task for the duration of each ``run()`` —
+    the paper's concurrent collection+transfer scenario. Under INTERRUPT
+    management the shared runtime gives it budgeted slices between
+    completion dispatches; under SCHEDULED the cooperative scheduler
+    interleaves it between DMA chunks; under POLLING it starves (the
+    paper's warning: the polling driver blocks the whole system).
     """
 
     def __init__(self, engine: "TransferEngine | Any", *, staged: bool = True,
-                 zero_copy_rx: bool = True):
+                 zero_copy_rx: bool = True,
+                 sensor_fn: Callable[[], None] | None = None):
         self.engine = engine
         self.staged = staged
+        self.sensor_fn = sensor_fn
+        self.sensor_slices = 0  # background slices observed across runs
         # per-layer host output buffers, reused frame after frame: with
         # ``zero_copy_rx`` each INTERIOR layer's fmap RX lands in the SAME
         # executor-owned buffer every frame (``rx_async(..., out=)``), so
@@ -146,6 +157,37 @@ class HostStreamingExecutor:
         (no-op on plain engines/groups)."""
         self.engine.maybe_adapt()
 
+    def _register_sensor(self) -> Callable[[], None]:
+        """Register ``sensor_fn`` as a SENSOR-class background task on the
+        engine's completion backend; returns the unregister callable.
+        Both registrars (runtime, cooperative scheduler) share the
+        register -> unregister-callable contract, so one wrapper serves
+        both. POLLING has no backend: the host is blocked for the
+        duration of every transfer — collection starves, which IS the
+        paper's result."""
+        if self.sensor_fn is None:
+            return lambda: None
+        mgmt = self.engine.policy.management
+        registrar = None
+        if mgmt is Management.INTERRUPT:
+            registrar = getattr(self.engine, "runtime", None)
+        elif mgmt is Management.SCHEDULED:
+            registrar = getattr(self.engine, "_scheduler", None)
+        if registrar is None:
+            return lambda: None
+        count = {"n": 0}
+
+        def counted() -> None:
+            count["n"] += 1
+            self.sensor_fn()
+
+        inner = registrar.register_background(counted)
+
+        def unregister() -> None:
+            inner()
+            self.sensor_slices += count["n"]
+        return unregister
+
     def run(
         self,
         layers: Sequence[tuple[str, list[np.ndarray], Callable[..., jax.Array]]],
@@ -155,10 +197,14 @@ class HostStreamingExecutor:
         overlapped = (
             policy.management is Management.INTERRUPT and policy.depth >= 2
         )
-        if overlapped and self.staged:
-            out = self._run_overlapped(layers, x)
-        else:
-            out = self._run_basic(layers, x, prefetch=overlapped)
+        unregister_sensor = self._register_sensor()
+        try:
+            if overlapped and self.staged:
+                out = self._run_overlapped(layers, x)
+            else:
+                out = self._run_basic(layers, x, prefetch=overlapped)
+        finally:
+            unregister_sensor()
         self._frame_end()
         return out
 

@@ -12,12 +12,17 @@ bandwidth. The three managements map onto JAX host<->device semantics:
   cooperative scheduler which interleaves them with other registered tasks
   (sensor collection / normalization in the paper; data-prep and metric tasks
   here). Slightly higher latency, no dead-lock waits.
-- ``INTERRUPT`` — kernel-level interrupt driver: transfers run on a
-  *per-engine* worker pool; the caller gets a ticket and is *notified*
-  (callback / event) on completion. Highest fixed overhead per transfer,
-  best overlap, memory-safety enforced (a staging slot cannot be re-staged
-  before completion — the engine raises, mirroring the kernel driver's
-  protection role).
+- ``INTERRUPT`` — kernel-level interrupt driver: descriptors are staged
+  onto the process-shared :class:`~repro.core.runtime.TransferRuntime`
+  (the interrupt controller: one bounded worker pool arbitrating every
+  engine's completions by priority class); the caller gets a ticket and
+  is *notified* (callback / event) on completion. Highest fixed overhead
+  per transfer, best overlap, memory-safety enforced (a staging slot
+  cannot be re-staged before completion — the engine raises, mirroring
+  the kernel driver's protection role). Each engine registers with a
+  :class:`~repro.core.runtime.PriorityClass` (default ``LAYER``); token
+  streams register ``TOKEN``, prefetch ``BULK`` — individual calls may
+  override via ``priority=``.
 
 Descriptor ring
 ---------------
@@ -56,7 +61,6 @@ from __future__ import annotations
 import collections
 import enum
 import math
-import queue
 import threading
 import time
 from dataclasses import dataclass, replace
@@ -64,6 +68,13 @@ from typing import Any, Callable, Sequence
 
 import jax
 import numpy as np
+
+from repro.core.runtime import (
+    PriorityClass,
+    RuntimeHandle,
+    TransferRuntime,
+    get_runtime,
+)
 
 # Per-engine rolling window of (direction, management, nbytes, seconds)
 # chunk samples — the online cost-model refit (repro.core.adaptive) fits
@@ -100,8 +111,10 @@ class TransferPolicy:
 
     ``ring_depth``: number of staging slots in the descriptor ring. 0 means
     "derive from ``buffering``" (SINGLE=1, DOUBLE=2, RING=4); any positive
-    value overrides it. ``completion_workers`` sizes the per-engine worker
-    pool that plays the kernel-level interrupt driver.
+    value overrides it. ``completion_workers`` is a sizing HINT for the
+    shared :class:`~repro.core.runtime.TransferRuntime` worker cap (the
+    per-engine pools it used to size are retired — completions dispatch
+    on the process-wide runtime).
     """
 
     management: Management = Management.INTERRUPT
@@ -189,81 +202,11 @@ class TransferStats:
         )
 
 
-class _CompletionPool:
-    """The 'kernel-level interrupt driver': per-engine worker pool executing
-    staged transfer descriptors and firing completion callbacks.
-
-    Mirrors the Xilinx AXI-DMA driver structure — a descriptor queue, one or
-    more privileged workers, interrupt-style notification (``threading.Event``
-    + optional callback) — except each engine owns its own pool, so
-    concurrent engines (e.g. several serving instances) never serialize
-    through a shared completion thread. Workers are spawned on demand and
-    exit after ``idle_timeout_s`` without descriptors, so short-lived engines
-    don't leak threads."""
-
-    _SENTINEL = (None, None, None)
-
-    def __init__(self, workers: int = 2, idle_timeout_s: float = 30.0) -> None:
-        self.workers = max(1, workers)
-        self.idle_timeout_s = idle_timeout_s
-        self._q: "queue.Queue[tuple[Callable[[], Any] | None, threading.Event | None, list | None]]" = (
-            queue.Queue()
-        )
-        self._lock = threading.Lock()
-        self._alive = 0
-        self._threads: list[threading.Thread] = []
-        self._closed = False
-
-    def _run(self) -> None:
-        while True:
-            try:
-                fn, done, out = self._q.get(timeout=self.idle_timeout_s)
-            except queue.Empty:
-                # exit only when the queue is provably empty under the lock:
-                # submit() enqueues under the same lock, so a descriptor can
-                # never be stranded between our timeout and our exit.
-                with self._lock:
-                    if not self._q.empty():
-                        continue
-                    self._alive -= 1
-                return
-            if fn is None:  # sentinel from close()
-                with self._lock:
-                    self._alive -= 1
-                return
-            try:
-                out.append(fn())
-            except BaseException as e:  # surfaced at wait()
-                out.append(e)
-            done.set()
-
-    def submit(self, fn: Callable[[], Any]) -> tuple[threading.Event, list]:
-        done = threading.Event()
-        out: list = []
-        with self._lock:
-            if self._closed:
-                raise RuntimeError("submit() on a closed _CompletionPool")
-            self._q.put((fn, done, out))
-            while self._alive < self.workers:
-                t = threading.Thread(target=self._run, daemon=True)
-                t.start()
-                self._threads.append(t)
-                self._alive += 1
-            self._threads = [t for t in self._threads if t.is_alive()]
-        return done, out
-
-    def close(self) -> None:
-        with self._lock:
-            self._closed = True
-            n = self._alive
-            threads = list(self._threads)
-        for _ in range(n):
-            self._q.put(self._SENTINEL)
-        # join so no worker is still tearing down when the caller (possibly
-        # the interpreter at exit) proceeds — a dying worker racing runtime
-        # shutdown aborts the process from the C++ side.
-        for t in threads:
-            t.join(timeout=5.0)
+def _payload_nbytes(payload: Any, direction: str) -> int:
+    """Byte size of one chunk — the fair-queuing cost the runtime charges."""
+    if direction == "tx":
+        return int(np.asarray(payload).nbytes)
+    return int(payload.size) * payload.dtype.itemsize
 
 
 class Ticket:
@@ -535,16 +478,22 @@ class TransferEngine:
     :class:`TransferPolicy`, recording measured :class:`TransferStats`.
 
     The engine owns the descriptor ring (the paper's staging buffers in the
-    *physical* space, generalised to depth N), a :class:`LayoutCache` of
-    reusable staging layouts, and — under INTERRUPT management — a private
-    completion worker pool, so concurrent engines never contend on a global
-    thread. It enforces completion ordering: a ring slot is only re-acquired
-    once its descriptor completed."""
+    *physical* space, generalised to depth N) and a :class:`LayoutCache` of
+    reusable staging layouts. Under INTERRUPT management, completion
+    dispatch rides the process-shared
+    :class:`~repro.core.runtime.TransferRuntime` (pass ``runtime=`` for a
+    private one): the engine registers with a ``priority`` class and the
+    runtime arbitrates its completions against every other stream's. It
+    enforces completion ordering: a ring slot is only re-acquired once its
+    descriptor completed."""
 
     def __init__(self, policy: TransferPolicy, device: jax.Device | None = None,
-                 scheduler: "CooperativeScheduler | None" = None):
+                 scheduler: "CooperativeScheduler | None" = None,
+                 runtime: TransferRuntime | None = None,
+                 priority: PriorityClass = PriorityClass.LAYER):
         self.policy = policy
         self.device = device or jax.devices()[0]
+        self.priority = priority
         # bounded: one record per logical transfer (per decoded token on
         # the serving path) — unbounded history would leak in a
         # long-running server; aggregates live in the *_total counters.
@@ -573,25 +522,55 @@ class TransferEngine:
         # and the refit consumer need no extra lock here.
         self.chunk_samples: "collections.deque[tuple[str, str, int, float]]" \
             = collections.deque(maxlen=_CHUNK_SAMPLE_WINDOW)
-        self._pool: _CompletionPool | None = None
-        # SCHEDULED mode needs a scheduler; lazily import to avoid cycle.
+        self._runtime = runtime
+        self._handle: RuntimeHandle | None = None
+        self._handle_lock = threading.Lock()  # concurrent first-submit must
+        self._closed = False                  # not double-register (leak)
         if scheduler is None and policy.management is Management.SCHEDULED:
-            from repro.core.scheduler import CooperativeScheduler
+            from repro.core.runtime import CooperativeScheduler
 
             scheduler = CooperativeScheduler()
         self._scheduler = scheduler
 
-    # -- completion pool (per engine; lazy so POLLING engines stay threadless)
-    def _completion_pool(self) -> _CompletionPool:
-        if self._pool is None:
-            self._pool = _CompletionPool(self.policy.completion_workers)
-        return self._pool
+    # -- runtime registration (lazy so POLLING engines never touch it) ------
+    def _runtime_handle(self) -> RuntimeHandle:
+        if self._closed:
+            raise RuntimeError("submit on a closed TransferEngine")
+        h = self._handle
+        if h is None:
+            with self._handle_lock:
+                if self._closed:
+                    raise RuntimeError("submit on a closed TransferEngine")
+                h = self._handle
+                if h is None:
+                    if self._runtime is None:
+                        self._runtime = get_runtime()
+                    h = self._handle = self._runtime.register(
+                        self, self.priority,
+                        workers_hint=self.policy.completion_workers)
+        return h
+
+    @property
+    def runtime(self) -> TransferRuntime | None:
+        """The runtime this engine's completions dispatch on (resolved for
+        INTERRUPT engines; ``None`` for polling/scheduled engines that were
+        not handed one explicitly)."""
+        if (self._runtime is None and not self._closed
+                and self.policy.management is Management.INTERRUPT):
+            self._runtime = get_runtime()
+        return self._runtime
 
     def close(self) -> None:
-        """Release the completion workers (idle workers also time out)."""
-        if self._pool is not None:
-            self._pool.close()
-            self._pool = None
+        """Drain this engine's in-flight descriptors and deregister from
+        the shared runtime, so a late completion can never fire into a
+        dead engine. Idempotent; the engine rejects submissions after."""
+        with self._handle_lock:
+            if self._closed:
+                return
+            self._closed = True
+            h, self._handle = self._handle, None
+        if h is not None:
+            h.close()
 
     def maybe_adapt(self, *, force: bool = False) -> bool:
         """Engine-surface hook for safe-point adaptation. A plain engine
@@ -669,12 +648,14 @@ class TransferEngine:
             fn(stats)
 
     # -- TX: host -> device -------------------------------------------------
-    def tx(self, host_array: np.ndarray) -> list[jax.Array]:
-        """Transfer ``host_array`` to the device; returns device chunk list."""
+    def tx(self, host_array: np.ndarray,
+           priority: PriorityClass | None = None) -> list[jax.Array]:
+        """Transfer ``host_array`` to the device; returns device chunk list.
+        ``priority`` overrides the engine's QoS class for this transfer."""
         chunks = _split(np.asarray(host_array), self.policy)
         t0 = time.perf_counter()
         out = self._run_chunks(
-            [(c, "tx", None) for c in chunks],
+            [(c, "tx", None) for c in chunks], priority=priority,
         )
         wall = time.perf_counter() - t0
         self._record(
@@ -684,7 +665,8 @@ class TransferEngine:
 
     # -- RX: device -> host -------------------------------------------------
     def rx(self, device_arrays: Sequence[jax.Array],
-           out: Sequence[np.ndarray] | None = None) -> list[np.ndarray]:
+           out: Sequence[np.ndarray] | None = None,
+           priority: PriorityClass | None = None) -> list[np.ndarray]:
         """Transfer device arrays back to host memory.
 
         ``out``: optional caller-owned destination buffers, one per device
@@ -696,7 +678,7 @@ class TransferEngine:
         nbytes = sum(int(a.size) * a.dtype.itemsize for a in arrays)
         t0 = time.perf_counter()
         result = self._run_chunks(
-            [(a, "rx", o) for a, o in zip(arrays, outs)])
+            [(a, "rx", o) for a, o in zip(arrays, outs)], priority=priority)
         wall = time.perf_counter() - t0
         self._record(
             TransferStats(nbytes, wall, len(arrays), "rx", self.policy.tag)
@@ -739,7 +721,8 @@ class TransferEngine:
              time.perf_counter() - t0))
         return r
 
-    def _run_chunks(self, items: list[tuple[Any, str, Any]]) -> list:
+    def _run_chunks(self, items: list[tuple[Any, str, Any]],
+                    priority: PriorityClass | None = None) -> list:
         mgmt = self.policy.management
         if mgmt is Management.POLLING:
             # user-level polling: issue, then spin until ready, per chunk.
@@ -776,9 +759,10 @@ class TransferEngine:
         # INTERRUPT: stage chunks onto the descriptor ring. Up to ``depth``
         # descriptors are in flight at once; chunk k+depth can only be staged
         # after chunk k's completion fires (ring reuse rule). Slot release
-        # happens on the completion worker, so acquisition (which may chain
-        # on a prior holder) never waits on work that cannot progress.
-        pool = self._completion_pool()
+        # happens on the runtime's completion worker, so acquisition (which
+        # may chain on a prior holder) never waits on work that cannot
+        # progress.
+        handle = self._runtime_handle()
         depth = self.policy.depth
         tickets: list[Ticket | None] = [None] * len(items)
         results: list = [None] * len(items)
@@ -795,7 +779,20 @@ class TransferEngine:
                 finally:
                     self._release_buffer(idx, release)
 
-            done, out = pool.submit(work)
+            # on_cancel: a descriptor cancelled while queued (runtime
+            # teardown) never runs ``work`` — its ring slot must still be
+            # freed or every later acquirer of that slot deadlocks. A
+            # submit() that RAISES (engine/runtime closed concurrently)
+            # leaks the same slot; release it before surfacing.
+            try:
+                done, out = handle.submit(
+                    work, nbytes=_payload_nbytes(payload, direction),
+                    priority=priority,
+                    on_cancel=lambda err, idx=idx, release=release:
+                        self._release_buffer(idx, release))
+            except BaseException:
+                self._release_buffer(idx, release)
+                raise  # already-submitted chunks complete on their own
             tickets[i] = Ticket(done, out)
             inflight.append(i)
             with self._ring_lock:
@@ -810,7 +807,8 @@ class TransferEngine:
     def _submit_async(self, payloads: list, direction: str, nbytes: int,
                       callback: Callable[[list], None] | None,
                       layout: StagedLayout | None,
-                      outs: Sequence[np.ndarray | None] | None = None) -> Ticket:
+                      outs: Sequence[np.ndarray | None] | None = None,
+                      priority: PriorityClass | None = None) -> Ticket:
         """Stage ``payloads`` as ring descriptors, one per chunk.
 
         Ring slots are acquired on the *caller* thread, so a full ring
@@ -821,11 +819,11 @@ class TransferEngine:
         master event fires after the LAST chunk completes; any chunk error is
         re-raised from ``Ticket.wait``.
 
-        ``callback`` runs ON a completion worker. Like an IRQ handler, it
-        must not issue transfers on the same engine (acquisition can block
-        the worker on a slot only this pool can release — self-deadlock);
-        hand follow-up transfers to another thread via the ticket instead."""
-        pool = self._completion_pool()
+        ``callback`` runs ON a shared runtime worker. Like an IRQ handler,
+        it must not issue transfers (acquisition can block the worker on a
+        slot only this runtime can release — self-deadlock); hand follow-up
+        transfers to another thread via the ticket instead."""
+        handle = self._runtime_handle()
         master = threading.Event()
         ticket_out: list = []
         results: list = [None] * len(payloads)
@@ -889,12 +887,33 @@ class TransferEngine:
                     self._release_buffer(idx, release)
                     finish_one(err)
 
-            pool.submit(work)
+            def cancelled(err, idx=idx, release=release):
+                # queued chunk cancelled at teardown: ``work`` never runs,
+                # so the slot release and the master-ticket completion
+                # protocol must run here — otherwise Ticket.wait() hangs
+                # forever and the layout stays busy.
+                self._release_buffer(idx, release)
+                finish_one(err)
+
+            try:
+                handle.submit(work,
+                              nbytes=_payload_nbytes(payload, direction),
+                              priority=priority, on_cancel=cancelled)
+            except BaseException as e:
+                # engine/runtime closed mid-loop: this chunk and every
+                # unsubmitted one after it must still be accounted on the
+                # master ticket (or wait() hangs and the layout stays
+                # busy); its slot must be freed.
+                self._release_buffer(idx, release)
+                for _ in range(len(payloads) - i):
+                    finish_one(e)
+                break
         return Ticket(master, ticket_out)
 
     def tx_async(self, host_array: np.ndarray,
                  callback: Callable[[list], None] | None = None,
-                 layout: StagedLayout | None = None) -> Ticket:
+                 layout: StagedLayout | None = None,
+                 priority: PriorityClass | None = None) -> Ticket:
         """Asynchronous TX. When ``layout`` is given (its staging buffer is
         the payload), the layout is marked busy until completion so an unsafe
         re-pack raises :class:`BufferInFlightError`."""
@@ -903,11 +922,12 @@ class TransferEngine:
         arr = np.asarray(host_array)
         chunks = _split(arr, self.policy)
         return self._submit_async(chunks, "tx", int(arr.nbytes), callback,
-                                  layout)
+                                  layout, priority=priority)
 
     def rx_async(self, device_arrays: Sequence[jax.Array],
                  callback: Callable[[list], None] | None = None,
-                 out: Sequence[np.ndarray] | None = None) -> Ticket:
+                 out: Sequence[np.ndarray] | None = None,
+                 priority: PriorityClass | None = None) -> Ticket:
         """Asynchronous RX: device arrays stream back to host on a completion
         worker while the caller keeps computing. ``wait()`` returns the host
         ndarray list.
@@ -922,7 +942,8 @@ class TransferEngine:
         outs = _check_out(arrays, out)
         nbytes = sum(int(a.size) * a.dtype.itemsize for a in arrays)
         return self._submit_async(arrays, "rx", nbytes, callback, None,
-                                  outs=outs if out is not None else None)
+                                  outs=outs if out is not None else None,
+                                  priority=priority)
 
     # -- reporting -----------------------------------------------------------
     def summary(self) -> dict[str, float]:

@@ -32,7 +32,7 @@ from typing import Any, Iterator
 import jax
 import numpy as np
 
-from repro.core.scheduler import CooperativeScheduler
+from repro.core.runtime import CooperativeScheduler, PriorityClass
 from repro.core.transfer import Management, TransferPolicy
 from repro.models.config import ModelConfig
 
@@ -112,11 +112,14 @@ class StagedPipeline:
         if self.engine is not None:
             # stage through the engine's cached layout: the staging buffer
             # is reused every step (same batch shapes), the TX is measured,
-            # and a ChannelGroup stripes it across its rings.
+            # and a ChannelGroup stripes it across its rings. BULK class:
+            # prefetch is throughput traffic — the shared runtime must
+            # never let it queue ahead of token RX or sensor ingest.
             keys = sorted(host_batch)
             arrays = [np.ascontiguousarray(host_batch[k]) for k in keys]
             lay = self.engine.layouts.get(("batch", tuple(keys)), arrays)
-            dev = lay.unpack(self.engine.tx(lay.pack(arrays)))
+            dev = lay.unpack(self.engine.tx(lay.pack(arrays),
+                                            priority=PriorityClass.BULK))
             # batch boundary, TX retired: safe point for an online-adaptive
             # engine to refit its cost model and swap plan generations
             # (no-op on plain engines/groups).

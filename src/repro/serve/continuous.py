@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.runtime import PriorityClass
 from repro.core.transfer import (
     Management,
     TransferEngine,
@@ -155,15 +156,17 @@ class ContinuousBatchingEngine:
         tok_dev = logits[:, -1, : self.model.cfg.vocab].argmax(-1)
         # next-step input stays device-resident; only the bookkeeping copy
         # crosses back to the host, as a measured RX on the engine. Under
-        # INTERRUPT it rides a completion worker while the next-step input
+        # INTERRUPT it rides a shared-runtime worker at TOKEN priority
+        # (arbitrated ahead of bulk layer TX) while the next-step input
         # prep dispatches.
         out = [self._tok_host]  # reused every step: zero-copy detokenize
-        ticket = (self.transfer.rx_async([tok_dev], out=out)
+        ticket = (self.transfer.rx_async([tok_dev], out=out,
+                                         priority=PriorityClass.TOKEN)
                   if self.transfer.policy.management is Management.INTERRUPT
                   else None)
         self.tokens = tok_dev[:, None].astype(jnp.int32)
         nxt = ticket.wait()[0] if ticket else self.transfer.rx(
-            [tok_dev], out=out)[0]
+            [tok_dev], out=out, priority=PriorityClass.TOKEN)[0]
         nxt = np.asarray(nxt).reshape(-1)
         for slot in active:
             self.slots[slot].tokens.append(int(nxt[slot]))

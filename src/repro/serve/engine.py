@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core.adaptive import AdaptiveChannelGroup, AdaptiveConfig
 from repro.core.channels import ChannelGroup
+from repro.core.runtime import PriorityClass
 from repro.core.transfer import (
     Management,
     TransferEngine,
@@ -52,6 +53,10 @@ class ServeConfig:
     # keep refitting the fitted policy from live traffic and swap plans at
     # safe points (implies adaptive_transfer's construction-time calibration)
     online_adaptation: bool = False
+    # warm-start persistence: with online_adaptation, load the first plan
+    # from this file when it exists and save the fitted state on close()
+    # — a restarted server skips the calibration sweep.
+    transfer_state_path: str | None = None
 
 
 @dataclass
@@ -88,8 +93,14 @@ class ServingEngine:
                 # construction-time calibration PLUS rolling refit: the
                 # engine keeps re-fitting t0/BW from live token/prompt
                 # traffic and swaps plans between requests (safe points).
+                # A state_path warm-starts the first plan from the last
+                # session's fit; the runtime's TOKEN-class dispatch
+                # latencies feed the controller's polling/interrupt
+                # crossover from real serving traces.
                 self.engine = AdaptiveChannelGroup(
-                    prompt_bytes, cfg=AdaptiveConfig(max_channels=max_ch))
+                    prompt_bytes, cfg=AdaptiveConfig(max_channels=max_ch),
+                    priority=PriorityClass.TOKEN,
+                    state_path=cfg.transfer_state_path)
             else:
                 self.engine = ChannelGroup.auto(prompt_bytes,
                                                 max_channels=max_ch)
@@ -158,13 +169,17 @@ class ServingEngine:
             # token t streams back on a completion worker while step t+1
             # decodes — the decode loop never blocks on device->host copies,
             # and each token lands in its reused row of _tok_buf (zero
-            # per-token host allocation).
-            tickets = [self.engine.rx_async([tok], out=[self._tok_buf[0]])]
+            # per-token host allocation). TOKEN priority: the shared
+            # runtime dispatches these tiny RXs ahead of bulk layer TX, so
+            # decode latency is protected under contention.
+            tickets = [self.engine.rx_async([tok], out=[self._tok_buf[0]],
+                                            priority=PriorityClass.TOKEN)]
             for step in range(max_new_tokens - 1):
                 logits, cache = self._decode(self.params, tok, cache)
                 tok = self._sample(logits)
                 tickets.append(self.engine.rx_async(
-                    [tok], out=[self._tok_buf[step + 1]]))
+                    [tok], out=[self._tok_buf[step + 1]],
+                    priority=PriorityClass.TOKEN))
             for t in tickets:
                 t.wait()
             toks = self._tok_buf.T
@@ -173,7 +188,8 @@ class ServingEngine:
                 if step:
                     logits, cache = self._decode(self.params, tok, cache)
                     tok = self._sample(logits)
-                self.engine.rx([tok], out=[self._tok_buf[step]])
+                self.engine.rx([tok], out=[self._tok_buf[step]],
+                               priority=PriorityClass.TOKEN)
             toks = self._tok_buf.T
         decode_s = time.perf_counter() - t0
         # request boundary = safe point: let an adaptive engine swap plans

@@ -291,6 +291,120 @@ def test_group_runs_streaming_executor():
     g.close()
 
 
+# ---- warm-start persistence ------------------------------------------------
+
+def test_warm_start_state_roundtrip(tmp_path):
+    """save() -> load() must reproduce the plan, the drift references, and
+    the seeded fit windows — the next session starts from this one's
+    steady state instead of re-calibrating."""
+    path = tmp_path / "transfer_state.json"
+    ctl, model = _controller()
+    _feed(ctl, TransferCostModel(t0_s=300e-6, bw_Bps=1.5e9), repeats=10)
+    ctl.add_chunk_sample("rx", "interrupt", 1 << 20, 1e-3)
+    ctl.propose(force=True)  # adopt the fitted state
+    ctl.save(path)
+
+    ctl2 = OnlineTransferController.load(path)
+    assert ctl2.plan.policy == ctl.plan.policy
+    assert ctl2.plan.n_channels == ctl.plan.n_channels
+    assert abs(ctl2._tx_ref.t0_s - ctl._tx_ref.t0_s) < 1e-12
+    # seeded windows: the loaded controller can fit IMMEDIATELY (no fresh
+    # traffic, no calibration sweep)
+    m = ctl2._fit_for("tx", "interrupt").fit(4)
+    assert m is not None
+    m_src = ctl._fit_for("tx", "interrupt").fit(4)
+    assert abs(m.t0_s - m_src.t0_s) / m_src.t0_s < 0.05
+    assert abs(m.bw_Bps - m_src.bw_Bps) / m_src.bw_Bps < 0.05
+
+
+def test_rolling_fit_state_roundtrip():
+    m_true = TransferCostModel(t0_s=120e-6, bw_Bps=2e9)
+    fit = RollingFit(window=64)
+    _feed(fit, m_true, repeats=4)
+    clone = RollingFit.from_state(fit.to_state(), window=64)
+    assert len(clone) == len(fit)
+    m = clone.fit(4)
+    assert abs(m.t0_s - m_true.t0_s) / m_true.t0_s < 0.05
+
+
+def test_adaptive_group_warm_starts_from_state_file(tmp_path):
+    """An AdaptiveChannelGroup with a state_path persists on close and the
+    NEXT group skips calibration, seeding its first plan from the file."""
+    path = tmp_path / "state.json"
+    model = TransferCostModel(t0_s=100e-6, bw_Bps=2e9)
+    g1 = AdaptiveChannelGroup(8 << 20, model=model, state_path=path)
+    assert not g1.warm_started
+    plan1 = g1.controller.plan
+    g1.close()
+    assert path.exists()
+
+    g2 = AdaptiveChannelGroup(8 << 20, state_path=path)  # no model: would
+    assert g2.warm_started                               # calibrate cold
+    assert g2.plan.policy == plan1.policy
+    assert g2.plan.n_channels == plan1.n_channels
+    # and it still transfers
+    x = np.arange(1 << 16, dtype=np.float32)
+    np.testing.assert_array_equal(np.asarray(reassemble_chunks(g2.tx(x))), x)
+    g2.close()
+
+
+# ---- runtime dispatch latency feeds the crossover ---------------------------
+
+def test_dispatch_latency_moves_crossover_to_polling():
+    """The shared runtime's measured queue wait is a real cost of the
+    interrupt driver that polling never pays: folding it into the
+    crossover must flip a near-threshold payload back to POLLING."""
+    poll = TransferCostModel(t0_s=2e-6, bw_Bps=2e9)
+    intr = TransferCostModel(t0_s=30e-6, bw_Bps=3e9)
+    fits = {"polling": poll, "interrupt": intr}
+    n_star = TransferCostModel.crossover_bytes(poll, intr)
+    payload = int(n_star * 2)  # above the uncontended crossover
+    assert choose_management(fits, payload) is Management.INTERRUPT
+    # under contention the interrupt path queues ~500us per descriptor
+    assert choose_management(
+        fits, payload, interrupt_extra_t0_s=500e-6) is Management.POLLING
+
+
+def test_controller_crossover_uses_noted_dispatch_latency():
+    ctl, _ = _controller(hysteresis=1.1)
+    poll = TransferCostModel(t0_s=2e-6, bw_Bps=2e9)
+    intr = TransferCostModel(t0_s=30e-6, bw_Bps=3e9)
+    small = (1 << 10, 4 << 10, 16 << 10, 64 << 10, 256 << 10)
+    for _ in range(8):
+        for n in small:
+            ctl.add_chunk_sample("tx", "polling", n, poll.time_unique(n))
+            ctl.add_chunk_sample("tx", "interrupt", n, intr.time_unique(n))
+    n_star = TransferCostModel.crossover_bytes(poll, intr)
+    ctl._payloads.clear()
+    ctl._payloads.append(int(n_star * 2))
+    plan = ctl.propose(force=True)
+    assert plan is not None
+    assert plan.policy.management is Management.INTERRUPT
+    # heavy serving contention: queue wait dwarfs the service-time fits
+    for _ in range(32):
+        ctl.note_dispatch_latency(2e-3)
+    plan = ctl.propose(force=True)
+    assert plan is not None
+    assert plan.policy.management is Management.POLLING
+
+
+def test_adaptive_group_ingests_runtime_dispatch_latency():
+    """maybe_adapt() must pull the runtime's per-class dispatch latency
+    into the controller (real serving traces drive the crossover)."""
+    from repro.core.runtime import TransferRuntime
+
+    with TransferRuntime(workers=1) as rt:
+        g = AdaptiveChannelGroup(
+            8 << 20, model=TransferCostModel(t0_s=100e-6, bw_Bps=2e9),
+            runtime=rt, cfg=AdaptiveConfig(min_samples=8, refit_every=1))
+        x = np.arange(1 << 16, dtype=np.float32)
+        for _ in range(3):
+            g.tx(x)
+        g.maybe_adapt()
+        assert g.controller._dispatch_t0_s > 0.0
+        g.close()
+
+
 # ---- zero-copy RX ----------------------------------------------------------
 
 def test_rx_out_identity_and_zero_alloc_steady_state():

@@ -167,15 +167,19 @@ def test_ring_depth_derivation_and_tag():
         TransferPolicy(ring_depth=-1)
 
 
-def test_per_engine_pools_do_not_share_state():
-    """Concurrent engines own separate completion pools (serving case)."""
+def test_engines_share_one_runtime_with_separate_handles():
+    """The PR-4 inversion of the retired per-engine pools: concurrent
+    kernel-mode engines dispatch on ONE shared TransferRuntime (no thread
+    sprawl, cross-stream arbitration) while keeping isolated per-engine
+    registrations (ticket state never crosses engines)."""
     a = TransferEngine(TransferPolicy.kernel_level())
     b = TransferEngine(TransferPolicy.kernel_level())
     ta = a.tx_async(np.ones(1000, np.float32))
     tb = b.tx_async(np.full(1000, 2.0, np.float32))
     ta.wait(), tb.wait()
-    assert a._pool is not None and b._pool is not None
-    assert a._pool is not b._pool
+    assert a._handle is not None and b._handle is not None
+    assert a._handle is not b._handle
+    assert a._handle.runtime is b._handle.runtime  # ONE interrupt controller
     a.close(), b.close()
 
 
@@ -243,12 +247,14 @@ def test_staged_layout_one_byte_dtypes_roundtrip():
     eng.close()
 
 
-def test_completion_pool_survives_idle_timeout():
+def test_dedicated_pool_survives_idle_timeout():
     """A submit racing the workers' idle exit must not strand a descriptor
-    (ticket.wait would hang forever)."""
+    (ticket.wait would hang forever). DedicatedWorkerPool is the retired
+    per-engine pool's machinery, kept for long-occupancy work
+    (checkpoint writes)."""
     import time as _time
-    from repro.core.transfer import _CompletionPool
-    pool = _CompletionPool(workers=2, idle_timeout_s=0.02)
+    from repro.core.runtime import DedicatedWorkerPool
+    pool = DedicatedWorkerPool(workers=2, idle_timeout_s=0.02)
     for _ in range(10):
         _time.sleep(0.025)  # let workers hit (or race) the idle exit
         done, out = pool.submit(lambda: 42)
@@ -390,26 +396,26 @@ def test_mixed_sync_async_share_one_ring():
 
 
 def test_layout_marked_busy_before_submit():
-    """The busy flag must be set BEFORE the descriptor reaches the pool —
-    the old submit-then-flag order left a window where a re-pack could
-    corrupt the in-flight staging buffer."""
-    from repro.core.transfer import _CompletionPool
+    """The busy flag must be set BEFORE the descriptor reaches the shared
+    runtime — the old submit-then-flag order left a window where a re-pack
+    could corrupt the in-flight staging buffer."""
+    from repro.core.runtime import RuntimeHandle
 
     eng = TransferEngine(TransferPolicy.kernel_level_ring(2))
     arrays = [np.zeros(1024, np.float32)]
     lay = eng.layouts.get("l", arrays)
     seen = []
-    orig = _CompletionPool.submit
+    orig = RuntimeHandle.submit
 
-    def spy(self, fn):
+    def spy(self, fn, *a, **kw):
         seen.append(lay._busy is not None and not lay._busy.is_set())
-        return orig(self, fn)
+        return orig(self, fn, *a, **kw)
 
-    _CompletionPool.submit = spy
+    RuntimeHandle.submit = spy
     try:
         eng.tx_async(lay.pack(arrays), layout=lay).wait()
     finally:
-        _CompletionPool.submit = orig
+        RuntimeHandle.submit = orig
     assert seen and all(seen)
     eng.close()
 
