@@ -18,10 +18,29 @@ against everything else' situation. Three dispatch regimes:
   (``fair=False``): the naive shared pool, where the token waits out the
   whole bulk backlog. This is the regime QoS arbitration exists to kill.
 
+Preemptive chunked dispatch (PR 5) adds the single-worker pair that
+isolates the mechanism the reserved lane cannot provide — a worker
+mid-chunk is non-preemptive, so when NO worker is free the token waits
+out a whole in-service bulk chunk:
+
+- ``no-preempt-1w`` — one shared worker (the lane needs >= 2 workers, so
+  head-of-line blocking is structural): token p99 ~ one 2 MiB chunk.
+- ``preempt-1w`` — same single worker, but bulk chunks are submitted as
+  resumable segment iterators sized by the fitted cost model
+  (``TransferCostModel.preempt_chunk_bytes``): the worker parks the bulk
+  chunk at the next segment boundary the moment the token arrives.
+
+A cap sweep (PR 5) measures the per-class bandwidth ceiling: BULK + LAYER
+floods share one runtime, first uncapped, then with BULK capped to 50% of
+its measured uncapped rate — the byte shares in ``class_summary()`` must
+shift toward the uncapped class.
+
 Headline: p99 token-RX latency, runtime-arbitrated must be no worse than
-per-engine-pool (acceptance) and far below shared-fifo. Each variant runs
-``REPS`` times; the reported p50/p99 are medians across reps (one
-scheduler hiccup must not swing the comparison on this 2-core host).
+per-engine-pool (acceptance) and far below shared-fifo; preempt-1w must
+beat no-preempt-1w (mechanism) and the PR-4 reserved-lane baseline
+(acceptance) with HALF its workers. Each variant runs ``REPS`` times; the
+reported p50/p99 are medians across reps (one scheduler hiccup must not
+swing the comparison on this 2-core host).
 
 Results merge into ``BENCH_transfer.json`` under ``"qos_contention"``.
 ``--quick`` shrinks iteration counts for the CI smoke (no JSON rewrite).
@@ -37,37 +56,75 @@ import time
 
 import numpy as np
 
+from repro.core.channels import calibrate_transfer
 from repro.core.runtime import PriorityClass, TransferRuntime, _pct
 from repro.core.transfer import TransferEngine, TransferPolicy
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_transfer.json"
 
-BULK_BYTES = 16 << 20      # one bulk layer payload
-BULK_BLOCK = 2 << 20       # 2 MiB chunks: each holds a worker for ~ms
+# One bulk layer payload = one 8 MiB chunk: a worker holds it in service
+# for ~10 ms on this host (misaligned-copy path, ~0.85 GB/s — see
+# _bulk_payload) — far above the ~1 ms OS scheduling noise floor, so the
+# structural head-of-line penalty (a token waiting out a whole in-service
+# chunk) dominates the measured tail instead of drowning in it.
+BULK_BYTES = 8 << 20
+BULK_BLOCK = 8 << 20
 BULK_RING = 8              # deep ring: a real backlog forms in the queue
 TOKEN_ELEMS = 8            # a decode step's token batch (8 x int32)
 TOKEN_PERIOD_S = 2e-3      # decode cadence (>= the host's sleep floor)
+# preemption segments: bounded service-time target for the fitted sizing,
+# clamped to [block/8, block/4] (~1-2.5 ms of service each here). The
+# clamp matters on this backend: every extra device_put pays a real fixed
+# dispatch cost (~0.2-0.5 ms measured) that the linear fit underestimates,
+# so unclamped fitted segments would tank bulk throughput; and a fit whose
+# outlier fallback inflated t0 would otherwise produce segments bigger
+# than the chunk and silently measure nothing.
+PREEMPT_TARGET_S = 1e-3
+PREEMPT_MIN_SEG = BULK_BLOCK // 8
+PREEMPT_MAX_SEG = BULK_BLOCK // 4
 
 
-def _bulk_policy() -> TransferPolicy:
-    return TransferPolicy.kernel_level_ring(BULK_RING, block_bytes=BULK_BLOCK)
+def _bulk_payload(rng: np.random.Generator, nbytes: int) -> np.ndarray:
+    """A flood payload whose device_put ALWAYS performs the copy: a
+    deliberately MISALIGNED view (base + 1 byte) can never take the CPU
+    backend's zero-copy path, which wants 64-byte-aligned data. Without
+    this, some runs intermittently zero-copied the flood (~40 "GB/s" of
+    no-op transfers) and the contention being measured dissolved."""
+    buf = rng.integers(0, 255, nbytes + 1, dtype=np.uint8)
+    return buf[1:1 + nbytes]
+
+
+def _bulk_policy(preempt_bytes: int = 0,
+                 completion_workers: int = 2) -> TransferPolicy:
+    return TransferPolicy.kernel_level_ring(
+        BULK_RING, block_bytes=BULK_BLOCK).with_(
+            preempt_chunk_bytes=preempt_bytes,
+            completion_workers=completion_workers)
+
+
+def fitted_preempt_bytes() -> int:
+    """Segment size from the fitted cost model, clamped for the demo."""
+    model = calibrate_transfer()
+    seg = model.preempt_chunk_bytes(PREEMPT_TARGET_S)
+    return min(max(seg, PREEMPT_MIN_SEG), PREEMPT_MAX_SEG)
 
 
 def _measure_variant(runtime_for, label: str, n_tokens: int,
-                     warmup: int) -> dict:
+                     warmup: int, bulk_policy: TransferPolicy | None = None,
+                     token_policy: TransferPolicy | None = None) -> dict:
     """Run bulk TX flood + periodic token RX; return latency stats.
 
     ``runtime_for(stream)`` maps "bulk"/"token" to the runtime that stream's
     engine should dispatch on (same object = shared)."""
     rt_bulk = runtime_for("bulk")
     rt_token = runtime_for("token")
-    bulk_eng = TransferEngine(_bulk_policy(), runtime=rt_bulk,
+    bulk_eng = TransferEngine(bulk_policy or _bulk_policy(), runtime=rt_bulk,
                               priority=PriorityClass.LAYER)
-    token_eng = TransferEngine(TransferPolicy.kernel_level(),
+    token_eng = TransferEngine(token_policy or TransferPolicy.kernel_level(),
                                runtime=rt_token,
                                priority=PriorityClass.TOKEN)
     rng = np.random.default_rng(0)
-    bulk_payload = rng.integers(0, 255, BULK_BYTES, dtype=np.uint8)
+    bulk_payload = _bulk_payload(rng, BULK_BYTES)
     tok_dev = token_eng.tx(np.arange(TOKEN_ELEMS, dtype=np.int32))
     tok_out = np.empty(TOKEN_ELEMS, np.int32)
     # warm both paths (first device_put pays one-time dispatch/alloc costs)
@@ -111,6 +168,9 @@ def _measure_variant(runtime_for, label: str, n_tokens: int,
     # in the numerator, so their completion time must be in the
     # denominator too, or bulk_gbps is inflated.
     window_s = time.perf_counter() - t_start
+    # preemption ledger BEFORE close (close drains/deregisters the engines)
+    flood_cls = rt_bulk.class_summary().get(PriorityClass.LAYER.value, {})
+    park_p99 = flood_cls.get("preempt_park_p99_ms", float("nan"))
     bulk_eng.close()
     token_eng.close()
     return {
@@ -121,6 +181,12 @@ def _measure_variant(runtime_for, label: str, n_tokens: int,
         "token_rx_max_ms": round(max(lats) * 1e3, 4),
         "n_tokens": len(lats),
         "bulk_gbps": round(bulk_bytes["n"] / max(window_s, 1e-9) / 1e9, 3),
+        "flood_preemptions": int(flood_cls.get("preemptions", 0)),
+        # None (not NaN) when the variant never preempted: a bare NaN
+        # token would make the merged BENCH_transfer.json invalid JSON
+        # for strict (non-Python) consumers of the CI artifact.
+        "preempt_park_p99_ms": (round(park_p99, 4)
+                                if park_p99 == park_p99 else None),
     }
 
 
@@ -128,15 +194,88 @@ def _median_rows(rows: list[dict]) -> dict:
     """Median per-field across one variant's repetitions."""
     out = dict(rows[0])
     for k in ("token_rx_p50_ms", "token_rx_p99_ms", "token_rx_max_ms",
-              "bulk_gbps"):
-        out[k] = sorted(r[k] for r in rows)[len(rows) // 2]
+              "bulk_gbps", "flood_preemptions", "preempt_park_p99_ms"):
+        vals = [v for r in rows
+                if isinstance(v := r.get(k), (int, float)) and v == v]
+        if vals:
+            out[k] = sorted(vals)[len(vals) // 2]
     return out
+
+
+def _measure_cap_sweep(seconds: float, cap_frac: float = 0.5) -> list[dict]:
+    """BULK + LAYER TX floods on one runtime: byte shares uncapped, then
+    with BULK capped to ``cap_frac`` of its measured uncapped rate. The
+    cap must measurably shift bytes to the uncapped class."""
+
+    def flood_phase(cap_Bps: float | None) -> dict:
+        rt = TransferRuntime(workers=2)
+        pol = _bulk_policy()
+        engines = {
+            PriorityClass.BULK: TransferEngine(pol, runtime=rt,
+                                               priority=PriorityClass.BULK),
+            PriorityClass.LAYER: TransferEngine(pol, runtime=rt,
+                                                priority=PriorityClass.LAYER),
+        }
+        if cap_Bps is not None:
+            rt.set_class_cap(PriorityClass.BULK, cap_Bps)
+        rng = np.random.default_rng(1)
+        payload = _bulk_payload(rng, 8 << 20)
+        for eng in engines.values():  # warm the device path
+            eng.tx_async(payload[: 1 << 20]).wait()
+        deadline = time.perf_counter() + seconds
+        done = {cls: 0 for cls in engines}
+
+        def flood(cls: PriorityClass) -> None:
+            eng = engines[cls]
+            pending = []
+            while time.perf_counter() < deadline:
+                pending.append(eng.tx_async(payload))
+                if len(pending) >= 2:
+                    pending.pop(0).wait()
+                    done[cls] += payload.nbytes
+            for t in pending:
+                t.wait()
+                done[cls] += payload.nbytes
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=flood, args=(cls,), daemon=True)
+                   for cls in engines]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        window = time.perf_counter() - t0
+        summary = rt.class_summary()
+        for eng in engines.values():
+            eng.close()
+        rt.close()
+        bulk_b = done[PriorityClass.BULK]
+        layer_b = done[PriorityClass.LAYER]
+        return {
+            "bench": "qos_contention",
+            "variant": "cap-off" if cap_Bps is None else "cap-50pct",
+            "cap_bytes_per_s": cap_Bps,
+            "bulk_gbps": round(bulk_b / max(window, 1e-9) / 1e9, 3),
+            "layer_gbps": round(layer_b / max(window, 1e-9) / 1e9, 3),
+            "bulk_share": round(bulk_b / max(bulk_b + layer_b, 1), 3),
+            "bulk_cap_deferrals": int(
+                summary.get("bulk", {}).get("cap_deferrals", 0)),
+        }
+
+    uncapped = flood_phase(None)
+    cap_Bps = cap_frac * uncapped["bulk_gbps"] * 1e9
+    capped = flood_phase(max(cap_Bps, 1e6))
+    return [uncapped, capped]
 
 
 def run(quick: bool = False) -> list[dict]:
     n_tokens = 40 if quick else 150
     warmup = 5 if quick else 15
-    reps = 1 if quick else 3
+    # medians over 5 reps: p99 on a 2-core host needs more than 3 samples
+    # before one scheduler hiccup stops swinging the headline ratios.
+    reps = 1 if quick else 5
+    cap_seconds = 0.5 if quick else 2.0
+    preempt_bytes = fitted_preempt_bytes()
 
     def shared_factory():
         rt = TransferRuntime(workers=2)
@@ -151,27 +290,46 @@ def run(quick: bool = False) -> list[dict]:
         rt = TransferRuntime(workers=2, fair=False)
         return lambda stream: rt, [rt]
 
+    def one_worker_factory():
+        # a single shared worker: the reserved lane is structurally
+        # impossible (it needs a worker to spare), so the token's wait is
+        # bounded ONLY by the in-service dispatch unit — whole chunk
+        # without preemption, one fitted segment with it.
+        rt = TransferRuntime(workers=1)
+        return lambda stream: rt, [rt]
+
+    # completion_workers=1 so the engines' workers_hint cannot grow the
+    # single-worker runtimes back to 2.
+    p1_bulk_plain = _bulk_policy(0, completion_workers=1)
+    p1_bulk_pre = _bulk_policy(preempt_bytes, completion_workers=1)
+    p1_token = TransferPolicy.kernel_level().with_(completion_workers=1)
     variants = [
-        ("runtime-arbitrated", shared_factory),
-        ("per-engine-pool", per_engine_factory),
-        ("shared-fifo", fifo_factory),
+        ("runtime-arbitrated", shared_factory, None, None),
+        ("per-engine-pool", per_engine_factory, None, None),
+        ("shared-fifo", fifo_factory, None, None),
+        ("no-preempt-1w", one_worker_factory, p1_bulk_plain, p1_token),
+        ("preempt-1w", one_worker_factory, p1_bulk_pre, p1_token),
     ]
 
     rows: list[dict] = []
     per_variant: dict[str, list[dict]] = {}
     for rep in range(reps):
-        for label, make in variants:
+        for label, make, bulk_pol, tok_pol in variants:
             runtime_for, rts = make()
-            row = _measure_variant(runtime_for, label, n_tokens, warmup)
+            row = _measure_variant(runtime_for, label, n_tokens, warmup,
+                                   bulk_policy=bulk_pol,
+                                   token_policy=tok_pol)
             for rt in rts:
                 rt.close()
             per_variant.setdefault(label, []).append(row)
-    for label, _ in variants:
+    for label, *_ in variants:
         rows.append(_median_rows(per_variant[label]))
 
     arb = next(r for r in rows if r["variant"] == "runtime-arbitrated")
     pep = next(r for r in rows if r["variant"] == "per-engine-pool")
     fifo = next(r for r in rows if r["variant"] == "shared-fifo")
+    hol = next(r for r in rows if r["variant"] == "no-preempt-1w")
+    pre = next(r for r in rows if r["variant"] == "preempt-1w")
     rows.append({
         "bench": "qos_contention",
         "variant": "headline",
@@ -181,9 +339,18 @@ def run(quick: bool = False) -> list[dict]:
         # the regime arbitration exists to kill: naive shared FIFO
         "p99_ratio_fifo_over_runtime": round(
             fifo["token_rx_p99_ms"] / max(arb["token_rx_p99_ms"], 1e-9), 3),
+        # preemptive chunking, mechanism isolated (same single worker)
+        "p99_ratio_hol_over_preempt": round(
+            hol["token_rx_p99_ms"] / max(pre["token_rx_p99_ms"], 1e-9), 3),
+        # acceptance: preemption at ONE worker vs the PR-4 reserved-lane
+        # baseline at TWO (>= 1 means preemptive chunking improves on it)
+        "p99_ratio_reserved_lane_over_preempt": round(
+            arb["token_rx_p99_ms"] / max(pre["token_rx_p99_ms"], 1e-9), 3),
+        "preempt_chunk_bytes": preempt_bytes,
         "runtime_threads": 2,
         "per_engine_threads": 4,
     })
+    rows.extend(_measure_cap_sweep(cap_seconds))
     return rows
 
 
@@ -196,14 +363,29 @@ def merge_bench_json(rows: list[dict],
     arb = next(r for r in rows if r["variant"] == "runtime-arbitrated")
     pep = next(r for r in rows if r["variant"] == "per-engine-pool")
     fifo = next(r for r in rows if r["variant"] == "shared-fifo")
+    hol = next(r for r in rows if r["variant"] == "no-preempt-1w")
+    pre = next(r for r in rows if r["variant"] == "preempt-1w")
+    cap_off = next(r for r in rows if r["variant"] == "cap-off")
+    cap_on = next(r for r in rows if r["variant"] == "cap-50pct")
     doc["qos_contention"] = {
         "rows": rows,
         "runtime_arbitrated_token_rx_p99_ms": arb["token_rx_p99_ms"],
         "per_engine_pool_token_rx_p99_ms": pep["token_rx_p99_ms"],
         "shared_fifo_token_rx_p99_ms": fifo["token_rx_p99_ms"],
+        "no_preempt_1w_token_rx_p99_ms": hol["token_rx_p99_ms"],
+        "preempt_1w_token_rx_p99_ms": pre["token_rx_p99_ms"],
         "p99_ratio_per_engine_over_runtime":
             head["p99_ratio_per_engine_over_runtime"],
         "p99_ratio_fifo_over_runtime": head["p99_ratio_fifo_over_runtime"],
+        "p99_ratio_hol_over_preempt": head["p99_ratio_hol_over_preempt"],
+        "p99_ratio_reserved_lane_over_preempt":
+            head["p99_ratio_reserved_lane_over_preempt"],
+        "preempt_chunk_bytes": head["preempt_chunk_bytes"],
+        "cap_bulk_share_uncapped": cap_off["bulk_share"],
+        "cap_bulk_share_capped": cap_on["bulk_share"],
+        "cap_layer_gbps_uncapped": cap_off["layer_gbps"],
+        "cap_layer_gbps_capped": cap_on["layer_gbps"],
+        "cap_bytes_per_s": cap_on["cap_bytes_per_s"],
     }
     path.write_text(json.dumps(doc, indent=2) + "\n")
     return doc

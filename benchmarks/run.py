@@ -55,6 +55,7 @@ def main() -> None:
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(
         BENCHES)
 
+    failures: list[str] = []
     print("name,us_per_call,derived")
     for name in names:
         fn = BENCHES[name]
@@ -64,34 +65,45 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             print(f"{name},nan,error={type(e).__name__}")
             print(f"# {name} ERROR: {e}", file=sys.stderr)
+            failures.append(name)
             continue
         us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
         for row in rows:
             print(f"# {row}")
         print(f"{name},{us:.1f},{_derived(rows[0]) if rows else ''}")
-        if name == "streaming_layers":
-            doc = streaming_layers.write_bench_json(rows)
-            print(f"# wrote BENCH_transfer.json (ring/seed frames_per_s "
-                  f"ratio {doc['frames_per_s_ratio_ring_over_seed']})")
-        if name == "multichannel_sweep":
-            doc = multichannel_sweep.merge_bench_json(rows)
-            mc = doc["multichannel"]
-            print(f"# merged multichannel rows into BENCH_transfer.json "
-                  f"(single-ring/multi tx us/B ratio "
-                  f"{mc['tx_us_per_byte_ratio_single_ring_over_multi']})")
-        if name == "adaptive_drift":
-            doc = adaptive_drift.merge_bench_json(rows)
-            ad = doc["adaptive_drift"]
-            print(f"# merged adaptive_drift rows into BENCH_transfer.json "
-                  f"(post-drift static/online recovery ratio "
-                  f"{ad['recovery_ratio_static_over_online']})")
-        if name == "qos_contention":
-            doc = qos_contention.merge_bench_json(rows)
-            qc = doc["qos_contention"]
-            print(f"# merged qos_contention rows into BENCH_transfer.json "
-                  f"(token-RX p99 per-engine/runtime ratio "
-                  f"{qc['p99_ratio_per_engine_over_runtime']}, fifo/runtime "
-                  f"{qc['p99_ratio_fifo_over_runtime']})")
+        try:
+            if name == "streaming_layers":
+                doc = streaming_layers.write_bench_json(rows)
+                print(f"# wrote BENCH_transfer.json (ring/seed frames_per_s "
+                      f"ratio {doc['frames_per_s_ratio_ring_over_seed']})")
+            if name == "multichannel_sweep":
+                doc = multichannel_sweep.merge_bench_json(rows)
+                mc = doc["multichannel"]
+                print(f"# merged multichannel rows into BENCH_transfer.json "
+                      f"(single-ring/multi tx us/B ratio "
+                      f"{mc['tx_us_per_byte_ratio_single_ring_over_multi']})")
+            if name == "adaptive_drift":
+                doc = adaptive_drift.merge_bench_json(rows)
+                ad = doc["adaptive_drift"]
+                print(f"# merged adaptive_drift rows into BENCH_transfer.json "
+                      f"(post-drift static/online recovery ratio "
+                      f"{ad['recovery_ratio_static_over_online']})")
+            if name == "qos_contention":
+                doc = qos_contention.merge_bench_json(rows)
+                qc = doc["qos_contention"]
+                print(f"# merged qos_contention rows into BENCH_transfer.json "
+                      f"(token-RX p99 per-engine/runtime ratio "
+                      f"{qc['p99_ratio_per_engine_over_runtime']}, "
+                      f"fifo/runtime "
+                      f"{qc['p99_ratio_fifo_over_runtime']})")
+        except Exception as e:  # noqa: BLE001 — a merge failure is a failure
+            print(f"# {name} MERGE ERROR: {e}", file=sys.stderr)
+            failures.append(name)
+    if failures:
+        # a sub-benchmark that died must fail the run (the CI smoke lane
+        # gates on this exit code — silent skips made the lane vacuous)
+        print(f"# FAILED benches: {','.join(failures)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

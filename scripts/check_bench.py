@@ -1,0 +1,193 @@
+#!/usr/bin/env python
+"""Bench regression gate: committed BENCH_transfer.json vs a fresh probe.
+
+Two layers of checking, both with GENEROUS tolerances — this repo's
+benchmarks run on noisy 2-core CI hosts (see the env notes in
+``benchmarks/run.py`` and ``benchmarks/adaptive_drift.py``), where 2-3x
+swings between runs are normal. The gate exists to catch *order-of-
+magnitude* regressions (a perf path silently falling back to the seed
+implementation, a QoS knob rotting into a no-op), not to re-certify the
+committed numbers:
+
+1. **structural** — the committed file must contain every section a full
+   ``benchmarks/run.py`` writes, with the headline keys intact and the
+   improvement ratios not *inverted* beyond noise (e.g. the staged ring
+   must not have become slower than the seed pack).
+2. **fresh probe** (skippable with ``--skip-fresh``) — two cheap live
+   measurements compared against the committed numbers within a
+   ``--tolerance``x factor (default 20x):
+   - a staged-ring TX microbench vs the committed streaming_layers
+     staged-ring us/byte;
+   - a quick qos_contention run vs the committed arbitrated token-RX p99,
+     plus sanity that preemptive chunking still actually preempts.
+
+Exit 0 = pass; exit 1 = regression/missing data, with a reason per line.
+
+Usage:
+  PYTHONPATH=src python scripts/check_bench.py [--json BENCH_transfer.json]
+      [--skip-fresh] [--tolerance 20]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_JSON = REPO / "BENCH_transfer.json"
+
+# sections a full benchmarks/run.py writes, with their must-have keys
+REQUIRED = {
+    None: ["rows", "seed_pack_best", "staged_ring_best",
+           "tx_us_per_byte_ratio_seed_over_ring",
+           "frames_per_s_ratio_ring_over_seed"],
+    "multichannel": ["rows", "single_ring_static", "multi_channel_best",
+                     "tx_us_per_byte_ratio_single_ring_over_multi"],
+    "adaptive_drift": ["rows", "recovery_ratio_static_over_online",
+                       "final_plan"],
+    "qos_contention": ["rows", "runtime_arbitrated_token_rx_p99_ms",
+                       "p99_ratio_per_engine_over_runtime",
+                       "p99_ratio_fifo_over_runtime",
+                       "p99_ratio_hol_over_preempt",
+                       "p99_ratio_reserved_lane_over_preempt",
+                       "cap_bulk_share_uncapped", "cap_bulk_share_capped"],
+}
+
+
+def _structural(doc: dict, errors: list[str]) -> None:
+    for section, keys in REQUIRED.items():
+        sub = doc if section is None else doc.get(section)
+        where = section or "streaming_layers (top level)"
+        if not isinstance(sub, dict):
+            errors.append(f"missing section: {where}")
+            continue
+        for key in keys:
+            if key not in sub:
+                errors.append(f"missing key: {where}.{key}")
+    # improvement ratios must not be INVERTED past noise: a committed file
+    # claiming the optimized path is >= 2x WORSE than its baseline means a
+    # regression was committed, whatever produced it.
+    ratio_floors = [
+        ("tx_us_per_byte_ratio_seed_over_ring",
+         doc.get("tx_us_per_byte_ratio_seed_over_ring"), 0.5),
+        ("qos_contention.p99_ratio_per_engine_over_runtime",
+         doc.get("qos_contention", {}).get(
+             "p99_ratio_per_engine_over_runtime"), 0.5),
+        ("qos_contention.p99_ratio_hol_over_preempt",
+         doc.get("qos_contention", {}).get("p99_ratio_hol_over_preempt"),
+         0.5),
+    ]
+    for name, val, floor in ratio_floors:
+        if isinstance(val, (int, float)) and val < floor:
+            errors.append(
+                f"{name} = {val} < {floor}: the optimized path regressed "
+                f"past its baseline in the committed file")
+    # a 50% BULK cap that does not reduce the BULK share at all means cap
+    # enforcement rotted into a no-op
+    qc = doc.get("qos_contention", {})
+    off, on = qc.get("cap_bulk_share_uncapped"), qc.get(
+        "cap_bulk_share_capped")
+    if (isinstance(off, (int, float)) and isinstance(on, (int, float))
+            and on >= off):
+        errors.append(
+            f"cap sweep: capped BULK share {on} >= uncapped {off} — the "
+            f"class cap is not shifting bytes")
+
+
+def _fresh_tx_probe(doc: dict, tol: float, errors: list[str]) -> None:
+    """Staged-ring TX microbench vs the committed staged-ring us/byte."""
+    import numpy as np
+    from repro.core.transfer import TransferEngine, TransferPolicy
+
+    committed = doc.get("staged_ring_best", {}).get("tx_us_per_byte")
+    if not isinstance(committed, (int, float)):
+        return  # structural check already flagged it
+    eng = TransferEngine(TransferPolicy.kernel_level_ring(4,
+                                                          block_bytes=1 << 20))
+    x = np.zeros(8 << 20, np.uint8)
+    eng.tx_async(x).wait()  # warm the device path (first put pays ~ms)
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        eng.tx_async(x).wait()
+        best = min(best, time.perf_counter() - t0)
+    eng.close()
+    fresh = best * 1e6 / x.nbytes
+    if fresh > committed * tol:
+        errors.append(
+            f"staged-ring TX regressed: fresh {fresh:.6f} us/B vs "
+            f"committed {committed:.6f} (tolerance {tol}x)")
+    print(f"fresh tx probe: {fresh:.6f} us/B "
+          f"(committed {committed:.6f}, tol {tol}x)")
+
+
+def _fresh_qos_probe(doc: dict, tol: float, errors: list[str]) -> None:
+    """Quick qos_contention vs committed arbitrated p99 + preemption
+    liveness."""
+    sys.path.insert(0, str(REPO))
+    from benchmarks import qos_contention
+
+    committed = doc.get("qos_contention", {}).get(
+        "runtime_arbitrated_token_rx_p99_ms")
+    rows = qos_contention.run(quick=True)
+    arb = next(r for r in rows if r["variant"] == "runtime-arbitrated")
+    pre = next(r for r in rows if r["variant"] == "preempt-1w")
+    if isinstance(committed, (int, float)) and (
+            arb["token_rx_p99_ms"] > committed * tol):
+        errors.append(
+            f"token-RX p99 regressed: fresh {arb['token_rx_p99_ms']} ms vs "
+            f"committed {committed} ms (tolerance {tol}x)")
+    if pre["flood_preemptions"] == 0:
+        errors.append(
+            "preempt-1w ran with zero preemptions — preemptive chunked "
+            "dispatch is not yielding (policy or runtime wiring rotted)")
+    cap_on = next(r for r in rows if r["variant"] == "cap-50pct")
+    cap_off = next(r for r in rows if r["variant"] == "cap-off")
+    if cap_on["bulk_share"] >= cap_off["bulk_share"]:
+        errors.append(
+            f"fresh cap sweep: capped BULK share {cap_on['bulk_share']} >= "
+            f"uncapped {cap_off['bulk_share']} — cap not enforced")
+    print(f"fresh qos probe: arbitrated p99 {arb['token_rx_p99_ms']} ms "
+          f"(committed {committed}), preemptions {pre['flood_preemptions']}, "
+          f"bulk share {cap_off['bulk_share']} -> {cap_on['bulk_share']}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=str(DEFAULT_JSON))
+    ap.add_argument("--skip-fresh", action="store_true",
+                    help="structural checks only (no live measurements)")
+    ap.add_argument("--tolerance", type=float, default=20.0,
+                    help="allowed fresh/committed factor before failing "
+                         "(order-of-magnitude gate on a noisy host)")
+    args = ap.parse_args()
+
+    path = pathlib.Path(args.json)
+    errors: list[str] = []
+    if not path.exists():
+        print(f"FAIL: {path} does not exist", file=sys.stderr)
+        return 1
+    try:
+        doc = json.loads(path.read_text())
+    except ValueError as e:
+        print(f"FAIL: {path} is not valid JSON: {e}", file=sys.stderr)
+        return 1
+
+    _structural(doc, errors)
+    if not args.skip_fresh and not errors:
+        _fresh_tx_probe(doc, args.tolerance, errors)
+        _fresh_qos_probe(doc, args.tolerance, errors)
+
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    print(f"check_bench OK ({path.name})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

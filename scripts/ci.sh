@@ -1,30 +1,67 @@
 #!/usr/bin/env bash
 # Tier-1 verification + transfer-bench smoke runs, so the benchmarks can't
-# silently rot. Two pytest lanes: the fast lane excludes @pytest.mark.stress
-# (quick signal on every change), the full lane then runs the stress suite
-# so the concurrency invariants still gate CI. Run from the repo root:
-#   bash scripts/ci.sh
+# silently rot. One entrypoint for local runs AND .github/workflows/ci.yml:
+#
+#   bash scripts/ci.sh                  # everything (fast + stress + smoke)
+#   bash scripts/ci.sh --lane fast      # pytest -m "not stress"
+#   bash scripts/ci.sh --lane stress    # pytest -m "stress" (concurrency)
+#   bash scripts/ci.sh --lane smoke     # --quick benchmark smokes + the
+#                                       # check_bench.py regression gate
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+lane="all"
+while [[ $# -gt 0 ]]; do
+  case "$1" in
+    --lane)
+      lane="${2:?--lane needs fast|stress|smoke}"
+      shift 2
+      ;;
+    *)
+      echo "unknown argument: $1 (usage: ci.sh [--lane fast|stress|smoke])" >&2
+      exit 2
+      ;;
+  esac
+done
+
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 fast lane: pytest -m 'not stress' =="
-python -m pytest -x -q -m "not stress"
+run_fast() {
+  echo "== tier-1 fast lane: pytest -m 'not stress' =="
+  python -m pytest -x -q -m "not stress"
+}
 
-echo "== full lane: stress suite (incl. 4-class runtime hammer) =="
-python -m pytest -x -q -m "stress"
+run_stress() {
+  echo "== stress lane: pytest -m 'stress' (incl. 4-class runtime hammer) =="
+  python -m pytest -x -q -m "stress"
+}
 
-echo "== smoke: transfer_sweep --quick =="
-python benchmarks/transfer_sweep.py --quick --iters 2
+run_smoke() {
+  echo "== smoke: transfer_sweep --quick =="
+  python benchmarks/transfer_sweep.py --quick --iters 2
 
-echo "== smoke: multichannel_sweep --quick =="
-python benchmarks/multichannel_sweep.py --quick
+  echo "== smoke: multichannel_sweep --quick =="
+  python benchmarks/multichannel_sweep.py --quick
 
-echo "== smoke: adaptive_drift --quick =="
-python benchmarks/adaptive_drift.py --quick
+  echo "== smoke: adaptive_drift --quick =="
+  python benchmarks/adaptive_drift.py --quick
 
-echo "== smoke: qos_contention --quick =="
-python benchmarks/qos_contention.py --quick
+  # no standalone qos_contention smoke: check_bench's fresh probe runs the
+  # quick qos benchmark itself and gates on its numbers — running it twice
+  # would just double the most expensive smoke on a 2-core host.
+  echo "== gate: check_bench.py (committed BENCH_transfer.json vs fresh qos/tx probes) =="
+  python scripts/check_bench.py
+}
 
-echo "CI OK"
+case "$lane" in
+  fast)   run_fast ;;
+  stress) run_stress ;;
+  smoke)  run_smoke ;;
+  all)    run_fast; run_stress; run_smoke ;;
+  *)
+    echo "unknown lane: $lane (want fast|stress|smoke)" >&2
+    exit 2
+    ;;
+esac
+
+echo "CI OK (lane: $lane)"

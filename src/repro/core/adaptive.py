@@ -108,6 +108,13 @@ class AdaptiveConfig:
     max_channels: int = 4
     completion_workers: int = 2   # per-engine workers in replanned policies
     probe_sizes: tuple = (16 << 10, 128 << 10)  # degenerate-window probes
+    # preemptive chunked dispatch: target per-segment service time for the
+    # fitted TransferPolicy.preempt_chunk_bytes on every plan (adaptive
+    # consumers share the runtime with latency traffic, so mid-chunk yield
+    # points are worth their per-dispatch cost here). None disables —
+    # plan_channels keeps preemption OFF by default for streaming-only
+    # groups. Conservative 1 ms: the fitted overhead floor wins below it.
+    preempt_target_s: float | None = 1e-3
 
 
 class RollingFit:
@@ -254,7 +261,8 @@ class OnlineTransferController:
             model = calibrate_transfer(device)
         self.plan: ChannelPlan = plan_channels(
             payload_bytes, model=model, max_channels=self.cfg.max_channels,
-            completion_workers=self.cfg.completion_workers)
+            completion_workers=self.cfg.completion_workers,
+            preempt_target_s=self.cfg.preempt_target_s)
         # drift references: the per-direction fits the current plan was
         # adopted under. RX gets its own reference — serving decode is
         # RX-dominated, and TX-only drift detection would never see an
@@ -274,6 +282,13 @@ class OnlineTransferController:
         # stream — the interrupt driver's measured queue-wait, folded into
         # the crossover decision (see choose_management).
         self._dispatch_t0_s = 0.0
+        # enforced bytes/s ceiling on this stream's priority class (the
+        # runtime's set_class_cap): plans are sized against the EFFECTIVE
+        # (post-cap) bandwidth — a capped stream must not chase block/
+        # channel choices tuned for throughput it is not allowed to have.
+        # Drift detection still runs on the RAW fits (the link itself did
+        # not change when an operator set a cap).
+        self._bw_cap_Bps: float | None = None
         self.refits = 0
         self.replans = 0
         self.suppressed = 0  # hysteresis said "noise, keep the plan"
@@ -336,6 +351,14 @@ class OnlineTransferController:
         with self._lock:
             self._dispatch_t0_s = ((1 - alpha) * self._dispatch_t0_s
                                    + alpha * float(seconds))
+
+    def set_bandwidth_cap(self, bytes_per_s: float | None) -> None:
+        """Tell the planner this stream's class is capped at ``bytes_per_s``
+        (None clears). Subsequent :meth:`propose` calls size plans against
+        min(fitted BW, cap)."""
+        with self._lock:
+            self._bw_cap_Bps = (float(bytes_per_s)
+                                if bytes_per_s and bytes_per_s > 0 else None)
 
     # -- fitted state -------------------------------------------------------
     def models(self) -> dict[tuple[str, str], TransferCostModel]:
@@ -410,9 +433,18 @@ class OnlineTransferController:
                 m_plan = m_tx if rx_m is None else TransferCostModel(
                     t0_s=max(m_tx.t0_s, rx_m.t0_s),
                     bw_Bps=min(m_tx.bw_Bps, rx_m.bw_Bps))
+                if (self._bw_cap_Bps is not None
+                        and m_plan.bw_Bps > self._bw_cap_Bps):
+                    # effective (post-cap) bandwidth: the runtime's token
+                    # bucket is the binding constraint, not the link fit —
+                    # blocks/channels sized past the ceiling would just
+                    # queue behind the bucket.
+                    m_plan = TransferCostModel(t0_s=m_plan.t0_s,
+                                               bw_Bps=self._bw_cap_Bps)
                 plan = plan_channels(
                     payload, model=m_plan, max_channels=self.cfg.max_channels,
-                    completion_workers=self.cfg.completion_workers)
+                    completion_workers=self.cfg.completion_workers,
+                    preempt_target_s=self.cfg.preempt_target_s)
             # adoption (either outcome below) re-baselines drift detection
             # on the fits that produced this decision.
             self._tx_ref = tx_fits.get(plan.policy.management.value, m)
@@ -499,6 +531,7 @@ def _plan_to_state(plan: ChannelPlan) -> dict:
             "block_bytes": p.block_bytes,
             "ring_depth": p.ring_depth,
             "completion_workers": p.completion_workers,
+            "preempt_chunk_bytes": p.preempt_chunk_bytes,
         },
     }
 
@@ -512,6 +545,9 @@ def _plan_from_state(state: dict) -> ChannelPlan:
         block_bytes=int(ps["block_bytes"]),
         ring_depth=int(ps["ring_depth"]),
         completion_workers=int(ps["completion_workers"]),
+        # absent in pre-cap/preemption state files: those plans ran with
+        # whole-chunk dispatch, keep that on warm start.
+        preempt_chunk_bytes=int(ps.get("preempt_chunk_bytes", 0)),
     )
     return ChannelPlan(n_channels=int(state["n_channels"]), policy=policy,
                        model=TransferCostModel(**state["model"]),
@@ -693,18 +729,33 @@ class AdaptiveChannelGroup:
         return getattr(self._group, "runtime", None)
 
     def _ingest_dispatch_latency(self) -> None:
-        """Feed the runtime's per-class dispatch latency (the queue wait
-        this stream's completions pay under the current traffic mix) into
-        the controller's crossover decision — real serving traces, not an
-        assumed-zero arbitration cost. No recent samples means the
-        contention is over: decay toward zero instead of holding the
-        burst-era value forever (a stale inflated t0 would pin the plan
-        at POLLING long after the queue emptied)."""
+        """Feed the runtime's per-class signals into the controller: the
+        dispatch latency (the queue wait this stream's completions pay
+        under the current traffic mix) shifts the polling/interrupt
+        crossover — real serving traces, not an assumed-zero arbitration
+        cost; the enforced class cap bounds the bandwidth plans are sized
+        for. No recent latency samples means the contention is over:
+        decay toward zero instead of holding the burst-era value forever
+        (a stale inflated t0 would pin the plan at POLLING long after
+        the queue emptied)."""
         rt = self.runtime
         if rt is None:
             return
         lat = rt.recent_dispatch_latency(self.priority)
         self.controller.note_dispatch_latency(lat if lat is not None else 0.0)
+        self.controller.set_bandwidth_cap(rt.class_cap(self.priority))
+
+    def set_class_cap(self, cls: "PriorityClass",
+                      bytes_per_s: float | None) -> None:
+        """Cap one class on the shared runtime. A cap on THIS stream's own
+        class also informs the online planner immediately (plans size for
+        the effective, post-cap bandwidth)."""
+        rt = self.runtime
+        if rt is None:
+            raise RuntimeError("AdaptiveChannelGroup has no runtime to cap")
+        rt.set_class_cap(cls, bytes_per_s)
+        if cls is self.priority:
+            self.controller.set_bandwidth_cap(bytes_per_s)
 
     def maybe_adapt(self, *, force: bool = False) -> bool:
         """Refit from the live samples and swap plans if drift warrants it.

@@ -166,6 +166,7 @@ class ChannelPlan:
             "block_bytes": self.policy.block_bytes,
             "ring_depth": self.policy.depth,
             "partitioning": self.policy.partitioning.value,
+            "preempt_chunk_bytes": self.policy.preempt_chunk_bytes,
             "fit_t0_us": round(self.model.t0_s * 1e6, 3),
             "fit_gbps": round(self.model.bw_Bps / 1e9, 3),
             "payload_bytes": self.payload_bytes,
@@ -177,7 +178,8 @@ def plan_channels(payload_bytes: int, *,
                   device: jax.Device | None = None,
                   max_channels: int = 4,
                   min_stripe_bytes: int = _MIN_STRIPE_BYTES,
-                  completion_workers: int = 2) -> ChannelPlan:
+                  completion_workers: int = 2,
+                  preempt_target_s: float | None = None) -> ChannelPlan:
     """Pick channel count / ring depth / block size from the fitted model.
 
     - channel count: stripe as wide as ``max_channels`` allows while (a)
@@ -192,7 +194,14 @@ def plan_channels(payload_bytes: int, *,
       double-buffer every worker, few enough to amortize per-chunk setup;
     - ring depth: enough slots to cover the stripe's chunk count, clamped
       to [2, 8] (depth 1 forfeits overlap; past ~8 slots buy nothing but
-      staging memory).
+      staging memory);
+    - preemptive chunking: with ``preempt_target_s`` set, chunks carry a
+      fitted segment size so the shared runtime can yield mid-chunk to
+      latency traffic within roughly that service bound. Default OFF:
+      every extra segment pays a real per-dispatch cost, which a
+      streaming-only workload (no latency classes sharing the runtime)
+      would pay for nothing — mixed-traffic consumers (AdaptiveConfig /
+      serving) opt in.
     """
     if model is None:
         model = calibrate_transfer(device)
@@ -209,17 +218,24 @@ def plan_channels(payload_bytes: int, *,
     block = max(model.optimal_block_bytes(stripe),
                 math.ceil(stripe / target_chunks))
     n_chunks = math.ceil(stripe / block)
+    # preemptive chunked dispatch: size the runtime's mid-chunk yield
+    # granularity from the same fit (bounded per-segment service time),
+    # so a TOKEN arrival never waits out a whole block_bytes memcpy.
+    preempt = (model.preempt_chunk_bytes(preempt_target_s)
+               if preempt_target_s else 0)
     if n_chunks <= 1:
         policy = TransferPolicy(Management.INTERRUPT, Buffering.RING,
                                 Partitioning.UNIQUE, block_bytes=block,
                                 ring_depth=2,
-                                completion_workers=completion_workers)
+                                completion_workers=completion_workers,
+                                preempt_chunk_bytes=preempt)
     else:
         depth = max(2, min(8, n_chunks))
         policy = TransferPolicy(Management.INTERRUPT, Buffering.RING,
                                 Partitioning.BLOCKS, block_bytes=block,
                                 ring_depth=depth,
-                                completion_workers=completion_workers)
+                                completion_workers=completion_workers,
+                                preempt_chunk_bytes=preempt)
     return ChannelPlan(n_channels=n, policy=policy, model=model,
                        payload_bytes=payload_bytes)
 
@@ -341,6 +357,16 @@ class ChannelGroup:
         """Safe-point adaptation hook (no-op: a plain group's plan is
         fixed at construction; AdaptiveChannelGroup implements it)."""
         return False
+
+    def set_class_cap(self, cls: PriorityClass,
+                      bytes_per_s: float | None) -> None:
+        """Per-class bandwidth cap on the SHARED runtime every member ring
+        dispatches on (one cap covers all stripes — striping multiplies
+        channels, never bandwidth budgets)."""
+        rt = self.runtime
+        if rt is None:
+            raise RuntimeError("ChannelGroup has no runtime to cap")
+        rt.set_class_cap(cls, bytes_per_s)
 
     # -- bookkeeping ---------------------------------------------------------
     @property

@@ -71,6 +71,22 @@ class TransferCostModel:
         # clamp to [4KiB, nbytes]
         return max(4096, min(max(c, 4096), max(nbytes, 4096)))
 
+    def preempt_chunk_bytes(self, target_service_s: float = 500e-6) -> int:
+        """Segment size for preemptive chunked dispatch.
+
+        A parked latency descriptor waits at most one in-service segment,
+        so the segment should move for ~``target_service_s`` on the fitted
+        link (``BW * target``). But splitting below ~4 fixed overheads per
+        segment burns throughput for latency we cannot realize, so the
+        overhead floor ``4 * t0 * BW`` wins when the fit says segments that
+        small are not free. Rounded up to a power of two so refitted plans
+        with near-identical fits compare equal (no swap flapping on
+        noise)."""
+        by_latency = int(self.bw_Bps * target_service_s)
+        floor = int(4.0 * self.t0_s * self.bw_Bps)
+        raw = max(4096, floor, by_latency)
+        return 1 << int(raw - 1).bit_length()
+
     # ---- fitting ----------------------------------------------------------
     @staticmethod
     def fit(nbytes: np.ndarray, seconds: np.ndarray) -> "TransferCostModel":

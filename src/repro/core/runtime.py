@@ -64,10 +64,51 @@ Arbitration is three-level, and starvation-free by construction:
    share. A class that went idle re-enters at the busy classes' floor so
    it cannot burst on accumulated lag.
 
+Preemptive chunked dispatch
+---------------------------
+Dispatch of a single descriptor body is non-preemptive — a worker
+mid-memcpy cannot be interrupted. The *chunked-dispatch contract* bounds
+how long that matters: a submitter may hand the runtime a
+:class:`PreemptibleWork` instead of a plain callable — a sequence of
+short *segments* (sub-slices of the chunk's memcpy, sized by the fitted
+cost model for a bounded per-segment service time) plus a ``collect``
+fold and a ``finalize`` hook. The worker runs segments back to back; the
+moment a latency-class (TOKEN/SENSOR) descriptor is queued while every
+worker is busy, it *parks* the work between two segments — the
+descriptor re-enters the FRONT of its class queue (with a renewed
+deadline, so EDF does not immediately un-park it past the waiting
+token), the worker dispatches the latency descriptor, and the parked
+work resumes where its iterator left off. Guarantees of the contract:
+
+- segments of one descriptor never run concurrently (the work is either
+  in service on exactly one worker or queued);
+- ``finalize(err)`` runs exactly once when the work completes or errors
+  in service; a descriptor cancelled while queued/parked gets
+  ``on_cancel`` instead (never both) — ring-slot release hooks stay
+  single-shot;
+- a parked descriptor runs at least one segment between parks, so
+  continuous latency traffic slows bulk work but cannot starve it;
+- preemption counts and parked-time percentiles land in
+  :meth:`TransferRuntime.class_summary` (``preemptions``,
+  ``preempt_park_p99_ms``).
+
+Per-class bandwidth caps
+------------------------
+:meth:`TransferRuntime.set_class_cap` enforces a bytes-per-second
+ceiling per priority class via token-bucket accounting inside the fair
+queue: a capped class whose bucket is empty is simply not eligible for
+dispatch (its head *defers*, counted in ``cap_deferrals``), so uncapped
+classes borrow the freed dispatch headroom automatically. Deadline
+promotion does NOT override a cap — the ceiling is hard, which is the
+point of the ZynqNet-style per-class accounting. Workers park on a
+timed wait sized to the earliest bucket refill, so a cap never strands
+queued work.
+
 NEURAghe (Meloni et al., 2017) shows the same lesson at system scale — a
 single runtime arbitrating PS/PL work is what makes heterogeneous CNN
 inference compose; ZynqNet (Gschwend, 2016) motivates the per-class
-bandwidth accounting (:meth:`TransferRuntime.class_summary`).
+bandwidth accounting and enforcement (:meth:`TransferRuntime.
+class_summary`, :meth:`TransferRuntime.set_class_cap`).
 """
 
 from __future__ import annotations
@@ -129,6 +170,9 @@ DEFAULT_QOS: dict[PriorityClass, QosSpec] = {
 # latency-critical descriptors that must never sit behind an in-service
 # bulk chunk on every worker at once.
 _LATENCY_CLASSES = (PriorityClass.TOKEN, PriorityClass.SENSOR)
+# Classes whose descriptors may be submitted as PreemptibleWork (throughput
+# traffic that yields to the latency classes mid-chunk).
+PREEMPTIBLE_CLASSES = (PriorityClass.LAYER, PriorityClass.BULK)
 # The reserved lane stays active this long past the last latency-class
 # event (a TOKEN/SENSOR registration or submission). Recency-gated on
 # purpose: a serving engine that merely EXISTS but has been idle must not
@@ -156,9 +200,18 @@ class ClassStats:
     cancelled: int = 0
     bytes_total: int = 0
     deadline_promotions: int = 0
+    # preemptive chunked dispatch: how often this class's in-service work
+    # parked for a latency arrival, and how long the parked work waited
+    # before resuming (windowed).
+    preemptions: int = 0
+    # scheduler passes where this class had queued work but its token
+    # bucket was empty (deferred by its bandwidth cap).
+    cap_deferrals: int = 0
     dispatch_lat_s: "collections.deque[float]" = field(
         default_factory=lambda: collections.deque(maxlen=_LAT_WINDOW))
     service_lat_s: "collections.deque[float]" = field(
+        default_factory=lambda: collections.deque(maxlen=_LAT_WINDOW))
+    preempt_park_s: "collections.deque[float]" = field(
         default_factory=lambda: collections.deque(maxlen=_LAT_WINDOW))
     # (monotonic stamp, latency) pairs for TIME-bounded consumers (the
     # adaptive crossover); the bare deques above stay count-bounded for
@@ -173,18 +226,109 @@ class ClassStats:
             "cancelled": self.cancelled,
             "bytes_total": self.bytes_total,
             "deadline_promotions": self.deadline_promotions,
+            "preemptions": self.preemptions,
+            "cap_deferrals": self.cap_deferrals,
             "dispatch_p50_ms": _pct(self.dispatch_lat_s, 0.5) * 1e3,
             "dispatch_p99_ms": _pct(self.dispatch_lat_s, 0.99) * 1e3,
             "service_p50_ms": _pct(self.service_lat_s, 0.5) * 1e3,
             "service_p99_ms": _pct(self.service_lat_s, 0.99) * 1e3,
+            "preempt_park_p50_ms": _pct(self.preempt_park_s, 0.5) * 1e3,
+            "preempt_park_p99_ms": _pct(self.preempt_park_s, 0.99) * 1e3,
         }
+
+
+class PreemptibleWork:
+    """Resumable descriptor body — the unit of preemptive chunked dispatch.
+
+    ``segments`` is a finite iterable of thunks; the runtime runs them in
+    order on ONE worker at a time and may park the descriptor between two
+    segments when a latency-class descriptor is waiting (see the module
+    docstring's chunked-dispatch contract). ``collect(parts)`` folds the
+    per-segment results into the descriptor result (default: the raw
+    ``parts`` list). ``finalize(err_or_none)`` runs exactly once, outside
+    the runtime lock, after the work completes or errors *in service* —
+    engines release ring slots and fire master-ticket protocols there. A
+    descriptor cancelled while queued/parked gets the submitter's
+    ``on_cancel`` instead of ``finalize`` (never both)."""
+
+    __slots__ = ("_segments", "_next", "parts", "collect", "finalize",
+                 "segments_run")
+
+    _DONE = object()  # sentinel: no further segment
+
+    def __init__(self, segments, *,
+                 collect: Callable[[list], Any] | None = None,
+                 finalize: Callable[[BaseException | None], None] | None = None):
+        self._segments = iter(segments)
+        # one segment of lookahead, so ``exhausted`` is knowable right
+        # after the last real segment ran — finished work must not take a
+        # pointless park/requeue round-trip (and inflate the preemption
+        # ledger) for a yield point with nothing left to yield.
+        self._next = next(self._segments, self._DONE)
+        self.parts: list = []
+        self.collect = collect
+        self.finalize = finalize
+        self.segments_run = 0
+
+    @property
+    def exhausted(self) -> bool:
+        return self._next is self._DONE
+
+    def step(self) -> bool:
+        """Run the next segment on the caller; True when none remain."""
+        if self._next is self._DONE:
+            return True
+        seg = self._next
+        self.parts.append(seg())
+        self.segments_run += 1
+        self._next = next(self._segments, self._DONE)
+        return False
+
+    def result(self) -> Any:
+        return self.collect(self.parts) if self.collect else self.parts
+
+
+class _TokenBucket:
+    """Per-class bandwidth-cap accounting (lazily refilled under the
+    runtime lock). A dispatch is allowed while the bucket is non-negative
+    and *charges* the full descriptor size — one oversized descriptor may
+    overshoot its burst, then the class defers until the deficit refills
+    (standard token-bucket semantics; big descriptors are never starved
+    by a burst smaller than themselves)."""
+
+    __slots__ = ("rate", "burst", "tokens", "stamp")
+
+    def __init__(self, rate_Bps: float, burst_s: float):
+        self.rate = float(rate_Bps)
+        self.burst = max(self.rate * burst_s, 1.0)
+        self.tokens = self.burst
+        self.stamp = time.monotonic()
+
+    def _refill(self, now: float) -> None:
+        self.tokens = min(self.burst, self.tokens + (now - self.stamp) * self.rate)
+        self.stamp = now
+
+    def ready(self, now: float) -> bool:
+        self._refill(now)
+        return self.tokens > 0.0
+
+    def charge(self, nbytes: int) -> None:
+        self.tokens -= nbytes
+
+    def delay_s(self, now: float) -> float:
+        """Seconds until the bucket turns non-negative again."""
+        self._refill(now)
+        if self.tokens > 0.0:
+            return 0.0
+        return -self.tokens / self.rate
 
 
 class _Descriptor:
     """One staged completion: the unit the runtime arbitrates."""
 
     __slots__ = ("fn", "done", "out", "cls", "nbytes", "handle",
-                 "t_submit", "deadline", "on_cancel")
+                 "t_submit", "deadline", "on_cancel",
+                 "started", "service_acc", "t_parked", "preemptions")
 
     def __init__(self, fn: Callable[[], Any], cls: PriorityClass,
                  nbytes: int, handle: "RuntimeHandle", deadline_s: float,
@@ -202,6 +346,12 @@ class _Descriptor:
         # slot release, master-ticket error propagation) must run even when
         # ``fn`` never will — a cancelled chunk must not hang its caller.
         self.on_cancel = on_cancel
+        # preemptive-chunking state: first-dispatch stats/cap-charges fire
+        # once; service time accumulates across park/resume stints.
+        self.started = False
+        self.service_acc = 0.0
+        self.t_parked: float | None = None
+        self.preemptions = 0
 
 
 class RuntimeHandle:
@@ -259,10 +409,12 @@ class TransferRuntime:
     def __init__(self, workers: int | None = None, *,
                  qos: dict[PriorityClass, QosSpec] | None = None,
                  fair: bool = True,
+                 preempt: bool = True,
                  reserve_latency_workers: int = 1,
                  latency_recency_s: float = _LATENCY_RECENCY_S,
                  idle_timeout_s: float = _IDLE_TIMEOUT_S,
-                 background_budget_s: float = 50e-6):
+                 background_budget_s: float = 50e-6,
+                 cap_burst_s: float = 0.05):
         if workers is None:
             workers = max(2, min(_MAX_WORKERS, os.cpu_count() or 2))
         self.workers = max(1, int(workers))
@@ -272,8 +424,19 @@ class TransferRuntime:
         if qos:
             self.qos.update(qos)
         self.fair = fair
+        # honor PreemptibleWork yield points (park bulk work for latency
+        # arrivals). Off => segments still run correctly, just back to back
+        # — the PR-4 one-chunk-bound baseline, kept for the QoS benchmark.
+        self.preempt = preempt
         self.idle_timeout_s = idle_timeout_s
         self.background_budget_s = background_budget_s
+        # per-class bandwidth caps (token buckets), set_class_cap-managed.
+        self.cap_burst_s = float(cap_burst_s)
+        self._caps: dict[PriorityClass, _TokenBucket] = {}
+        # earliest bucket-refill delay observed by the last _pick_locked
+        # pass that found only cap-deferred work (None = no cap deferral):
+        # workers size their wait on it so capped work is never stranded.
+        self._cap_wait_hint: float | None = None
         self._cond = threading.Condition()
         self._queues: dict[PriorityClass, "collections.deque[_Descriptor]"] \
             = {cls: collections.deque() for cls in PriorityClass}
@@ -335,6 +498,31 @@ class TransferRuntime:
     def n_registered(self) -> int:
         with self._cond:
             return len(self._handles)
+
+    # -- per-class bandwidth caps ---------------------------------------------
+    def set_class_cap(self, cls: PriorityClass,
+                      bytes_per_s: float | None) -> None:
+        """Enforce a bytes/s ceiling on one priority class (the ZynqNet
+        per-layer bandwidth budget, as a hard limit instead of a ledger
+        entry). ``None`` or ``<= 0`` clears the cap. A capped class whose
+        token bucket is empty defers dispatch — even past its deadline —
+        and uncapped classes borrow the freed headroom. Takes effect on
+        the next dispatch decision; only enforced under ``fair=True``
+        (the FIFO baseline models a runtime with no QoS at all)."""
+        with self._cond:
+            if bytes_per_s is None or bytes_per_s <= 0:
+                self._caps.pop(cls, None)
+            else:
+                self._caps[cls] = _TokenBucket(bytes_per_s, self.cap_burst_s)
+            self._cond.notify_all()
+
+    def class_cap(self, cls: PriorityClass) -> float | None:
+        """The enforced bytes/s ceiling for ``cls`` (None = uncapped) —
+        consumers (the online transfer controller) plan against this
+        effective bandwidth instead of chasing the raw link fit."""
+        with self._cond:
+            b = self._caps.get(cls)
+            return b.rate if b is not None else None
 
     def register_background(self, fn: Callable[[], None]) -> Callable[[], None]:
         """Register a recurring SENSOR-style background task: workers give
@@ -404,6 +592,7 @@ class TransferRuntime:
     def _pick_locked(self) -> _Descriptor | None:
         """Choose the next descriptor. Caller holds ``_cond``."""
         now = time.monotonic()
+        self._cap_wait_hint = None
         if not self.fair:
             # FIFO baseline: oldest submit across every class.
             best = None
@@ -414,6 +603,26 @@ class TransferRuntime:
                 return None
             d = best.popleft()
         else:
+            # 0) bandwidth caps: a class with queued work but an empty
+            # token bucket is not eligible at ANY level below (EDF must
+            # not override a cap — the ceiling is hard). Record the
+            # earliest refill so a worker finding only capped work parks
+            # on a timed wait instead of idle-exiting.
+            capped: set[PriorityClass] = set()
+            for cls, bucket in self._caps.items():
+                q = self._queues[cls]
+                # a PARKED resume at the head is exempt: its bytes were
+                # charged at first dispatch (charge-once), it holds a ring
+                # slot and mid-chunk iterator state — re-gating it on the
+                # deficit it itself created would stall an in-service
+                # descriptor for the whole refill.
+                if q and not q[0].started and not bucket.ready(now):
+                    capped.add(cls)
+                    self.stats[cls].cap_deferrals += 1
+                    wait = bucket.delay_s(now)
+                    if (self._cap_wait_hint is None
+                            or wait < self._cap_wait_hint):
+                        self._cap_wait_hint = wait
             # 1) reserved latency lane: dispatch is non-preemptive, so while
             # a TOKEN/SENSOR source exists, the last worker slot(s) refuse
             # LAYER/BULK — a token must never find every worker mid-bulk-
@@ -431,6 +640,8 @@ class TransferRuntime:
                             and self._executing >= self.workers - reserve)
 
             def eligible(cls: PriorityClass) -> bool:
+                if cls in capped:
+                    return False
                 return not latency_only or cls in _LATENCY_CLASSES
 
             # 2) deadline promotion: EDF over overdue heads. Absolute
@@ -452,13 +663,26 @@ class TransferRuntime:
                     return None
                 cls = min(busy, key=lambda c: self._vtime[c])
                 d = self._queues[cls].popleft()
-            self._vtime[d.cls] += (
-                max(d.nbytes, 1024) / self.qos[d.cls].weight)
         st = self.stats[d.cls]
-        st.dispatched += 1
-        st.dispatch_lat_s.append(now - d.t_submit)
-        st.dispatch_recent.append((now, now - d.t_submit))
-        self.dispatches += 1
+        if not d.started:
+            # first dispatch: charge fair-queue virtual time and the cap
+            # bucket ONCE for the whole descriptor (a parked resume is not
+            # a new arrival) and stamp the queue-wait latency.
+            d.started = True
+            if self.fair:
+                self._vtime[d.cls] += (
+                    max(d.nbytes, 1024) / self.qos[d.cls].weight)
+                bucket = self._caps.get(d.cls)
+                if bucket is not None:
+                    bucket.charge(d.nbytes)
+            st.dispatched += 1
+            st.dispatch_lat_s.append(now - d.t_submit)
+            st.dispatch_recent.append((now, now - d.t_submit))
+            self.dispatches += 1
+        elif d.t_parked is not None:
+            # resuming preempted work: record how long it sat parked.
+            st.preempt_park_s.append(now - d.t_parked)
+            d.t_parked = None
         self._executing += 1
         return d
 
@@ -479,6 +703,7 @@ class TransferRuntime:
         me = threading.get_ident()
         while True:
             bg_fn = None
+            stay = False
             with self._cond:
                 d = self._pick_locked()
                 is_spinner = False
@@ -493,37 +718,106 @@ class TransferRuntime:
                         self._bg_spinner = me
                     timeout = (_BG_IDLE_WAIT_S if is_spinner
                                else self.idle_timeout_s)
+                    if self._cap_wait_hint is not None:
+                        # only cap-deferred work is queued: park exactly
+                        # until the earliest bucket refill, then re-pick.
+                        timeout = min(timeout,
+                                      max(self._cap_wait_hint, 1e-4))
                     self._cond.wait(timeout)
                     d = self._pick_locked()
                 if d is None:
-                    if self._closed or not self._background or not is_spinner:
+                    if not self._closed and any(self._queues.values()):
+                        # queued work exists but is deferred (cap bucket
+                        # refilling / reserved lane): this worker must NOT
+                        # idle-exit — with a cap, no completion notify may
+                        # ever come to wake a respawned worker.
+                        stay = True
+                    elif (self._closed or not self._background
+                            or not is_spinner):
                         # provably idle under the lock (submit enqueues
                         # under the same lock): safe to exit.
                         if self._bg_spinner == me:
                             self._bg_spinner = None
                         self._alive -= 1
                         return
-                    bg_fn = self._next_background_locked()
+                    else:
+                        bg_fn = self._next_background_locked()
             if d is not None:
-                self._execute(d)
+                if not self._execute(d):
+                    continue  # parked mid-chunk: it resumes via the queue
                 self._bg_slice_after_dispatch()
             elif bg_fn is not None:
                 self._run_background(bg_fn)
+            elif stay:
+                continue
 
-    def _execute(self, d: _Descriptor) -> None:
+    def _park_locked_check(self, d: _Descriptor, t_stint: float) -> bool:
+        """Between two segments of a PreemptibleWork: park ``d`` iff a
+        latency-class descriptor is waiting and no idle worker can take it.
+        Returns True when parked (the caller must NOT complete the
+        descriptor — it re-dispatches from the front of its class queue)."""
+        if (not self.preempt or not self.fair
+                or d.cls in _LATENCY_CLASSES):
+            return False
+        with self._cond:
+            if self._executing < self._alive:
+                # an idle worker exists; it will take the latency arrival
+                # — parking here would only add a resume round-trip.
+                return False
+            if not any(self._queues[c] for c in _LATENCY_CLASSES):
+                return False
+            d.service_acc += time.perf_counter() - t_stint
+            d.preemptions += 1
+            d.t_parked = time.monotonic()
+            # renewed deadline: EDF must see the park as a fresh arrival,
+            # or the long-overdue bulk head would immediately outrank the
+            # very token it just yielded to. Starvation-free regardless —
+            # parked work runs at least one segment between parks.
+            d.deadline = d.t_parked + self.qos[d.cls].deadline_s
+            self._queues[d.cls].appendleft(d)
+            self.stats[d.cls].preemptions += 1
+            self._executing -= 1
+            self._cond.notify()
+            return True
+
+    def _execute(self, d: _Descriptor) -> bool:
+        """Run a descriptor body (possibly one stint of a PreemptibleWork).
+        Returns False when the work parked mid-chunk (not complete)."""
+        work = d.fn if isinstance(d.fn, PreemptibleWork) else None
+        result: Any = None
+        err: BaseException | None = None
         t0 = time.perf_counter()
-        try:
-            d.out.append(d.fn())
-        except BaseException as e:  # surfaced at Ticket.wait()
-            d.out.append(e)
-        service = time.perf_counter() - t0
+        if work is None:
+            try:
+                result = d.fn()
+            except BaseException as e:  # surfaced at Ticket.wait()
+                err = e
+        else:
+            while True:
+                try:
+                    if work.step():
+                        result = work.result()
+                        break
+                except BaseException as e:  # surfaced at Ticket.wait()
+                    err = e
+                    break
+                if not work.exhausted and self._park_locked_check(d, t0):
+                    return False
+        d.service_acc += time.perf_counter() - t0
+        if work is not None and work.finalize is not None:
+            try:
+                work.finalize(err)
+            except BaseException as e:  # noqa: BLE001
+                if err is None:
+                    err = e
+        d.out.append(err if err is not None else result)
         # ordering is load-bearing, in three steps:
         # 1. completion stats BEFORE the done event — a caller unblocked
         #    by wait() must see its own completion in class_summary();
         with self._cond:
             st = self.stats[d.cls]
             st.completed += 1
-            st.service_lat_s.append(service)
+            st.service_lat_s.append(d.service_acc)
         # 2. the done event — tickets resolve;
         d.done.set()
         # 3. outstanding/executing AFTER done — a close() drain observing
@@ -537,6 +831,7 @@ class TransferRuntime:
                 self._cond.notify()
             if d.handle._closed and d.handle._outstanding <= 0:
                 self._cond.notify_all()
+        return True
 
     # -- background (SENSOR ingest) ------------------------------------------
     def _next_background_locked(self) -> Callable[[], None] | None:
@@ -682,10 +977,18 @@ class TransferRuntime:
     # -- reporting -----------------------------------------------------------
     def class_summary(self) -> dict[str, dict[str, float]]:
         """Per-class bandwidth/latency accounting (the ZynqNet per-class
-        traffic ledger)."""
+        traffic ledger, including cap enforcement + preemption columns)."""
         with self._cond:
-            return {cls.value: st.summary()
-                    for cls, st in self.stats.items() if st.submitted}
+            out = {}
+            for cls, st in self.stats.items():
+                if not st.submitted:
+                    continue
+                row = st.summary()
+                bucket = self._caps.get(cls)
+                row["cap_bytes_per_s"] = (bucket.rate if bucket is not None
+                                          else None)
+                out[cls.value] = row
+            return out
 
     def recent_dispatch_latency(self, cls: PriorityClass, q: float = 0.5,
                                 ttl_s: float = 10.0) -> float | None:

@@ -70,6 +70,8 @@ import jax
 import numpy as np
 
 from repro.core.runtime import (
+    PREEMPTIBLE_CLASSES,
+    PreemptibleWork,
     PriorityClass,
     RuntimeHandle,
     TransferRuntime,
@@ -123,12 +125,24 @@ class TransferPolicy:
     block_bytes: int = 1 << 20  # 1 MiB default chunk (paper crossover region)
     ring_depth: int = 0  # 0 => derived from buffering
     completion_workers: int = 2
+    # preemptive chunked dispatch (INTERRUPT only): LAYER/BULK TX chunks
+    # bigger than this are submitted as resumable segment iterators
+    # (:class:`~repro.core.runtime.PreemptibleWork`) so the shared runtime
+    # can yield mid-chunk to TOKEN/SENSOR arrivals. 0 disables it (whole
+    # chunks stay the non-preemptive unit — the PR-4 behaviour). Sized by
+    # the fitted cost model (:meth:`~repro.core.cost_model.
+    # TransferCostModel.preempt_chunk_bytes`) in adaptive plans.
+    preempt_chunk_bytes: int = 0
 
     def __post_init__(self) -> None:
         if self.ring_depth < 0:
             raise ValueError(f"ring_depth must be >= 0, got {self.ring_depth}")
         if self.completion_workers < 1:
             raise ValueError("completion_workers must be >= 1")
+        if self.preempt_chunk_bytes < 0:
+            raise ValueError(
+                f"preempt_chunk_bytes must be >= 0, got "
+                f"{self.preempt_chunk_bytes}")
 
     @property
     def depth(self) -> int:
@@ -473,6 +487,26 @@ def _split(arr: np.ndarray, policy: TransferPolicy) -> list[np.ndarray]:
     return [flat[i * per_chunk : (i + 1) * per_chunk] for i in range(n)]
 
 
+def _preempt_segments(flat: np.ndarray, seg_bytes: int) -> list[np.ndarray]:
+    """Sub-slice one TX chunk into preemption segments (flat views)."""
+    per = max(1, seg_bytes // max(flat.itemsize, 1))
+    n = math.ceil(flat.size / per)
+    return [flat[i * per: (i + 1) * per] for i in range(n)]
+
+
+def _flatten_chunk_results(results: list) -> list:
+    """Splice preemptible groups' per-segment device arrays back into a
+    flat chunk list (segments are contiguous sub-slices in order, so the
+    flattened list reassembles exactly like the unsplit chunks)."""
+    out: list = []
+    for r in results:
+        if type(r) is list:
+            out.extend(r)
+        else:
+            out.append(r)
+    return out
+
+
 class TransferEngine:
     """Executes host->device (TX) and device->host (RX) transfers under a
     :class:`TransferPolicy`, recording measured :class:`TransferStats`.
@@ -577,6 +611,19 @@ class TransferEngine:
         has no online controller — executors call this unconditionally at
         frame/batch/request boundaries; repro.core.adaptive overrides it."""
         return False
+
+    def set_class_cap(self, cls: PriorityClass,
+                      bytes_per_s: float | None) -> None:
+        """Enforce (or clear, with None) a bytes/s ceiling for ``cls`` on
+        the runtime this engine dispatches on — the engine-surface spelling
+        of :meth:`~repro.core.runtime.TransferRuntime.set_class_cap`
+        (ChannelGroup / AdaptiveChannelGroup duck-type it)."""
+        rt = self.runtime
+        if rt is None:
+            raise RuntimeError(
+                "set_class_cap needs an INTERRUPT-managed engine (polling/"
+                "scheduled engines have no shared runtime to enforce caps)")
+        rt.set_class_cap(cls, bytes_per_s)
 
     def __enter__(self) -> "TransferEngine":
         return self
@@ -685,6 +732,21 @@ class TransferEngine:
         )
         return result
 
+    def _preempt_segments_for(self, payload, direction: str,
+                              cls: PriorityClass) -> list[np.ndarray] | None:
+        """Sub-slices for preemptive chunked dispatch, or None to submit
+        the chunk whole. TX only (an RX payload is one device array — the
+        host cannot sub-slice the device_get), and only for throughput
+        classes: a TOKEN/SENSOR descriptor is the traffic preemption
+        protects, not the traffic it splits."""
+        n = self.policy.preempt_chunk_bytes
+        if n <= 0 or direction != "tx" or cls not in PREEMPTIBLE_CLASSES:
+            return None
+        flat = payload
+        if int(flat.nbytes) <= n:
+            return None
+        return _preempt_segments(flat, n)
+
     # -- chunk executor under the three managements -------------------------
     def _one(self, payload, direction: str, out: np.ndarray | None = None):
         """Move ONE chunk (subclasses override to inject synthetic timing)."""
@@ -761,9 +823,14 @@ class TransferEngine:
         # after chunk k's completion fires (ring reuse rule). Slot release
         # happens on the runtime's completion worker, so acquisition (which
         # may chain on a prior holder) never waits on work that cannot
-        # progress.
+        # progress. LAYER/BULK TX chunks above ``preempt_chunk_bytes`` go in
+        # as resumable segment iterators (one ring slot, many yield points),
+        # so the runtime can park them mid-chunk for TOKEN/SENSOR arrivals;
+        # their per-segment device arrays are spliced back into the chunk
+        # list below (contiguous order — reassembly is unchanged).
         handle = self._runtime_handle()
         depth = self.policy.depth
+        cls = priority or self.priority
         tickets: list[Ticket | None] = [None] * len(items)
         results: list = [None] * len(items)
         inflight: list[int] = []
@@ -773,11 +840,21 @@ class TransferEngine:
                 results[j] = tickets[j].wait()
             idx, release = self._acquire_buffer()
 
-            def work(p=payload, d=direction, o=dst, idx=idx, release=release):
-                try:
-                    return self._one_timed(p, d, o)
-                finally:
-                    self._release_buffer(idx, release)
+            segs = self._preempt_segments_for(payload, direction, cls)
+            if segs is not None:
+                submit_obj: Any = PreemptibleWork(
+                    [(lambda s=s: self._one_timed(s, "tx")) for s in segs],
+                    collect=list,
+                    finalize=lambda err, idx=idx, release=release:
+                        self._release_buffer(idx, release))
+            else:
+                def work(p=payload, d=direction, o=dst, idx=idx,
+                         release=release):
+                    try:
+                        return self._one_timed(p, d, o)
+                    finally:
+                        self._release_buffer(idx, release)
+                submit_obj = work
 
             # on_cancel: a descriptor cancelled while queued (runtime
             # teardown) never runs ``work`` — its ring slot must still be
@@ -786,7 +863,7 @@ class TransferEngine:
             # leaks the same slot; release it before surfacing.
             try:
                 done, out = handle.submit(
-                    work, nbytes=_payload_nbytes(payload, direction),
+                    submit_obj, nbytes=_payload_nbytes(payload, direction),
                     priority=priority,
                     on_cancel=lambda err, idx=idx, release=release:
                         self._release_buffer(idx, release))
@@ -801,7 +878,7 @@ class TransferEngine:
                 self.max_inflight = max(self.max_inflight, len(inflight))
         for j in inflight:
             results[j] = tickets[j].wait()
-        return results
+        return _flatten_chunk_results(results)
 
     # -- async API (INTERRUPT only): returns a ticket, caller is "interrupted"
     def _submit_async(self, payloads: list, direction: str, nbytes: int,
@@ -862,14 +939,18 @@ class TransferEngine:
                 self._record(TransferStats(
                     nbytes, wall, len(payloads), direction,
                     self.policy.tag))
-                ticket_out.append(results)
+                # preemptible chunks landed per-segment lists: splice them
+                # back into one flat, ordered chunk list for the caller.
+                flat_results = _flatten_chunk_results(results)
+                ticket_out.append(flat_results)
                 if callback is not None:
                     try:
-                        callback(results)
+                        callback(flat_results)
                     except BaseException as e:  # surfaced at wait()
                         ticket_out[0] = e
             master.set()
 
+        cls = priority or self.priority
         for i, payload in enumerate(payloads):
             idx, release = self._acquire_buffer()
             dst = outs[i] if outs is not None else None
@@ -895,8 +976,37 @@ class TransferEngine:
                 self._release_buffer(idx, release)
                 finish_one(err)
 
+            segs = self._preempt_segments_for(payload, direction, cls)
+            if segs is not None:
+                # resumable segment iterator: the runtime may park this
+                # chunk mid-flight for a TOKEN/SENSOR arrival. The segment
+                # results land in results[i] via collect; finalize mirrors
+                # ``work``'s finally (slot release + master-ticket step)
+                # and runs exactly once — a queued/parked cancellation
+                # takes ``cancelled`` instead.
+                def seg_thunk(s):
+                    def run():
+                        with state_lock:
+                            if state["t0"] is None:
+                                state["t0"] = time.perf_counter()
+                        return self._one_timed(s, direction)
+                    return run
+
+                def collect(parts, i=i):
+                    results[i] = list(parts)
+                    return results[i]
+
+                submit_obj: Any = PreemptibleWork(
+                    [seg_thunk(s) for s in segs],
+                    collect=collect,
+                    finalize=lambda err, idx=idx, release=release: (
+                        self._release_buffer(idx, release),
+                        finish_one(err)))
+            else:
+                submit_obj = work
+
             try:
-                handle.submit(work,
+                handle.submit(submit_obj,
                               nbytes=_payload_nbytes(payload, direction),
                               priority=priority, on_cancel=cancelled)
             except BaseException as e:

@@ -71,7 +71,8 @@ class ContinuousBatchingEngine:
 
     def __init__(self, model: Model, params: Any, *, n_slots: int = 4,
                  max_seq: int = 256, eos_token: int = -1,
-                 transfer: "TransferEngine | Any | None" = None):
+                 transfer: "TransferEngine | Any | None" = None,
+                 class_caps: "dict[str, float] | None" = None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -83,6 +84,13 @@ class ContinuousBatchingEngine:
         self._owns_transfer = transfer is None
         self.transfer = transfer or TransferEngine(
             TransferPolicy.kernel_level())
+        if class_caps:
+            # per-class bandwidth ceilings (PriorityClass value -> bytes/s)
+            # on the runtime behind the transfer surface: bulk prefetch
+            # sharing this engine's runtime can be budgeted so decode-token
+            # RX keeps its headroom.
+            for name, bps in class_caps.items():
+                self.transfer.set_class_cap(PriorityClass(name), bps)
         if model.cfg.family in ("ssm", "hybrid"):
             raise NotImplementedError(
                 "continuous batching currently supports KV-cache families")

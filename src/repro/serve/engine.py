@@ -57,6 +57,13 @@ class ServeConfig:
     # from this file when it exists and save the fitted state on close()
     # — a restarted server skips the calibration sweep.
     transfer_state_path: str | None = None
+    # per-class bandwidth ceilings on the shared TransferRuntime, keyed by
+    # PriorityClass value (e.g. {"bulk": 500e6}): the ZynqNet per-class
+    # budget, enforced — capped classes defer, uncapped classes borrow the
+    # headroom, and an online-adaptive engine plans against the effective
+    # (post-cap) bandwidth of its own class. Requires INTERRUPT management
+    # (the default policies here all are).
+    class_caps: "dict[str, float] | None" = None
 
 
 @dataclass
@@ -112,6 +119,12 @@ class ServingEngine:
         else:
             self.policy = policy or TransferPolicy.kernel_level()
             self.engine = TransferEngine(self.policy)
+        if cfg.class_caps:
+            # enforced on the shared runtime behind this engine's transfer
+            # surface; an adaptive engine also folds its own class's cap
+            # into the planner (set_class_cap handles both).
+            for name, bps in cfg.class_caps.items():
+                self.engine.set_class_cap(PriorityClass(name), bps)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cfg.max_seq))
         self._decode = jax.jit(model.decode, donate_argnums=(2,))

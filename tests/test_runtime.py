@@ -1,6 +1,7 @@
 """Unified TransferRuntime: QoS arbitration (priority inversion, fairness,
-starvation-freedom), the three paper-mode backends behind one submit
-contract, SENSOR-class background ingest, and engine teardown ordering."""
+starvation-freedom), preemptive chunked dispatch, per-class bandwidth
+caps, the three paper-mode backends behind one submit contract,
+SENSOR-class background ingest, and engine teardown ordering."""
 
 import threading
 import time
@@ -8,10 +9,13 @@ import time
 import numpy as np
 import pytest
 
+from repro.core.adaptive import AdaptiveChannelGroup
 from repro.core.channels import ChannelGroup
+from repro.core.cost_model import TransferCostModel
 from repro.core.runtime import (
     CooperativeScheduler,
     PollingBackend,
+    PreemptibleWork,
     PriorityClass,
     QosSpec,
     ScheduledBackend,
@@ -25,6 +29,21 @@ from repro.core.transfer import (
     TransferEngine,
     TransferPolicy,
 )
+
+
+class _SlowChunkEngine(TransferEngine):
+    """TransferEngine whose per-chunk service time is padded to a known
+    floor, so preemption yield points are wide enough to hit reliably on
+    a noisy 2-core host (real memcpys of test-sized chunks finish in
+    microseconds)."""
+
+    def __init__(self, *args, chunk_sleep_s: float = 0.002, **kw):
+        super().__init__(*args, **kw)
+        self.chunk_sleep_s = chunk_sleep_s
+
+    def _one(self, payload, direction, out=None):
+        time.sleep(self.chunk_sleep_s)
+        return super()._one(payload, direction, out)
 
 
 def _sleep_task(log, tag, seconds):
@@ -427,6 +446,270 @@ def test_class_summary_per_class_accounting():
         assert s["token"]["completed"] == 2
         assert s["layer"]["dispatch_p99_ms"] >= 0.0
         eng.close()
+
+
+# ---- preemptive chunked dispatch -------------------------------------------
+
+def test_preemptible_work_parks_for_token_arrival():
+    """A BULK descriptor submitted as a PreemptibleWork yields between
+    segments the moment a TOKEN is queued: the token's wait is bounded by
+    ONE segment, not the whole descriptor, and the park is accounted."""
+    with TransferRuntime(workers=1) as rt:
+        hb = rt.register("bulk", PriorityClass.BULK)
+        ht = rt.register("tok", PriorityClass.TOKEN)
+        log: list = []
+        finalized: list = []
+        work = PreemptibleWork(
+            [(lambda i=i: (log.append(("bulk", i)), time.sleep(0.004))[0])
+             for i in range(10)],
+            collect=lambda parts: "bulk-done",
+            finalize=lambda err: finalized.append(err))
+        tb = Ticket(*hb.submit(work, nbytes=10 << 20))
+        time.sleep(0.010)  # a few segments run; ~7 remain
+        t0 = time.perf_counter()
+        Ticket(*ht.submit(lambda: log.append(("tok",)), nbytes=64)).wait()
+        tok_lat = time.perf_counter() - t0
+        assert tb.wait() == "bulk-done"
+        tok_idx = log.index(("tok",))
+        assert tok_idx < 10, "token waited out the whole bulk descriptor"
+        # bounded by one in-service segment (4 ms) + dispatch slop
+        assert tok_lat < 0.02, f"token waited {tok_lat * 1e3:.1f} ms"
+        s = rt.class_summary()
+        assert s["bulk"]["preemptions"] >= 1
+        assert s["bulk"]["preempt_park_p99_ms"] >= 0.0
+        assert finalized == [None]  # finalize ran exactly once, no error
+        # service time is the SUM of the stints, not just the last one
+        assert s["bulk"]["service_p50_ms"] >= 30.0
+
+
+def test_preemptible_work_progresses_under_continuous_token_load():
+    """Parked work runs at least one segment between parks: a continuous
+    token stream slows bulk down but cannot starve it."""
+    with TransferRuntime(workers=1) as rt:
+        hb = rt.register("bulk", PriorityClass.BULK)
+        ht = rt.register("tok", PriorityClass.TOKEN)
+        work = PreemptibleWork(
+            [(lambda: time.sleep(0.002)) for _ in range(8)],
+            collect=lambda parts: "done")
+        tb = Ticket(*hb.submit(work, nbytes=8 << 20))
+        stop = threading.Event()
+
+        def token_flood():
+            while not stop.is_set():
+                Ticket(*ht.submit(lambda: None, nbytes=64)).wait()
+                time.sleep(0.001)
+
+        t = threading.Thread(target=token_flood, daemon=True)
+        t.start()
+        try:
+            assert tb.wait() == "done"  # completes despite the flood
+        finally:
+            stop.set()
+            t.join(timeout=5)
+
+
+def test_engine_preemptive_chunking_roundtrip_and_segment_sizes():
+    """preempt_chunk_bytes splits LAYER/BULK TX chunks into resumable
+    segments: the returned device chunk list reassembles exactly, and no
+    recorded chunk sample exceeds the segment size."""
+    rt = TransferRuntime(workers=2)
+    pol = TransferPolicy.kernel_level_ring(
+        4, block_bytes=1 << 18).with_(preempt_chunk_bytes=1 << 16)
+    eng = TransferEngine(pol, runtime=rt, priority=PriorityClass.BULK)
+    x = np.random.default_rng(2).standard_normal(150_001).astype(np.float32)
+    for chunks in (eng.tx(x), eng.tx_async(x).wait()):
+        flat = np.concatenate([np.asarray(c).reshape(-1) for c in chunks])
+        np.testing.assert_array_equal(flat, x)
+        assert len(chunks) > (x.nbytes + (1 << 18) - 1) // (1 << 18)
+    assert max(n for _, _, n, _ in eng.chunk_samples) <= 1 << 16
+    # TOKEN-priority traffic on the same engine is never segment-split
+    toks = eng.tx(np.arange(64, dtype=np.int32),
+                  priority=PriorityClass.TOKEN)
+    assert len(toks) == 1
+    eng.close()
+    rt.close()
+
+
+def test_engine_bulk_tx_parks_for_token_mid_chunk():
+    """End-to-end preemption: a single-worker runtime streaming slowed
+    BULK chunks parks mid-chunk for a TOKEN submission."""
+    rt = TransferRuntime(workers=1)
+    # completion_workers=1: the engine's workers_hint must not grow the
+    # runtime — a second worker would take the token without any park.
+    pol = TransferPolicy.kernel_level_ring(
+        8, block_bytes=1 << 20).with_(preempt_chunk_bytes=1 << 18,
+                                      completion_workers=1)
+    eng = _SlowChunkEngine(pol, runtime=rt, priority=PriorityClass.BULK,
+                           chunk_sleep_s=0.002)
+    ht = rt.register("tok", PriorityClass.TOKEN)
+    x = np.zeros(2 << 20, np.uint8)  # 2 chunks x 4 segments x >=2 ms
+    ticket = eng.tx_async(x)
+    time.sleep(0.004)  # mid first chunk
+    t0 = time.perf_counter()
+    Ticket(*ht.submit(lambda: None, nbytes=64)).wait()
+    tok_lat = time.perf_counter() - t0
+    ticket.wait()
+    s = rt.class_summary()
+    assert s["bulk"]["preemptions"] >= 1, s
+    # without preemption the token waits a whole chunk (>= 8 ms)
+    assert tok_lat < 0.008, f"token waited {tok_lat * 1e3:.1f} ms"
+    eng.close()
+    rt.close()
+
+
+def test_preemptible_work_lookahead_knows_exhaustion():
+    """One segment of lookahead: right after the last real segment runs,
+    ``exhausted`` is True — the runtime must not park finished work (a
+    pointless requeue round-trip that would inflate the preemption
+    ledger)."""
+    w = PreemptibleWork([lambda: 1, lambda: 2], collect=sum)
+    assert not w.exhausted
+    assert not w.step()
+    assert not w.exhausted
+    assert not w.step()
+    assert w.exhausted
+    assert w.step()  # nothing left
+    assert w.result() == 3
+
+
+# ---- per-class bandwidth caps ----------------------------------------------
+
+def test_parked_resume_is_exempt_from_its_class_cap():
+    """A parked mid-chunk descriptor already charged its bytes at first
+    dispatch (charge-once) and holds a ring slot: the cap gate must not
+    re-gate its resume on the deficit it itself created, or an in-service
+    chunk stalls for the whole bucket refill."""
+    with TransferRuntime(workers=1, cap_burst_s=0.01) as rt:
+        hb = rt.register("bulk", PriorityClass.BULK)
+        ht = rt.register("tok", PriorityClass.TOKEN)
+        # 1 MiB/s with a ~10 KiB burst: the 8 MiB charge leaves an ~8 s
+        # deficit — without the exemption the parked chunk waits it out.
+        rt.set_class_cap(PriorityClass.BULK, 1 << 20)
+        work = PreemptibleWork([(lambda: time.sleep(0.003))
+                                for _ in range(4)],
+                               collect=len)
+        tb = Ticket(*hb.submit(work, nbytes=8 << 20))
+        time.sleep(0.004)  # first segment in service
+        Ticket(*ht.submit(lambda: None, nbytes=64)).wait()  # forces a park
+        t0 = time.perf_counter()
+        assert tb.wait() == 4
+        resumed_in = time.perf_counter() - t0
+        s = rt.class_summary()
+        assert s["bulk"]["preemptions"] >= 1, s
+        assert resumed_in < 1.0, (
+            f"parked chunk waited {resumed_in:.2f}s — re-gated by its own "
+            f"cap deficit instead of resuming")
+
+
+def test_class_cap_throttles_capped_class_and_uncapped_borrows():
+    """A BULK cap paces BULK dispatch at the configured bytes/s — even
+    once its descriptors are past their deadline (EDF must not override a
+    hard ceiling) — while uncapped LAYER traffic flows at full speed
+    through the freed headroom."""
+    with TransferRuntime(workers=2, cap_burst_s=0.005) as rt:
+        hb = rt.register("bulk", PriorityClass.BULK)
+        hl = rt.register("layer", PriorityClass.LAYER)
+        rt.set_class_cap(PriorityClass.BULK, 50 << 20)  # 50 MiB/s
+        t0 = time.perf_counter()
+        bulk = [Ticket(*hb.submit(lambda: None, nbytes=1 << 20))
+                for _ in range(8)]
+        layer = [Ticket(*hl.submit(lambda: None, nbytes=1 << 20))
+                 for _ in range(8)]
+        for t in layer:
+            t.wait()
+        layer_done = time.perf_counter() - t0
+        for t in bulk:
+            t.wait()
+        bulk_done = time.perf_counter() - t0
+        s = rt.class_summary()
+    assert layer_done < 0.1, f"uncapped LAYER throttled ({layer_done:.3f}s)"
+    # 8 MiB at 50 MiB/s minus the burst allowance: >= ~0.1 s of pacing
+    assert bulk_done > 0.1, f"cap not enforced ({bulk_done:.3f}s)"
+    assert s["bulk"]["cap_deferrals"] > 0
+    assert s["bulk"]["cap_bytes_per_s"] == 50 << 20
+    assert s["layer"]["cap_bytes_per_s"] is None
+
+
+def test_class_cap_clear_restores_full_rate():
+    with TransferRuntime(workers=1, cap_burst_s=0.005) as rt:
+        hb = rt.register("bulk", PriorityClass.BULK)
+        rt.set_class_cap(PriorityClass.BULK, 1 << 20)
+        Ticket(*hb.submit(lambda: None, nbytes=1 << 20)).wait()  # eats burst
+        rt.set_class_cap(PriorityClass.BULK, None)
+        assert rt.class_cap(PriorityClass.BULK) is None
+        t0 = time.perf_counter()
+        tickets = [Ticket(*hb.submit(lambda: None, nbytes=1 << 20))
+                   for _ in range(8)]
+        for t in tickets:
+            t.wait()
+        assert time.perf_counter() - t0 < 0.5  # uncapped again
+
+
+def test_set_class_cap_wiring_engine_group_facade():
+    """One cap surface on every transfer duck-type; a facade cap on its
+    OWN class also reaches the online planner (post-cap bandwidth)."""
+    rt = TransferRuntime(workers=1)
+    eng = TransferEngine(TransferPolicy.kernel_level(), runtime=rt)
+    eng.set_class_cap(PriorityClass.BULK, 123e6)
+    assert rt.class_cap(PriorityClass.BULK) == 123e6
+    eng.close()
+    g = ChannelGroup(TransferPolicy.kernel_level_ring(2), n_channels=2,
+                     runtime=rt)
+    g.set_class_cap(PriorityClass.BULK, 99e6)
+    assert rt.class_cap(PriorityClass.BULK) == 99e6
+    g.close()
+    ag = AdaptiveChannelGroup(
+        1 << 20, runtime=rt, priority=PriorityClass.LAYER,
+        model=TransferCostModel(t0_s=50e-6, bw_Bps=2e9))
+    ag.set_class_cap(PriorityClass.LAYER, 55e6)
+    assert rt.class_cap(PriorityClass.LAYER) == 55e6
+    assert ag.controller._bw_cap_Bps == 55e6
+    ag.close()
+    rt.close()
+
+
+def test_teardown_under_cap_with_chunked_descriptor_mid_preemption():
+    """The PR-4 drain-deregister guarantee under the new machinery: a
+    runtime closed while one chunked BULK descriptor is parked
+    mid-preemption and the rest of its chunks are cap-deferred must
+    resolve every ticket and release every ring slot (no hang, no
+    double-release)."""
+    rt = TransferRuntime(workers=1, cap_burst_s=0.005)
+    pol = TransferPolicy.kernel_level_ring(
+        8, block_bytes=1 << 16).with_(preempt_chunk_bytes=1 << 14,
+                                      completion_workers=1)
+    eng = _SlowChunkEngine(pol, runtime=rt, priority=PriorityClass.BULK,
+                           chunk_sleep_s=0.002)
+    ht = rt.register("tok", PriorityClass.TOKEN)
+    # burst ~5 KiB at this cap: the first 64 KiB chunk dispatches (bucket
+    # starts positive), every later chunk defers on the deep deficit.
+    rt.set_class_cap(PriorityClass.BULK, 1 << 20)
+    x = np.zeros(4 << 16, np.uint8)  # 4 chunks x 4 segments
+    ticket = eng.tx_async(x)
+    time.sleep(0.004)  # chunk 1 mid-service
+    tok = Ticket(*ht.submit(lambda: None, nbytes=64))  # forces a park
+    tok.wait()
+    rt.close(timeout=0.3)  # cancels parked + cap-deferred chunks
+    assert ticket._done.wait(timeout=5.0), "master ticket never resolved"
+    with pytest.raises(RuntimeError, match="cancelled"):
+        ticket.wait()
+    # every ring slot released exactly once (a stuck event would deadlock
+    # the next acquirer; a double release would trip slot accounting)
+    assert all(ev is None or ev.is_set() for ev in eng._buffers_busy)
+    assert eng._inflight == 0
+    eng.close()  # idempotent after runtime teardown
+
+
+def test_class_summary_reports_cap_and_preemption_columns():
+    with TransferRuntime(workers=1) as rt:
+        h = rt.register("bulk", PriorityClass.BULK)
+        rt.set_class_cap(PriorityClass.BULK, 1e9)
+        Ticket(*h.submit(lambda: None, nbytes=4096)).wait()
+        row = rt.class_summary()["bulk"]
+    for key in ("preemptions", "cap_deferrals", "preempt_park_p50_ms",
+                "preempt_park_p99_ms", "cap_bytes_per_s"):
+        assert key in row
+    assert row["cap_bytes_per_s"] == 1e9
 
 
 # ---- stress: all four classes live ----------------------------------------
