@@ -15,6 +15,7 @@ import time
 from benchmarks import (
     adaptive_drift,
     collective_overlap,
+    fault_recovery,
     multichannel_sweep,
     policy_ablation,
     qos_contention,
@@ -34,6 +35,7 @@ BENCHES = {
     "multichannel_sweep": multichannel_sweep.run,  # striped rings + adaptive
     "adaptive_drift": adaptive_drift.run,  # online refit vs stale plan
     "qos_contention": qos_contention.run,  # shared-runtime QoS arbitration
+    "fault_recovery": fault_recovery.run,  # quarantine + replan vs stall
     "collective_overlap": collective_overlap.run,  # blocks-mode collectives
     "roofline": roofline.run,  # reads dry-run artifacts
 }

@@ -54,6 +54,8 @@ REQUIRED = {
                        "p99_ratio_hol_over_preempt",
                        "p99_ratio_reserved_lane_over_preempt",
                        "cap_bulk_share_uncapped", "cap_bulk_share_capped"],
+    "fault_recovery": ["rows", "baseline_gbps", "faulted_gbps",
+                       "recovered_gbps", "recovery_ratio", "degraded_ratio"],
 }
 
 
@@ -79,6 +81,10 @@ def _structural(doc: dict, errors: list[str]) -> None:
         ("qos_contention.p99_ratio_hol_over_preempt",
          doc.get("qos_contention", {}).get("p99_ratio_hol_over_preempt"),
          0.5),
+        # the chaos lane's acceptance bar: quarantine+replan must keep
+        # >= 80% of fault-free throughput with 1 of N channels stalled
+        ("fault_recovery.recovery_ratio",
+         doc.get("fault_recovery", {}).get("recovery_ratio"), 0.8),
     ]
     for name, val, floor in ratio_floors:
         if isinstance(val, (int, float)) and val < floor:

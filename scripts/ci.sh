@@ -2,11 +2,13 @@
 # Tier-1 verification + transfer-bench smoke runs, so the benchmarks can't
 # silently rot. One entrypoint for local runs AND .github/workflows/ci.yml:
 #
-#   bash scripts/ci.sh                  # everything (fast + stress + smoke)
+#   bash scripts/ci.sh                  # everything (fast + stress + smoke + chaos)
 #   bash scripts/ci.sh --lane fast      # pytest -m "not stress"
 #   bash scripts/ci.sh --lane stress    # pytest -m "stress" (concurrency)
 #   bash scripts/ci.sh --lane smoke     # --quick benchmark smokes + the
 #                                       # check_bench.py regression gate
+#   bash scripts/ci.sh --lane chaos     # fault-injection suite + the
+#                                       # fault_recovery >=80% throughput gate
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,11 +16,11 @@ lane="all"
 while [[ $# -gt 0 ]]; do
   case "$1" in
     --lane)
-      lane="${2:?--lane needs fast|stress|smoke}"
+      lane="${2:?--lane needs fast|stress|smoke|chaos}"
       shift 2
       ;;
     *)
-      echo "unknown argument: $1 (usage: ci.sh [--lane fast|stress|smoke])" >&2
+      echo "unknown argument: $1 (usage: ci.sh [--lane fast|stress|smoke|chaos])" >&2
       exit 2
       ;;
   esac
@@ -53,13 +55,22 @@ run_smoke() {
   python scripts/check_bench.py
 }
 
+run_chaos() {
+  echo "== chaos lane: fault-injection suite (timeouts, retries, quarantine) =="
+  python -m pytest -x -q tests/test_faults.py
+
+  echo "== chaos lane: fault_recovery --quick (>= 80% throughput recovery gate) =="
+  python benchmarks/fault_recovery.py --quick
+}
+
 case "$lane" in
   fast)   run_fast ;;
   stress) run_stress ;;
   smoke)  run_smoke ;;
-  all)    run_fast; run_stress; run_smoke ;;
+  chaos)  run_chaos ;;
+  all)    run_fast; run_stress; run_smoke; run_chaos ;;
   *)
-    echo "unknown lane: $lane (want fast|stress|smoke)" >&2
+    echo "unknown lane: $lane (want fast|stress|smoke|chaos)" >&2
     exit 2
     ;;
 esac

@@ -73,7 +73,9 @@ from repro.core.channels import (
     plan_channels,
 )
 from repro.core.cost_model import TransferCostModel
+from repro.core.faults import RecoveryConfig
 from repro.core.runtime import PriorityClass, TransferRuntime
+from repro.dist.fault import TransferFaultState
 from repro.core.transfer import (
     Buffering,
     Partitioning,
@@ -289,6 +291,11 @@ class OnlineTransferController:
         # Drift detection still runs on the RAW fits (the link itself did
         # not change when an operator set a cap).
         self._bw_cap_Bps: float | None = None
+        # healthy-channel ceiling from the self-healing layer: when the
+        # channel group quarantines rings, plans must be sized for the
+        # channels actually in rotation, not the configured maximum —
+        # "replan around the reduced channel set". None = no restriction.
+        self._channel_limit: int | None = None
         self.refits = 0
         self.replans = 0
         self.suppressed = 0  # hysteresis said "noise, keep the plan"
@@ -359,6 +366,49 @@ class OnlineTransferController:
         with self._lock:
             self._bw_cap_Bps = (float(bytes_per_s)
                                 if bytes_per_s and bytes_per_s > 0 else None)
+
+    # -- self-healing hooks -------------------------------------------------
+    @property
+    def _max_channels(self) -> int:
+        limit = self._channel_limit
+        if limit is None:
+            return self.cfg.max_channels
+        return max(1, min(self.cfg.max_channels, limit))
+
+    def set_channel_limit(self, n: int | None) -> None:
+        """Bound future plans to ``n`` channels (None clears). Set by the
+        facade when the channel group quarantines/releases rings."""
+        with self._lock:
+            self._channel_limit = None if n is None else max(1, int(n))
+
+    def replan_channels(self, limit: int | None) -> ChannelPlan | None:
+        """Immediate channel-count replan for a quarantine transition: keep
+        the current fitted model and policy family, rebuild the plan bounded
+        to ``limit`` healthy channels. Unlike :meth:`propose` this does not
+        wait for refit cadence or drift — losing a ring to quarantine IS the
+        event, no hysteresis applies. Returns the new plan, or None when the
+        current plan already fits the bound (e.g. polling's single channel,
+        or a limit at/above the planned channel count)."""
+        with self._lock:
+            self.set_channel_limit(limit)
+            if self.plan.policy.management is not Management.INTERRUPT:
+                return None
+            model = self.plan.model
+            if (self._bw_cap_Bps is not None
+                    and model.bw_Bps > self._bw_cap_Bps):
+                model = TransferCostModel(t0_s=model.t0_s,
+                                          bw_Bps=self._bw_cap_Bps)
+            plan = plan_channels(
+                self.payload_bytes, model=model,
+                max_channels=self._max_channels,
+                completion_workers=self.cfg.completion_workers,
+                preempt_target_s=self.cfg.preempt_target_s)
+            if (plan.policy == self.plan.policy
+                    and plan.n_channels == self.plan.n_channels):
+                return None
+            self.replans += 1
+            self.plan = plan
+            return plan
 
     # -- fitted state -------------------------------------------------------
     def models(self) -> dict[tuple[str, str], TransferCostModel]:
@@ -442,7 +492,7 @@ class OnlineTransferController:
                     m_plan = TransferCostModel(t0_s=m_plan.t0_s,
                                                bw_Bps=self._bw_cap_Bps)
                 plan = plan_channels(
-                    payload, model=m_plan, max_channels=self.cfg.max_channels,
+                    payload, model=m_plan, max_channels=self._max_channels,
                     completion_workers=self.cfg.completion_workers,
                     preempt_target_s=self.cfg.preempt_target_s)
             # adoption (either outcome below) re-baselines drift detection
@@ -574,13 +624,20 @@ class AdaptiveChannelGroup:
                  engine_factory: Callable[..., TransferEngine] | None = None,
                  runtime: TransferRuntime | None = None,
                  priority: PriorityClass = PriorityClass.LAYER,
-                 state_path: "str | os.PathLike | None" = None):
+                 state_path: "str | os.PathLike | None" = None,
+                 recovery: RecoveryConfig | None = None,
+                 fault_state: TransferFaultState | None = None):
         self.cfg = cfg or AdaptiveConfig()
         self._devices = devices
         self._factory = engine_factory
         self._runtime = runtime
         self.priority = priority
         self.state_path = state_path
+        # ONE fault ledger across every plan generation: counters must
+        # survive safe-point swaps, or a replan would erase the very
+        # fault history that triggered it.
+        self.recovery = recovery or RecoveryConfig()
+        self.fault_state = fault_state or TransferFaultState()
         self.staging_pool = pool or StagingPool()
         self.layouts = LayoutCache(pool=self.staging_pool)
         # warm start: a previous session's steady-state fit seeds the first
@@ -635,7 +692,9 @@ class AdaptiveChannelGroup:
                              devices=self._devices, pool=self.staging_pool,
                              plan=plan, engine_factory=self._factory,
                              layouts=self.layouts, runtime=self._runtime,
-                             priority=self.priority)
+                             priority=self.priority,
+                             recovery=self.recovery,
+                             fault_state=self.fault_state)
             engines = list(g.engines)
         else:
             factory = self._factory or TransferEngine
@@ -757,14 +816,47 @@ class AdaptiveChannelGroup:
         if cls is self.priority:
             self.controller.set_bandwidth_cap(bytes_per_s)
 
+    def _ingest_chunks(self) -> None:
+        """Drain engine chunk samples into the controller's fit windows —
+        but let the group's health tracker PEEK them first (it reads
+        non-destructively via ``chunk_seq``; the controller's drain pops).
+        Every facade-side drain must go through here, or quarantine drift
+        detection would starve."""
+        peek = getattr(self._group, "_ingest_health_samples", None)
+        if peek is not None:
+            peek()
+        self.controller.ingest_chunks(self.engines)
+
+    def _check_group_health(self) -> bool:
+        """Run the current generation's quarantine/probe health pass; when
+        the set of healthy channels changed, replan immediately around the
+        reduced (or restored) channel set — losing a ring to quarantine is
+        an event, not drift, so no hysteresis applies. Returns True when
+        quarantine state changed."""
+        g = self._group
+        check = getattr(g, "check_channel_health", None)
+        if check is None:
+            return False  # polling generation: single bare engine
+        changed = check()
+        if changed:
+            n_active = len(g._active_indices())
+            plan = self.controller.replan_channels(n_active)
+            if plan is not None:
+                with self._lock:
+                    self._pending_plan = plan
+        return changed
+
     def maybe_adapt(self, *, force: bool = False) -> bool:
         """Refit from the live samples and swap plans if drift warrants it.
 
         Called from executors at their natural safe points (end of frame /
-        batch boundary) — and implicitly before every submit. Returns True
-        when a new generation was installed."""
-        self.controller.ingest_chunks(self.engines)
+        batch boundary) — and implicitly before every submit. Health
+        (quarantine/probe) runs first: a quarantine transition replans
+        around the healthy channel set immediately, ahead of any drift
+        decision. Returns True when a new generation was installed."""
+        self._ingest_chunks()
         self._ingest_dispatch_latency()
+        self._check_group_health()
         if self._pending_plan is None:
             plan = self.controller.propose(force=force)
             if plan is not None:
@@ -785,7 +877,7 @@ class AdaptiveChannelGroup:
         for nbytes in self.cfg.probe_sizes:
             x = np.zeros(nbytes, np.uint8)
             self._issue_tx(x, None, None).wait()
-        self.controller.ingest_chunks(self.engines)
+        self._ingest_chunks()
 
     # -- engine surface ------------------------------------------------------
     def _enter(self):
@@ -794,7 +886,7 @@ class AdaptiveChannelGroup:
         caller holds an entrant reference until its ticket is tracked (or
         its sync transfer finished) — see :meth:`_leave`."""
         if self._pending_plan is None:
-            self.controller.ingest_chunks(self.engines)
+            self._ingest_chunks()
             plan = self.controller.propose()
             if plan is not None:
                 with self._lock:
@@ -906,4 +998,13 @@ class AdaptiveChannelGroup:
             "replans": c.replans,
             "suppressed": c.suppressed,
             "plan": c.plan.row(),
+            "channel_limit": c._channel_limit,
+        }
+
+    def fault_summary(self) -> dict[str, Any]:
+        """The shared fault ledger plus the CURRENT generation's quarantine
+        set (the ledger spans generations; the set is per-group)."""
+        return {
+            "faults": self.fault_state.summary(),
+            "quarantined": sorted(getattr(self._group, "quarantined", ())),
         }

@@ -54,7 +54,14 @@ import jax
 import numpy as np
 
 from repro.core.cost_model import TransferCostModel
-from repro.core.runtime import PriorityClass, TransferRuntime
+from repro.core.faults import RecoveryConfig
+from repro.core.runtime import (
+    PriorityClass,
+    TransferChecksumError,
+    TransferFaultError,
+    TransferRuntime,
+    TransferTimeoutError,
+)
 from repro.core.transfer import (
     Buffering,
     LayoutCache,
@@ -69,6 +76,7 @@ from repro.core.transfer import (
     _check_out,
     carve_flat_out,
 )
+from repro.dist.fault import TransferFaultState
 
 _MIN_STRIPE_BYTES = 1 << 20  # below this a second channel costs more than t0
 _CAL_SIZES = (16 << 10, 128 << 10, 1 << 20, 8 << 20)
@@ -260,7 +268,9 @@ class ChannelGroup:
                  engine_factory: Callable[..., TransferEngine] | None = None,
                  layouts: LayoutCache | None = None,
                  runtime: TransferRuntime | None = None,
-                 priority: PriorityClass = PriorityClass.LAYER):
+                 priority: PriorityClass = PriorityClass.LAYER,
+                 recovery: RecoveryConfig | None = None,
+                 fault_state: TransferFaultState | None = None):
         policy = policy or TransferPolicy.kernel_level_ring()
         if policy.management is not Management.INTERRUPT:
             raise ValueError(
@@ -303,6 +313,22 @@ class ChannelGroup:
         self._observers: list[Callable[[TransferStats], None]] = []
         self._rr = 0  # round-robin cursor for sub-stripe payloads
         self._joiners: list[threading.Thread] = []
+        # -- self-healing state (PR 6) ---------------------------------------
+        # ``fault_state`` may be handed in so an adaptive facade's plan
+        # generations share ONE ledger across safe-point swaps.
+        self.recovery = recovery or RecoveryConfig()
+        self.fault_state = fault_state or TransferFaultState()
+        self._quarantined: set[int] = set()        # under _stats_lock
+        self._consec_faults = [0] * n_channels     # under _stats_lock
+        # per-channel descriptor-health windows, fed by PEEKING each
+        # engine's chunk_samples via its monotone chunk_seq (the refit
+        # consumer pops the same deque destructively — we must not race
+        # it for samples, only read the tail it has not yet consumed).
+        self._health_seen = [0] * n_channels
+        self._health: list["collections.deque[tuple[int, float]]"] = [
+            collections.deque(maxlen=64) for _ in range(n_channels)]
+        self._probe_stamp = [float("-inf")] * n_channels
+        self._health_lock = threading.Lock()  # serializes maybe_adapt
 
     # -- lifecycle ----------------------------------------------------------
     @classmethod
@@ -313,7 +339,9 @@ class ChannelGroup:
              pool: StagingPool | None = None,
              engine_factory: Callable[..., TransferEngine] | None = None,
              runtime: TransferRuntime | None = None,
-             priority: PriorityClass = PriorityClass.LAYER
+             priority: PriorityClass = PriorityClass.LAYER,
+             recovery: RecoveryConfig | None = None,
+             fault_state: TransferFaultState | None = None
              ) -> "ChannelGroup":
         """Calibrate, fit, and build the group the cost model recommends."""
         device = devices[0] if devices else None
@@ -321,20 +349,23 @@ class ChannelGroup:
                              max_channels=max_channels)
         return cls(plan.policy, n_channels=plan.n_channels, devices=devices,
                    pool=pool, plan=plan, engine_factory=engine_factory,
-                   runtime=runtime, priority=priority)
+                   runtime=runtime, priority=priority, recovery=recovery,
+                   fault_state=fault_state)
 
-    def close(self) -> None:
+    def close(self, timeout: float = 5.0) -> None:
         """Idempotent: joiners first (they wait on engine tickets, which
-        need live runtime workers), then member engines deregister."""
+        need live runtime workers), then member engines deregister. The
+        whole drain respects ``timeout`` per stage — a wedged descriptor
+        is cancelled, never waited on forever."""
         if self._closed:
             return
         self._closed = True
         with self._stats_lock:
             joiners, self._joiners = self._joiners, []
         for t in joiners:
-            t.join(timeout=5.0)
+            t.join(timeout=timeout)
         for eng in self.engines:
-            eng.close()
+            eng.close(timeout)
 
     @property
     def runtime(self) -> TransferRuntime | None:
@@ -354,9 +385,188 @@ class ChannelGroup:
         self.close()
 
     def maybe_adapt(self, *, force: bool = False) -> bool:
-        """Safe-point adaptation hook (no-op: a plain group's plan is
-        fixed at construction; AdaptiveChannelGroup implements it)."""
-        return False
+        """Safe-point hook. A plain group's PLAN is fixed at construction,
+        but its channel-health machinery still runs here: drift detection
+        (a silently degraded channel is pulled from the stripe rotation)
+        and probe-based un-quarantine. Returns True when the active channel
+        set changed (AdaptiveChannelGroup extends this with replanning)."""
+        return self.check_channel_health()
+
+    # -- channel quarantine (self-healing) -----------------------------------
+    @property
+    def quarantined(self) -> set[int]:
+        """Channel indices currently pulled from the stripe rotation."""
+        with self._stats_lock:
+            return set(self._quarantined)
+
+    def _active_indices(self) -> list[int]:
+        with self._stats_lock:
+            act = [i for i in range(self.n_channels)
+                   if i not in self._quarantined]
+        return act or list(range(self.n_channels))  # never zero channels
+
+    def _note_runtime_fault(self, **counts) -> None:
+        rt = self.runtime
+        if rt is not None:
+            rt.note_fault(self.priority, **counts)
+
+    def _note_fault(self, ch: int, err: BaseException) -> None:
+        """Attribute one fault to channel ``ch``; quarantine it after
+        ``recovery.quarantine_after`` consecutive faults (never the last
+        active channel — a degraded channel beats no channel)."""
+        self.fault_state.record_fault(
+            ch, timeout=isinstance(err, TransferTimeoutError),
+            checksum=isinstance(err, TransferChecksumError))
+        self._note_runtime_fault(
+            faults=1, timeouts=int(isinstance(err, TransferTimeoutError)))
+        quarantined = False
+        with self._stats_lock:
+            self._consec_faults[ch] += 1
+            if (self._consec_faults[ch] >= self.recovery.quarantine_after
+                    and ch not in self._quarantined
+                    and len(self._quarantined) < self.n_channels - 1):
+                self._quarantined.add(ch)
+                quarantined = True
+        if quarantined:
+            self.fault_state.record_quarantine(ch, on=True)
+            self._note_runtime_fault(quarantines=1)
+
+    def _note_success(self, ch: int) -> None:
+        with self._stats_lock:
+            self._consec_faults[ch] = 0
+
+    def _sibling_for_retry(self, ch: int) -> int | None:
+        """An active channel other than ``ch`` to resubmit a failed stripe
+        on (round-robin over the healthy set); None when ``ch`` is the
+        only channel left."""
+        with self._stats_lock:
+            cands = [i for i in range(self.n_channels)
+                     if i != ch and i not in self._quarantined]
+            if not cands:
+                return None
+            self._rr += 1
+            return cands[self._rr % len(cands)]
+
+    def _ingest_health_samples(self) -> None:
+        """Peek each engine's NEW chunk samples (chunk_seq-delimited tail;
+        never pops — the adaptive refit consumer owns the destructive
+        read) into the per-channel health windows."""
+        for i, eng in enumerate(self.engines):
+            seq = getattr(eng, "chunk_seq", None)
+            if seq is None:
+                continue
+            new = seq - self._health_seen[i]
+            if new <= 0:
+                continue
+            self._health_seen[i] = seq
+            tail = list(eng.chunk_samples)[-new:]
+            for (_d, _m, nbytes, dt) in tail:
+                if nbytes > 0:
+                    self._health[i].append((nbytes, dt))
+
+    @staticmethod
+    def _median_s_per_b(window: "collections.deque[tuple[int, float]]"
+                        ) -> float | None:
+        if not window:
+            return None
+        rates = sorted(dt / nb for nb, dt in window)
+        return rates[len(rates) // 2]
+
+    def check_channel_health(self) -> bool:
+        """Drift quarantine + probe-based un-quarantine. Median seconds/
+        byte per channel over recent descriptors, compared to the healthy
+        group's median — deliberately NOT the RollingFit t0/BW fit, whose
+        size-spread gate goes degenerate under uniform chunk sizes (the
+        steady state of striped traffic). Returns True when the active
+        channel set changed."""
+        rec = self.recovery
+        if not self._health_lock.acquire(blocking=False):
+            return False  # another safe point is already running checks
+        try:
+            changed = False
+            if rec.drift_quarantine_ratio is not None:
+                changed |= self._drift_check()
+            changed |= self._probe_quarantined()
+            return changed
+        finally:
+            self._health_lock.release()
+
+    def _drift_check(self) -> bool:
+        rec = self.recovery
+        self._ingest_health_samples()
+        with self._stats_lock:
+            active = [i for i in range(self.n_channels)
+                      if i not in self._quarantined]
+        medians = {i: self._median_s_per_b(self._health[i]) for i in active
+                   if len(self._health[i]) >= rec.health_min_samples}
+        if len(medians) < 2:
+            return False  # nothing to compare against
+        group = sorted(medians.values())[len(medians) // 2]
+        if group <= 0:
+            return False
+        changed = False
+        for i, m in medians.items():
+            if m / group < rec.drift_quarantine_ratio:
+                continue
+            with self._stats_lock:
+                if (i in self._quarantined
+                        or len(self._quarantined) >= self.n_channels - 1):
+                    continue
+                self._quarantined.add(i)
+                self._consec_faults[i] = 0
+            self.fault_state.record_quarantine(i, on=True)
+            self._note_runtime_fault(quarantines=1)
+            changed = True
+        return changed
+
+    def _probe_quarantined(self) -> bool:
+        """Issue a small bounded probe TX on each quarantined channel (rate
+        limited); a probe that completes at a healthy rate returns the
+        channel to the stripe rotation."""
+        rec = self.recovery
+        now = time.monotonic()
+        with self._stats_lock:
+            due = [i for i in sorted(self._quarantined)
+                   if now - self._probe_stamp[i] >= rec.probe_interval_s]
+        changed = False
+        for i in due:
+            self._probe_stamp[i] = time.monotonic()
+            eng = self.engines[i]
+            payload = np.zeros(max(rec.probe_bytes, 1), np.uint8)
+            wait_s = rec.stripe_timeout_s or 1.0
+            t0 = time.perf_counter()
+            try:
+                eng.tx_async(payload).wait(wait_s)
+            except BaseException:
+                continue  # still sick: stays quarantined
+            probe_s = time.perf_counter() - t0
+            # a completing probe is necessary but not sufficient: a merely
+            # SLOW channel (the stall fault) completes probes too. Race the
+            # IDENTICAL payload on a healthy sibling — same size, same t0
+            # share — so the comparison is apples-to-apples (a chunk-median
+            # baseline would unfairly penalize the probe's fixed overhead).
+            with self._stats_lock:
+                active = [j for j in range(self.n_channels)
+                          if j not in self._quarantined]
+            if active and rec.drift_quarantine_ratio is not None:
+                ref = self.engines[active[self._rr % len(active)]]
+                t0 = time.perf_counter()
+                try:
+                    ref.tx_async(payload).wait(wait_s)
+                    ref_s = time.perf_counter() - t0
+                except BaseException:  # sibling flaked: skip the rate gate
+                    ref_s = None
+                if (ref_s is not None and ref_s > 0
+                        and probe_s / ref_s >= rec.drift_quarantine_ratio):
+                    continue  # completed, but still drifted: stay out
+            with self._stats_lock:
+                self._quarantined.discard(i)
+                self._consec_faults[i] = 0
+                self._health[i].clear()  # stale sick-era samples must not
+                # immediately re-trip the drift check
+            self.fault_state.record_quarantine(i, on=False)
+            changed = True
+        return changed
 
     def set_class_cap(self, cls: PriorityClass,
                       bytes_per_s: float | None) -> None:
@@ -393,7 +603,10 @@ class ChannelGroup:
 
     def _next_channel(self) -> TransferEngine:
         with self._stats_lock:
-            eng = self.engines[self._rr % self.n_channels]
+            act = [i for i in range(self.n_channels)
+                   if i not in self._quarantined] or list(
+                       range(self.n_channels))
+            eng = self.engines[act[self._rr % len(act)]]
             self._rr += 1
         return eng
 
@@ -413,11 +626,14 @@ class ChannelGroup:
         return cb
 
     # -- striping ------------------------------------------------------------
-    def _stripes(self, flat: np.ndarray) -> list[np.ndarray]:
+    def _stripes(self, flat: np.ndarray,
+                 n_channels: int | None = None) -> list[np.ndarray]:
         """Contiguous, bytes-balanced element ranges of ``flat`` — views, so
         striping itself copies nothing. Payloads below 2 minimum stripes use
-        a single channel (a second channel would cost more than its t0)."""
-        n = self.n_channels
+        a single channel (a second channel would cost more than its t0).
+        ``n_channels`` bounds the stripe count (the ACTIVE channel count —
+        quarantined channels take no stripes)."""
+        n = n_channels if n_channels is not None else self.n_channels
         if flat.nbytes >= 2 * self.min_stripe_bytes:
             n = min(n, max(1, flat.nbytes // self.min_stripe_bytes))
         else:
@@ -426,44 +642,71 @@ class ChannelGroup:
             return [flat]
         return [s for s in np.array_split(flat, n) if s.size]
 
-    def _join(self, issue: list[Callable[[], Ticket]],
+    def _run_stripe(self, issue_fn: Callable[[TransferEngine], Ticket],
+                    ch: int) -> Any:
+        """Issue one stripe on channel ``ch``, wait (bounded by
+        ``recovery.stripe_timeout_s``), and on a retryable fault resubmit
+        on a sibling channel up to ``recovery.max_retries`` times.
+
+        Only :class:`~repro.core.runtime.TransferFaultError` retries
+        (injected faults, checksum mismatches, timeouts); structural
+        errors (closed engine, bad payload) surface immediately. A
+        timed-out original attempt may still be in service — safe, because
+        a faulted descriptor never lands payload bytes (drops raise before
+        the copy) and a merely-slow duplicate lands the same bytes."""
+        wait_s = self.recovery.stripe_timeout_s
+        attempt = 0
+        while True:
+            try:
+                result = issue_fn(self.engines[ch]).wait(wait_s)
+            except TransferFaultError as e:
+                self._note_fault(ch, e)
+                if attempt > 0:
+                    self.fault_state.record_retry(success=False)
+                    self._note_runtime_fault(retries=1)
+                sibling = self._sibling_for_retry(ch)
+                if attempt >= self.recovery.max_retries or sibling is None:
+                    raise
+                attempt += 1
+                ch = sibling
+                continue
+            self._note_success(ch)
+            if attempt > 0:
+                self.fault_state.record_retry(success=True)
+                self._note_runtime_fault(retries=1)
+            return result
+
+    def _join(self, issue: list[Callable[[TransferEngine], Ticket]],
+              channels: list[int],
               assemble: Callable[[list], list],
               direction: str, nbytes: int, n_items: int,
               master: threading.Event, ticket_out: list,
               callback: Callable[[list], None] | None,
               t0: float) -> None:
-        """Coordinator: issue every channel's transfer from its OWN thread
+        """Coordinator: issue every stripe's transfer from its OWN thread
         (a full ring back-pressures its submitter, so issuing serially from
-        one thread would serialize the channels), then wait and reassemble
-        in channel order."""
+        one thread would serialize the channels), wait bounded, retry
+        faulted stripes on siblings, then reassemble in stripe order."""
         n = len(issue)
-        tickets: list = [None] * n
-        issue_errs: list = [None] * n
+        per_channel: list = [None] * n
+        errs: list = [None] * n
 
-        def issue_one(i: int) -> None:
+        def run_one(i: int) -> None:
             try:
-                tickets[i] = issue[i]()
-            except BaseException as e:  # noqa: BLE001
-                issue_errs[i] = e
+                per_channel[i] = self._run_stripe(issue[i], channels[i])
+            except BaseException as e:  # noqa: BLE001 — surfaced at wait()
+                errs[i] = e
 
-        issuers = [threading.Thread(target=issue_one, args=(i,), daemon=True)
+        runners = [threading.Thread(target=run_one, args=(i,), daemon=True)
                    for i in range(1, n)]
-        for t in issuers:
+        for t in runners:
             t.start()
-        issue_one(0)
-        for t in issuers:
+        run_one(0)
+        for t in runners:
             t.join()
 
-        per_channel: list = [None] * n
         err: BaseException | None = next(
-            (e for e in issue_errs if e is not None), None)
-        for i, ticket in enumerate(tickets):
-            if ticket is None:
-                continue
-            try:
-                per_channel[i] = ticket.wait()
-            except BaseException as e:  # noqa: BLE001 — surfaced at wait()
-                err = err or e
+            (e for e in errs if e is not None), None)
         if err is not None:
             ticket_out.append(err)
         else:
@@ -478,15 +721,15 @@ class ChannelGroup:
                     ticket_out[0] = e
         master.set()
 
-    def _spawn_joiner(self, issue, assemble, direction, nbytes, n_items,
-                      master, ticket_out, callback, t0) -> None:
+    def _spawn_joiner(self, issue, channels, assemble, direction, nbytes,
+                      n_items, master, ticket_out, callback, t0) -> None:
         # a few short-lived threads per *striped* transfer (~50 us spawn vs
         # the >= 2*min_stripe_bytes transfer they issue/join); sub-stripe
         # traffic takes the delegated path and never pays this.
         t = threading.Thread(
             target=self._join,
-            args=(issue, assemble, direction, nbytes, n_items, master,
-                  ticket_out, callback, t0),
+            args=(issue, channels, assemble, direction, nbytes, n_items,
+                  master, ticket_out, callback, t0),
             daemon=True,
         )
         with self._stats_lock:
@@ -506,7 +749,8 @@ class ChannelGroup:
         descriptor is submitted."""
         arr = np.asarray(host_array)
         flat = arr.reshape(-1)
-        stripes = self._stripes(flat)
+        active = self._active_indices()  # quarantined rings take no stripes
+        stripes = self._stripes(flat, len(active))
         if len(stripes) == 1:
             # sub-stripe payload: no striping win — round-robin the channels
             # so concurrent small transfers (serving tokens) still spread.
@@ -519,18 +763,21 @@ class ChannelGroup:
         t0 = time.perf_counter()
         if layout is not None:
             layout._busy = master  # busy BEFORE submit (whole-group window)
-        issue = [lambda eng=eng, s=s: eng.tx_async(s, priority=priority)
-                 for eng, s in zip(self.engines, stripes)]
+        # engine-parameterized issue closures: the joiner issues stripe i on
+        # channels[i] first and may RE-issue it on a sibling after a fault.
+        issue = [lambda eng, s=s: eng.tx_async(s, priority=priority)
+                 for s in stripes]
+        channels = active[:len(stripes)]
 
         def assemble(per_channel: list) -> list:
-            # stripes are contiguous in channel order: concatenating the
+            # stripes are contiguous in stripe order: concatenating the
             # chunk lists reproduces the flat payload for reassemble_chunks.
             out: list = []
             for chunks in per_channel:
                 out.extend(chunks)
             return out
 
-        self._spawn_joiner(issue, assemble, "tx", int(arr.nbytes),
+        self._spawn_joiner(issue, channels, assemble, "tx", int(arr.nbytes),
                            len(stripes), master, ticket_out, callback, t0)
         return Ticket(master, ticket_out)
 
@@ -578,22 +825,25 @@ class ChannelGroup:
                 arrays, callback=self._delegated("rx", nbytes, len(arrays),
                                                  callback),
                 out=outs if out is not None else None, priority=priority)
-        # greedy least-loaded assignment (bytes-balanced striping)
-        assign: list[list[int]] = [[] for _ in range(self.n_channels)]
-        loads = [0] * self.n_channels
+        # greedy least-loaded assignment over the ACTIVE channels
+        # (bytes-balanced striping; quarantined rings take no stripes)
+        active = self._active_indices()
+        assign: list[list[int]] = [[] for _ in active]
+        loads = [0] * len(active)
         for i, a in enumerate(arrays):
-            c = min(range(self.n_channels), key=loads.__getitem__)
+            c = min(range(len(active)), key=loads.__getitem__)
             assign[c].append(i)
             loads[c] += int(a.size) * a.dtype.itemsize
         master = threading.Event()
         ticket_out: list = []
         t0 = time.perf_counter()
-        used = [(c, idxs) for c, idxs in enumerate(assign) if idxs]
-        issue = [lambda c=c, idxs=idxs: self.engines[c].rx_async(
+        used = [(active[c], idxs) for c, idxs in enumerate(assign) if idxs]
+        issue = [lambda eng, idxs=idxs: eng.rx_async(
             [arrays[i] for i in idxs],
             out=([outs[i] for i in idxs] if out is not None else None),
             priority=priority)
-            for c, idxs in used]
+            for _c, idxs in used]
+        channels = [c for c, _idxs in used]
 
         def assemble(per_channel: list) -> list:
             results: list = [None] * len(arrays)
@@ -602,8 +852,8 @@ class ChannelGroup:
                     results[i] = o
             return results
 
-        self._spawn_joiner(issue, assemble, "rx", nbytes, len(arrays), master,
-                           ticket_out, callback, t0)
+        self._spawn_joiner(issue, channels, assemble, "rx", nbytes,
+                           len(arrays), master, ticket_out, callback, t0)
         return Ticket(master, ticket_out)
 
     def rx(self, device_arrays: Sequence[jax.Array],
@@ -627,4 +877,12 @@ class ChannelGroup:
             return {"us_per_byte": tot_t * 1e6 / max(tot_b, 1),
                     "gbps": tot_b / max(tot_t, 1e-12) / 1e9}
 
-        return {"tx": agg(tx), "rx": agg(rx)}
+        return {"tx": agg(tx), "rx": agg(rx),
+                "faults": self.fault_state.summary(),
+                "quarantined": sorted(self.quarantined)}
+
+    def fault_summary(self) -> dict[str, object]:
+        """The group's fault ledger + current quarantine set (the uniform
+        fault surface shared with AdaptiveChannelGroup / ServingEngine)."""
+        return {"faults": self.fault_state.summary(),
+                "quarantined": sorted(self.quarantined)}

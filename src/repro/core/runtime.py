@@ -190,6 +190,25 @@ def _pct(samples: "collections.deque[float] | list[float]", q: float) -> float:
     return s[idx]
 
 
+class TransferFaultError(RuntimeError):
+    """A transfer failed in a way the channel layer may RETRY on a sibling
+    ring: injected faults, checksum mismatches and descriptor timeouts all
+    derive from this. Structural errors (closed engine, bad payload) stay
+    plain RuntimeError/ValueError and are never retried."""
+
+
+class TransferTimeoutError(TransferFaultError):
+    """A descriptor (or a ticket waiting on one) blew its deadline — the
+    repro of a dropped DMA completion surfacing as an error instead of a
+    hang. Raised by ``Ticket.wait(timeout=)`` and by the runtime's
+    :meth:`TransferRuntime.scan_timeouts` cancellation path."""
+
+
+class TransferChecksumError(TransferFaultError):
+    """Per-descriptor crc32 verification failed on RX
+    (``TransferPolicy.checksum``): the payload landed, but corrupted."""
+
+
 @dataclass
 class ClassStats:
     """Per-class accounting: counts/bytes exact, latencies windowed."""
@@ -207,6 +226,15 @@ class ClassStats:
     # scheduler passes where this class had queued work but its token
     # bucket was empty (deferred by its bandwidth cap).
     cap_deferrals: int = 0
+    # fault-handling ledger (PR 6): descriptors cancelled by the timeout
+    # scan / ticket deadline, faults observed (injected or organic, incl.
+    # checksum mismatches), stripe retries issued by the channel layer,
+    # and channels pulled from rotation. Engines and groups report these
+    # via note_fault(); serving surfaces read them off class_summary().
+    timeouts: int = 0
+    faults: int = 0
+    retries: int = 0
+    quarantines: int = 0
     dispatch_lat_s: "collections.deque[float]" = field(
         default_factory=lambda: collections.deque(maxlen=_LAT_WINDOW))
     service_lat_s: "collections.deque[float]" = field(
@@ -228,6 +256,10 @@ class ClassStats:
             "deadline_promotions": self.deadline_promotions,
             "preemptions": self.preemptions,
             "cap_deferrals": self.cap_deferrals,
+            "timeouts": self.timeouts,
+            "faults": self.faults,
+            "retries": self.retries,
+            "quarantines": self.quarantines,
             "dispatch_p50_ms": _pct(self.dispatch_lat_s, 0.5) * 1e3,
             "dispatch_p99_ms": _pct(self.dispatch_lat_s, 0.99) * 1e3,
             "service_p50_ms": _pct(self.service_lat_s, 0.5) * 1e3,
@@ -880,6 +912,68 @@ class TransferRuntime:
             fn = self._next_background_locked()
         if fn is not None:
             self._run_background(fn)
+
+    # -- fault handling ------------------------------------------------------
+    def note_fault(self, cls: PriorityClass, *, faults: int = 0,
+                   retries: int = 0, timeouts: int = 0,
+                   quarantines: int = 0) -> None:
+        """Fold fault-layer events observed OUTSIDE the runtime (engine
+        checksum failures, channel-group stripe retries, quarantines) into
+        the per-class ledger, so ``class_summary()`` is the one place a
+        serving stack reads deadline-miss and retry rates from."""
+        with self._cond:
+            st = self.stats[cls]
+            st.faults += faults
+            st.retries += retries
+            st.timeouts += timeouts
+            st.quarantines += quarantines
+
+    def scan_timeouts(self, max_age_s: float) -> int:
+        """Cancel every still-QUEUED descriptor older than ``max_age_s``,
+        completing it with :class:`TransferTimeoutError` — the runtime-level
+        escalation behind ``Ticket.wait(timeout=)``: a dropped completion
+        becomes an error the caller can retry instead of a hang.
+
+        Only descriptors that never started are cancellable (dispatch is
+        non-preemptive, and a parked PreemptibleWork holds mid-chunk
+        iterator state plus a ring slot charged at first dispatch — killing
+        it here would double-release). An in-service descriptor that never
+        returns is the one failure this scan cannot unstick; the injector
+        never models it as unbounded for exactly that reason. Returns the
+        number of descriptors timed out."""
+        timed_out: list[_Descriptor] = []
+        now = time.monotonic()
+        with self._cond:
+            for cls, q in self._queues.items():
+                keep = collections.deque()
+                while q:
+                    d = q.popleft()
+                    if not d.started and now - d.t_submit > max_age_s:
+                        d.handle._outstanding -= 1
+                        st = self.stats[cls]
+                        st.cancelled += 1
+                        st.timeouts += 1
+                        timed_out.append(d)
+                    else:
+                        keep.append(d)
+                q.extend(keep)
+            if timed_out:
+                self._cond.notify_all()
+        # outside the lock: done.set + on_cancel run submitter-side protocol
+        # (ring slot release, master-ticket errors) that takes engine locks.
+        for d in timed_out:
+            err = TransferTimeoutError(
+                f"descriptor ({d.cls.value}, {d.nbytes} B) queued "
+                f"{now - d.t_submit:.3f}s > {max_age_s:.3f}s — completion "
+                "presumed dropped")
+            d.out.append(err)
+            d.done.set()
+            if d.on_cancel is not None:
+                try:
+                    d.on_cancel(err)
+                except BaseException:
+                    pass  # the error already reached the out list
+        return len(timed_out)
 
     # -- teardown ------------------------------------------------------------
     def _cancel_handle_locked(self, handle: RuntimeHandle

@@ -63,6 +63,7 @@ import enum
 import math
 import threading
 import time
+import zlib
 from dataclasses import dataclass, replace
 from typing import Any, Callable, Sequence
 
@@ -74,9 +75,20 @@ from repro.core.runtime import (
     PreemptibleWork,
     PriorityClass,
     RuntimeHandle,
+    TransferChecksumError,
+    TransferFaultError,
     TransferRuntime,
+    TransferTimeoutError,
     get_runtime,
 )
+
+__all__ = [  # re-exports: the fault taxonomy lives in runtime (no cycle)
+    "Management", "Buffering", "Partitioning", "TransferPolicy",
+    "TransferStats", "TransferEngine", "Ticket", "StagedLayout",
+    "LayoutCache", "BufferInFlightError", "TransferFaultError",
+    "TransferTimeoutError", "TransferChecksumError", "reassemble_chunks",
+    "carve_flat_out",
+]
 
 # Per-engine rolling window of (direction, management, nbytes, seconds)
 # chunk samples — the online cost-model refit (repro.core.adaptive) fits
@@ -133,6 +145,19 @@ class TransferPolicy:
     # the fitted cost model (:meth:`~repro.core.cost_model.
     # TransferCostModel.preempt_chunk_bytes`) in adaptive plans.
     preempt_chunk_bytes: int = 0
+    # opt-in end-to-end integrity: crc32 per descriptor, verified when the
+    # RX payload lands on the host. A mismatch raises
+    # :class:`~repro.core.runtime.TransferChecksumError` (a retryable
+    # TransferFaultError — the channel layer resubmits the stripe on a
+    # sibling ring). On real HW the expected crc rides the TX-computed
+    # descriptor metadata; on this backend it is computed from the device
+    # buffer just before the landing copy.
+    checksum: bool = False
+    # per-descriptor deadline for the engine's own INTERNAL ticket waits
+    # (the ring back-pressure waits inside sync tx/rx): None = unbounded
+    # (pre-fault-layer behaviour). Callers of the async API bound their own
+    # waits via ``Ticket.wait(timeout=)``.
+    descriptor_timeout_s: float | None = None
 
     def __post_init__(self) -> None:
         if self.ring_depth < 0:
@@ -143,6 +168,11 @@ class TransferPolicy:
             raise ValueError(
                 f"preempt_chunk_bytes must be >= 0, got "
                 f"{self.preempt_chunk_bytes}")
+        if (self.descriptor_timeout_s is not None
+                and self.descriptor_timeout_s <= 0):
+            raise ValueError(
+                f"descriptor_timeout_s must be positive or None, got "
+                f"{self.descriptor_timeout_s}")
 
     @property
     def depth(self) -> int:
@@ -224,14 +254,35 @@ def _payload_nbytes(payload: Any, direction: str) -> int:
 
 
 class Ticket:
-    """Handle for an in-flight INTERRUPT-mode transfer."""
+    """Handle for an in-flight INTERRUPT-mode transfer.
 
-    def __init__(self, done: threading.Event, out: list):
+    ``wait(timeout=)`` bounds the wait: past the deadline it escalates to
+    the issuing engine's runtime-level timeout scan (``on_timeout``) —
+    still-queued stale descriptors are cancelled with
+    :class:`~repro.core.runtime.TransferTimeoutError`, which then surfaces
+    here — and raises ``TransferTimeoutError`` itself if the descriptor is
+    stuck in service (the one state a scan cannot unstick). A lost
+    completion is an error the caller can retry, never a hang."""
+
+    def __init__(self, done: threading.Event, out: list,
+                 on_timeout: Callable[[float], None] | None = None):
         self._done = done
         self._out = out
+        self._on_timeout = on_timeout
 
-    def wait(self) -> Any:
-        self._done.wait()
+    def wait(self, timeout: float | None = None) -> Any:
+        if not self._done.wait(timeout):
+            if self._on_timeout is not None:
+                try:
+                    self._on_timeout(timeout)
+                except Exception:
+                    pass  # escalation is best-effort; we raise below anyway
+            # the scan completes cancelled tickets synchronously; a short
+            # grace covers a completion racing the deadline.
+            if not self._done.wait(0.05):
+                raise TransferTimeoutError(
+                    f"ticket not complete after {timeout:.3f}s (descriptor "
+                    "in service or completion dropped)")
         result = self._out[0]
         if isinstance(result, BaseException):
             raise result
@@ -556,6 +607,14 @@ class TransferEngine:
         # and the refit consumer need no extra lock here.
         self.chunk_samples: "collections.deque[tuple[str, str, int, float]]" \
             = collections.deque(maxlen=_CHUNK_SAMPLE_WINDOW)
+        # monotone count of chunk samples ever taken: per-channel health
+        # monitors PEEK the newest (chunk_seq - last_seen) entries instead
+        # of popping, so they can coexist with the destructive
+        # ingest_chunks() refit consumer. Guarded by _stats_lock.
+        self.chunk_seq = 0
+        # fault-layer ledger (exact lifetime totals, under _stats_lock)
+        self.checksum_failures = 0
+        self.chunks_cancelled = 0  # chunks skipped after a sibling's error
         self._runtime = runtime
         self._handle: RuntimeHandle | None = None
         self._handle_lock = threading.Lock()  # concurrent first-submit must
@@ -594,17 +653,27 @@ class TransferEngine:
             self._runtime = get_runtime()
         return self._runtime
 
-    def close(self) -> None:
-        """Drain this engine's in-flight descriptors and deregister from
-        the shared runtime, so a late completion can never fire into a
-        dead engine. Idempotent; the engine rejects submissions after."""
+    def close(self, timeout: float = 5.0) -> None:
+        """Drain this engine's in-flight descriptors (bounded by
+        ``timeout`` — stragglers are cancelled, never waited on forever)
+        and deregister from the shared runtime, so a late completion can
+        never fire into a dead engine. Idempotent; the engine rejects
+        submissions after."""
         with self._handle_lock:
             if self._closed:
                 return
             self._closed = True
             h, self._handle = self._handle, None
         if h is not None:
-            h.close()
+            h.close(timeout)
+
+    def _escalate_timeout(self, waited_s: float | None) -> None:
+        """Ticket.wait(timeout=) deadline blew: run the runtime-level
+        timeout scan so a dropped completion resolves every ticket staged
+        behind it (TransferTimeoutError, not a hang)."""
+        rt = self._runtime
+        if rt is not None and waited_s is not None:
+            rt.scan_timeouts(max(float(waited_s), 1e-3))
 
     def maybe_adapt(self, *, force: bool = False) -> bool:
         """Engine-surface hook for safe-point adaptation. A plain engine
@@ -768,19 +837,43 @@ class TransferEngine:
                   host.reshape(-1).view(np.uint8))
         return out
 
+    @staticmethod
+    def _crc32(arr: np.ndarray) -> int:
+        return zlib.crc32(
+            np.ascontiguousarray(arr).reshape(-1).view(np.uint8))
+
     def _one_timed(self, payload, direction: str,
                    out: np.ndarray | None = None):
         """_one plus a (direction, mode, nbytes, seconds) chunk sample —
-        the per-descriptor timings the online refit fits t0/BW from."""
+        the per-descriptor timings the online refit fits t0/BW from.
+        With ``policy.checksum`` the RX landing is crc32-verified against
+        the device buffer (outside the timed region: integrity work must
+        not pollute the bandwidth fit)."""
         if direction == "tx":
             nbytes = int(np.asarray(payload).nbytes)
         else:
             nbytes = int(payload.size) * payload.dtype.itemsize
+        verify = direction == "rx" and self.policy.checksum
+        if verify:
+            # on real HW this crc is TX-side descriptor metadata; here the
+            # reference is the device buffer just before the landing copy.
+            expect = self._crc32(np.asarray(jax.device_get(payload)))
         t0 = time.perf_counter()
         r = self._one(payload, direction, out)
+        dt = time.perf_counter() - t0
         self.chunk_samples.append(
-            (direction, self.policy.management.value, nbytes,
-             time.perf_counter() - t0))
+            (direction, self.policy.management.value, nbytes, dt))
+        with self._stats_lock:
+            self.chunk_seq += 1
+        if verify and self._crc32(np.asarray(r)) != expect:
+            with self._stats_lock:
+                self.checksum_failures += 1
+            rt = self._runtime
+            if rt is not None:
+                rt.note_fault(self.priority, faults=1)
+            raise TransferChecksumError(
+                f"rx descriptor failed crc32 verification ({nbytes} B); "
+                "payload corrupted in flight")
         return r
 
     def _run_chunks(self, items: list[tuple[Any, str, Any]],
@@ -831,13 +924,22 @@ class TransferEngine:
         handle = self._runtime_handle()
         depth = self.policy.depth
         cls = priority or self.priority
+        wait_s = self.policy.descriptor_timeout_s
         tickets: list[Ticket | None] = [None] * len(items)
         results: list = [None] * len(items)
         inflight: list[int] = []
+        first_err: BaseException | None = None
         for i, (payload, direction, dst) in enumerate(items):
-            while len(inflight) >= depth:
+            while len(inflight) >= depth and first_err is None:
                 j = inflight.pop(0)
-                results[j] = tickets[j].wait()
+                try:
+                    results[j] = tickets[j].wait(wait_s)
+                except BaseException as e:
+                    # do NOT leave with own chunks still in service: stop
+                    # submitting, drain the rest below, then raise.
+                    first_err = e
+            if first_err is not None:
+                break
             idx, release = self._acquire_buffer()
 
             segs = self._preempt_segments_for(payload, direction, cls)
@@ -867,17 +969,24 @@ class TransferEngine:
                     priority=priority,
                     on_cancel=lambda err, idx=idx, release=release:
                         self._release_buffer(idx, release))
-            except BaseException:
+            except BaseException as e:
                 self._release_buffer(idx, release)
-                raise  # already-submitted chunks complete on their own
-            tickets[i] = Ticket(done, out)
+                first_err = e  # drain already-submitted chunks, then raise
+                break
+            tickets[i] = Ticket(done, out, on_timeout=self._escalate_timeout)
             inflight.append(i)
             with self._ring_lock:
                 # under the ring lock: racing _acquire_buffer also updates
                 # this high-water mark, and lost updates hide depth bugs.
                 self.max_inflight = max(self.max_inflight, len(inflight))
         for j in inflight:
-            results[j] = tickets[j].wait()
+            try:
+                results[j] = tickets[j].wait(wait_s)
+            except BaseException as e:
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
         return _flatten_chunk_results(results)
 
     # -- async API (INTERRUPT only): returns a ticket, caller is "interrupted"
@@ -910,6 +1019,10 @@ class TransferEngine:
         # comparable with the synchronous paths across PRs).
         state = {"remaining": len(payloads), "error": None, "t0": None}
         state_lock = threading.Lock()
+        # first chunk error aborts the chain: chunks still queued behind it
+        # short-circuit on dispatch (counted in ``chunks_cancelled``)
+        # instead of moving bytes for a transfer that already failed.
+        aborted = threading.Event()
 
         # Mark the staging buffer busy BEFORE any descriptor is submitted: a
         # re-pack racing this call could otherwise slip between submit() and
@@ -923,6 +1036,8 @@ class TransferEngine:
             return Ticket(master, ticket_out)
 
         def finish_one(err: BaseException | None) -> None:
+            if err is not None:
+                aborted.set()
             with state_lock:
                 if err is not None and state["error"] is None:
                     state["error"] = err
@@ -957,6 +1072,18 @@ class TransferEngine:
 
             def work(i=i, p=payload, o=dst, idx=idx, release=release):
                 err = None
+                if aborted.is_set():
+                    # a sibling chunk already failed the master ticket:
+                    # skip the payload move, release the slot, and step the
+                    # completion protocol with a non-primary error (the
+                    # sibling's error stays first in ticket_out).
+                    with self._stats_lock:
+                        self.chunks_cancelled += 1
+                    self._release_buffer(idx, release)
+                    finish_one(RuntimeError(
+                        "chunk cancelled: sibling chunk of this transfer "
+                        "failed"))
+                    return None
                 with state_lock:
                     if state["t0"] is None:
                         state["t0"] = time.perf_counter()
@@ -986,6 +1113,15 @@ class TransferEngine:
                 # takes ``cancelled`` instead.
                 def seg_thunk(s):
                     def run():
+                        if aborted.is_set():
+                            # raising aborts the PreemptibleWork; its
+                            # finalize releases the slot + steps the master
+                            # ticket (the sibling's error stays first).
+                            with self._stats_lock:
+                                self.chunks_cancelled += 1
+                            raise RuntimeError(
+                                "chunk cancelled: sibling chunk of this "
+                                "transfer failed")
                         with state_lock:
                             if state["t0"] is None:
                                 state["t0"] = time.perf_counter()
@@ -1018,7 +1154,7 @@ class TransferEngine:
                 for _ in range(len(payloads) - i):
                     finish_one(e)
                 break
-        return Ticket(master, ticket_out)
+        return Ticket(master, ticket_out, on_timeout=self._escalate_timeout)
 
     def tx_async(self, host_array: np.ndarray,
                  callback: Callable[[list], None] | None = None,
@@ -1066,4 +1202,6 @@ class TransferEngine:
             tot_t = sum(s.wall_s for s in ss)
             return {"us_per_byte": tot_t * 1e6 / max(tot_b, 1),
                     "gbps": tot_b / max(tot_t, 1e-12) / 1e9}
-        return {"tx": agg(tx), "rx": agg(rx)}  # type: ignore[return-value]
+        return {"tx": agg(tx), "rx": agg(rx),  # type: ignore[return-value]
+                "checksum_failures": self.checksum_failures,
+                "chunks_cancelled": self.chunks_cancelled}

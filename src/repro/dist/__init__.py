@@ -11,7 +11,11 @@ NamedShardings on the production meshes.
 """
 
 from repro.dist.elastic import MeshPlan, reshard_plan, shrink_mesh  # noqa: F401
-from repro.dist.fault import FaultPolicy, FaultState  # noqa: F401
+from repro.dist.fault import (  # noqa: F401
+    FaultPolicy,
+    FaultState,
+    TransferFaultState,
+)
 from repro.dist.sharding import (  # noqa: F401
     batch_sharding_tree,
     cache_sharding,

@@ -1,15 +1,24 @@
 """Fault policy and per-run fault-event accounting.
 
-Used by :class:`repro.train.loop.Trainer`: every step's wall time and
-finite-ness verdict flow through :meth:`FaultState.record_step`, which flags
-stragglers (z-score over a rolling window, via
-:class:`repro.utils.timing.StepClock`) and counts steps the optimizer
-skipped because of non-finite gradients. Restart counting is incremented by
-the loop when it resumes from a checkpoint.
+Two consumers share this module:
+
+- :class:`repro.train.loop.Trainer` — every step's wall time and
+  finite-ness verdict flow through :meth:`FaultState.record_step`, which
+  flags stragglers (z-score over a rolling window, via
+  :class:`repro.utils.timing.StepClock`) and counts steps the optimizer
+  skipped because of non-finite gradients. Restart counting is incremented
+  by the loop when it resumes from a checkpoint.
+- the transfer stack's self-healing layer (``repro.core.faults`` and the
+  channel-group retry/quarantine machinery) — :class:`TransferFaultState`
+  is its ledger: one thread-safe counter block per engine/group recording
+  descriptor timeouts, stripe retries, checksum failures and channel
+  quarantine transitions, so serving engines can expose deadline-miss and
+  retry rates without reaching into channel internals.
 """
 
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 from repro.utils.timing import StepClock
@@ -62,3 +71,65 @@ class FaultState:
             "stragglers": self.stragglers_detected,
             "skipped_nonfinite": self.steps_skipped_nonfinite,
         }
+
+
+class TransferFaultState:
+    """Thread-safe fault ledger for one transfer surface (engine / channel
+    group / adaptive facade — an adaptive facade hands ONE instance to every
+    plan generation, so counters survive safe-point swaps).
+
+    Counter semantics: ``faults`` is every observed fault event (injected
+    or organic — timeouts and checksum failures are also counted in their
+    own columns); ``retries``/``retry_successes`` track the channel layer's
+    resubmit-on-sibling path; ``quarantines``/``unquarantines`` count
+    rotation transitions. ``faults_by_channel`` attributes events to the
+    channel index that raised them."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.faults = 0
+        self.timeouts = 0
+        self.checksum_failures = 0
+        self.retries = 0
+        self.retry_successes = 0
+        self.quarantines = 0
+        self.unquarantines = 0
+        self.faults_by_channel: dict[int, int] = {}
+
+    def record_fault(self, channel: int | None = None, *,
+                     timeout: bool = False, checksum: bool = False) -> None:
+        with self._lock:
+            self.faults += 1
+            if timeout:
+                self.timeouts += 1
+            if checksum:
+                self.checksum_failures += 1
+            if channel is not None:
+                self.faults_by_channel[channel] = (
+                    self.faults_by_channel.get(channel, 0) + 1)
+
+    def record_retry(self, *, success: bool) -> None:
+        with self._lock:
+            self.retries += 1
+            if success:
+                self.retry_successes += 1
+
+    def record_quarantine(self, channel: int, *, on: bool) -> None:
+        with self._lock:
+            if on:
+                self.quarantines += 1
+            else:
+                self.unquarantines += 1
+
+    def summary(self) -> dict[str, int | dict[int, int]]:
+        with self._lock:
+            return {
+                "faults": self.faults,
+                "timeouts": self.timeouts,
+                "checksum_failures": self.checksum_failures,
+                "retries": self.retries,
+                "retry_successes": self.retry_successes,
+                "quarantines": self.quarantines,
+                "unquarantines": self.unquarantines,
+                "faults_by_channel": dict(self.faults_by_channel),
+            }

@@ -72,12 +72,17 @@ class ContinuousBatchingEngine:
     def __init__(self, model: Model, params: Any, *, n_slots: int = 4,
                  max_seq: int = 256, eos_token: int = -1,
                  transfer: "TransferEngine | Any | None" = None,
-                 class_caps: "dict[str, float] | None" = None):
+                 class_caps: "dict[str, float] | None" = None,
+                 rx_timeout_s: float | None = 60.0):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.eos = eos_token
+        # liveness bound on every decoded-token RX wait: a lost completion
+        # becomes TransferTimeoutError instead of freezing the whole batch
+        # (None = unbounded, the pre-fault-layer behaviour).
+        self.rx_timeout_s = rx_timeout_s
         # token movement (prompt TX, decoded-token RX) on a real engine —
         # callers may hand in a shared TransferEngine or ChannelGroup, which
         # close() then leaves alone (we only close what we created).
@@ -173,7 +178,7 @@ class ContinuousBatchingEngine:
                   if self.transfer.policy.management is Management.INTERRUPT
                   else None)
         self.tokens = tok_dev[:, None].astype(jnp.int32)
-        nxt = ticket.wait()[0] if ticket else self.transfer.rx(
+        nxt = ticket.wait(self.rx_timeout_s)[0] if ticket else self.transfer.rx(
             [tok_dev], out=out, priority=PriorityClass.TOKEN)[0]
         nxt = np.asarray(nxt).reshape(-1)
         for slot in active:
@@ -194,6 +199,21 @@ class ContinuousBatchingEngine:
             if self.step() == 0 and not self.queue:
                 break
         return self.completed
+
+    def fault_summary(self) -> dict[str, Any]:
+        """Deadline-miss / retry / quarantine rates of the transfer surface
+        (zeroed recovery columns on a bare engine — no sibling channels)."""
+        f = getattr(self.transfer, "fault_summary", None)
+        if f is not None:
+            return f()
+        s = self.transfer.summary()
+        csf = int(s.get("checksum_failures", 0))
+        return {"faults": {"faults": csf, "timeouts": 0,
+                           "checksum_failures": csf,
+                           "retries": 0, "retry_successes": 0,
+                           "quarantines": 0, "unquarantines": 0,
+                           "faults_by_channel": {}},
+                "quarantined": []}
 
     def close(self) -> None:
         if self._owns_transfer:

@@ -64,6 +64,11 @@ class ServeConfig:
     # (post-cap) bandwidth of its own class. Requires INTERRUPT management
     # (the default policies here all are).
     class_caps: "dict[str, float] | None" = None
+    # deadline on every decoded-token RX wait: a lost completion surfaces
+    # as TransferTimeoutError after this long instead of hanging the
+    # decode loop forever (None restores unbounded waits). Generous by
+    # default — it is a liveness bound, not a latency SLO.
+    rx_timeout_s: float | None = 60.0
 
 
 @dataclass
@@ -137,6 +142,25 @@ class ServingEngine:
     def close(self) -> None:
         self.engine.close()
 
+    def fault_summary(self) -> dict[str, Any]:
+        """Fault / recovery rates of the transfer surface behind this
+        engine: deadline misses (timeouts), stripe retries + successes,
+        checksum failures, quarantine transitions. Channel groups and
+        adaptive facades report their shared ledger; a bare engine reports
+        its own counters with the recovery columns zeroed (no sibling to
+        retry on)."""
+        f = getattr(self.engine, "fault_summary", None)
+        if f is not None:
+            return f()
+        s = self.engine.summary()
+        csf = int(s.get("checksum_failures", 0))
+        return {"faults": {"faults": csf, "timeouts": 0,
+                           "checksum_failures": csf,
+                           "retries": 0, "retry_successes": 0,
+                           "quarantines": 0, "unquarantines": 0,
+                           "faults_by_channel": {}},
+                "quarantined": []}
+
     def _sample(self, logits: jax.Array) -> jax.Array:
         logits = logits[:, -1, : self.model.cfg.vocab]
         if self.cfg.temperature <= 0:
@@ -194,7 +218,7 @@ class ServingEngine:
                     [tok], out=[self._tok_buf[step + 1]],
                     priority=PriorityClass.TOKEN))
             for t in tickets:
-                t.wait()
+                t.wait(self.cfg.rx_timeout_s)
             toks = self._tok_buf.T
         else:
             for step in range(max_new_tokens):
