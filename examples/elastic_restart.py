@@ -6,7 +6,6 @@ latest checkpoint, then re-plan the mesh for a degraded device set.
 
 import shutil
 
-import jax
 
 from repro.configs.registry import smoke_config
 from repro.core.transfer import TransferPolicy

@@ -3,7 +3,6 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
 import numpy as np
 
 from repro.configs.registry import smoke_config

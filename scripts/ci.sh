@@ -2,13 +2,18 @@
 # Tier-1 verification + transfer-bench smoke runs, so the benchmarks can't
 # silently rot. One entrypoint for local runs AND .github/workflows/ci.yml:
 #
-#   bash scripts/ci.sh                  # everything (fast + stress + smoke + chaos)
+#   bash scripts/ci.sh                  # everything (fast + stress + smoke + chaos + lint)
 #   bash scripts/ci.sh --lane fast      # pytest -m "not stress"
-#   bash scripts/ci.sh --lane stress    # pytest -m "stress" (concurrency)
+#   bash scripts/ci.sh --lane stress    # pytest -m "stress" (concurrency),
+#                                       # with REPRO_VALIDATE_LOCKS=1 so every
+#                                       # stress run doubles as a lock-order /
+#                                       # guarded-by runtime check
 #   bash scripts/ci.sh --lane smoke     # --quick benchmark smokes + the
 #                                       # check_bench.py regression gate
 #   bash scripts/ci.sh --lane chaos     # fault-injection suite + the
 #                                       # fault_recovery >=80% throughput gate
+#   bash scripts/ci.sh --lane lint      # ruff (if installed) + the concurrency
+#                                       # analyzer (repro.analysis --fail-on-new)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,11 +21,11 @@ lane="all"
 while [[ $# -gt 0 ]]; do
   case "$1" in
     --lane)
-      lane="${2:?--lane needs fast|stress|smoke|chaos}"
+      lane="${2:?--lane needs fast|stress|smoke|chaos|lint}"
       shift 2
       ;;
     *)
-      echo "unknown argument: $1 (usage: ci.sh [--lane fast|stress|smoke|chaos])" >&2
+      echo "unknown argument: $1 (usage: ci.sh [--lane fast|stress|smoke|chaos|lint])" >&2
       exit 2
       ;;
   esac
@@ -35,7 +40,9 @@ run_fast() {
 
 run_stress() {
   echo "== stress lane: pytest -m 'stress' (incl. 4-class runtime hammer) =="
-  python -m pytest -x -q -m "stress"
+  # instrumented locks: record real acquisition order, fail the lane on a
+  # lock-order inversion or a requires-lock breach (repro.analysis.validated)
+  REPRO_VALIDATE_LOCKS=1 python -m pytest -x -q -m "stress"
 }
 
 run_smoke() {
@@ -63,14 +70,27 @@ run_chaos() {
   python benchmarks/fault_recovery.py --quick
 }
 
+run_lint() {
+  if command -v ruff >/dev/null 2>&1; then
+    echo "== lint: ruff check =="
+    ruff check src tests benchmarks scripts
+  else
+    echo "== lint: ruff not installed; skipping (CI installs it via requirements-dev.txt) =="
+  fi
+
+  echo "== lint: concurrency analyzer (lock-order / guarded-by / blocking) =="
+  python -m repro.analysis src --baseline analysis_baseline.json --fail-on-new
+}
+
 case "$lane" in
   fast)   run_fast ;;
   stress) run_stress ;;
   smoke)  run_smoke ;;
   chaos)  run_chaos ;;
-  all)    run_fast; run_stress; run_smoke; run_chaos ;;
+  lint)   run_lint ;;
+  all)    run_lint; run_fast; run_stress; run_smoke; run_chaos ;;
   *)
-    echo "unknown lane: $lane (want fast|stress|smoke|chaos)" >&2
+    echo "unknown lane: $lane (want fast|stress|smoke|chaos|lint)" >&2
     exit 2
     ;;
 esac

@@ -14,7 +14,7 @@ or monolithically via :meth:`RoShamBoCNN.apply` (fused oracle).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

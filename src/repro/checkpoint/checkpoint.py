@@ -26,6 +26,7 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.analysis.validated import make_lock
 from repro.core.runtime import DedicatedWorkerPool
 from repro.core.transfer import Ticket
 
@@ -107,12 +108,12 @@ class CheckpointManager:
     every: int = 100
     keep: int = 3
     async_write: bool = True
-    _pending: Ticket | None = None
+    _pending: Ticket | None = None  # guarded-by: _lock
     _lock: threading.Lock = None  # type: ignore[assignment]
     _pool: DedicatedWorkerPool = None  # type: ignore[assignment]
 
     def __post_init__(self):
-        self._lock = threading.Lock()
+        self._lock = make_lock("CheckpointManager._lock")
         # one DEDICATED writer worker per manager: a multi-second write
         # must never occupy a shared TransferRuntime worker (that is
         # the head-of-line blocking the runtime's QoS exists to stop)
@@ -131,13 +132,17 @@ class CheckpointManager:
         done, out = self._pool.submit(
             lambda: save_checkpoint(self.directory, step, flat_state,
                                     keep=self.keep))
-        self._pending = Ticket(done, out)
+        with self._lock:
+            self._pending = Ticket(done, out)
         return True
 
     def wait(self) -> None:
         with self._lock:
             if self._pending is not None:
-                self._pending.wait()
+                # the lock IS the never-two-writers rule: a second saver
+                # must queue behind the in-flight write, and only
+                # maybe_save/wait ever contend on this lock.
+                self._pending.wait()  # lock-ok: serializes writers by design
                 self._pending = None
 
     def restore_latest(self, template: Any):

@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import importlib
-from typing import Callable
 
 from repro.models.config import ModelConfig
 

@@ -65,6 +65,7 @@ from typing import Any, Callable, Sequence
 import jax
 import numpy as np
 
+from repro.analysis.validated import assert_held, make_lock, make_rlock
 from repro.core.channels import (
     ChannelGroup,
     ChannelPlan,
@@ -129,12 +130,12 @@ class RollingFit:
 
     def __init__(self, window: int = 256, ewma_halflife: float = 32,
                  min_size_spread: float = 4.0, ttl_s: float = 5.0):
+        self._lock = make_lock("RollingFit._lock")
         self._samples: "collections.deque[tuple[int, float, float]]" = (
-            collections.deque(maxlen=window))
+            collections.deque(maxlen=window))  # guarded-by: _lock
         self.ewma_halflife = max(float(ewma_halflife), 1.0)
         self.min_size_spread = min_size_spread
         self.ttl_s = float(ttl_s)
-        self._lock = threading.Lock()
 
     def add(self, nbytes: int, seconds: float) -> None:
         if nbytes <= 0 or seconds <= 0:
@@ -259,9 +260,13 @@ class OnlineTransferController:
                  cfg: AdaptiveConfig | None = None,
                  device: jax.Device | None = None):
         self.cfg = cfg or AdaptiveConfig()
+        # RLock: propose() holds it end-to-end (plan/counter updates must
+        # be atomic across concurrent submitters) and calls _fit_for, which
+        # also guards the fits dict for the sample-ingestion paths.
+        self._lock = make_rlock("OnlineTransferController._lock")
         if model is None:
             model = calibrate_transfer(device)
-        self.plan: ChannelPlan = plan_channels(
+        self.plan: ChannelPlan = plan_channels(  # guarded-by: _lock
             payload_bytes, model=model, max_channels=self.cfg.max_channels,
             completion_workers=self.cfg.completion_workers,
             preempt_target_s=self.cfg.preempt_target_s)
@@ -269,37 +274,34 @@ class OnlineTransferController:
         # adopted under. RX gets its own reference — serving decode is
         # RX-dominated, and TX-only drift detection would never see an
         # RX slowdown (the ring/block policy governs both directions).
-        self._tx_ref: TransferCostModel = model
-        self._rx_ref: TransferCostModel | None = None
-        self._fits: dict[tuple[str, str], RollingFit] = {}
+        self._tx_ref: TransferCostModel = model  # guarded-by: _lock
+        self._rx_ref: TransferCostModel | None = None  # guarded-by: _lock
+        self._fits: dict[tuple[str, str], RollingFit] = {}  # guarded-by: _lock
+        # guarded-by: _lock
         self._payloads: "collections.deque[int]" = collections.deque(maxlen=32)
         self._payloads.append(max(int(payload_bytes), 1))
-        # RLock: propose() holds it end-to-end (plan/counter updates must
-        # be atomic across concurrent submitters) and calls _fit_for, which
-        # also guards the fits dict for the sample-ingestion paths.
-        self._lock = threading.RLock()
-        self._since_refit = 0
-        self._has_logical = False  # logical stats flowing? they own cadence
+        self._since_refit = 0  # guarded-by: _lock
+        self._has_logical = False  # guarded-by: _lock (stats own cadence)
         # EWMA of the shared runtime's per-class dispatch latency for this
         # stream — the interrupt driver's measured queue-wait, folded into
         # the crossover decision (see choose_management).
-        self._dispatch_t0_s = 0.0
+        self._dispatch_t0_s = 0.0  # guarded-by: _lock
         # enforced bytes/s ceiling on this stream's priority class (the
         # runtime's set_class_cap): plans are sized against the EFFECTIVE
         # (post-cap) bandwidth — a capped stream must not chase block/
         # channel choices tuned for throughput it is not allowed to have.
         # Drift detection still runs on the RAW fits (the link itself did
         # not change when an operator set a cap).
-        self._bw_cap_Bps: float | None = None
+        self._bw_cap_Bps: float | None = None  # guarded-by: _lock
         # healthy-channel ceiling from the self-healing layer: when the
         # channel group quarantines rings, plans must be sized for the
         # channels actually in rotation, not the configured maximum —
         # "replan around the reduced channel set". None = no restriction.
-        self._channel_limit: int | None = None
-        self.refits = 0
-        self.replans = 0
-        self.suppressed = 0  # hysteresis said "noise, keep the plan"
-        self.needs_probe = False
+        self._channel_limit: int | None = None  # guarded-by: _lock
+        self.refits = 0  # guarded-by: _lock
+        self.replans = 0  # guarded-by: _lock
+        self.suppressed = 0  # guarded-by: _lock (hysteresis kept the plan)
+        self.needs_probe = False  # guarded-by: _lock
 
     def _fit_for(self, direction: str, mode: str) -> RollingFit:
         key = (direction, mode)
@@ -370,7 +372,8 @@ class OnlineTransferController:
     # -- self-healing hooks -------------------------------------------------
     @property
     def _max_channels(self) -> int:
-        limit = self._channel_limit
+        with self._lock:  # reentrant: also read under replan/propose
+            limit = self._channel_limit
         if limit is None:
             return self.cfg.max_channels
         return max(1, min(self.cfg.max_channels, limit))
@@ -398,7 +401,7 @@ class OnlineTransferController:
                     and model.bw_Bps > self._bw_cap_Bps):
                 model = TransferCostModel(t0_s=model.t0_s,
                                           bw_Bps=self._bw_cap_Bps)
-            plan = plan_channels(
+            plan = plan_channels(  # lock-ok: model= given, calibrate unreachable
                 self.payload_bytes, model=model,
                 max_channels=self._max_channels,
                 completion_workers=self.cfg.completion_workers,
@@ -426,7 +429,8 @@ class OnlineTransferController:
     def payload_bytes(self) -> int:
         """Plan for the LARGE payloads in the recent mix: striping decisions
         are about the big transfers, not the token-sized ones between."""
-        return max(self._payloads) if self._payloads else 1
+        with self._lock:  # reentrant: propose/replan read it under the lock
+            return max(self._payloads) if self._payloads else 1
 
     # -- the decision -------------------------------------------------------
     def propose(self, *, force: bool = False) -> ChannelPlan | None:
@@ -491,7 +495,7 @@ class OnlineTransferController:
                     # queue behind the bucket.
                     m_plan = TransferCostModel(t0_s=m_plan.t0_s,
                                                bw_Bps=self._bw_cap_Bps)
-                plan = plan_channels(
+                plan = plan_channels(  # lock-ok: model= given, calibrate unreachable
                     payload, model=m_plan, max_channels=self._max_channels,
                     completion_workers=self.cfg.completion_workers,
                     preempt_target_s=self.cfg.preempt_target_s)
@@ -671,17 +675,17 @@ class AdaptiveChannelGroup:
         # bounded: one record lands here per logical transfer (per decoded
         # token in serving) — an unbounded list would grow forever in a
         # long-running server and defeat the zero-alloc steady state.
+        self._lock = make_lock("AdaptiveChannelGroup._lock")
         self.stats: "collections.deque[TransferStats]" = collections.deque(
-            maxlen=4096)
-        self._lock = threading.Lock()
-        self._outstanding: list[Ticket] = []
+            maxlen=4096)  # guarded-by: _lock
+        self._outstanding: list[Ticket] = []  # guarded-by: _lock
         # submitters currently between _enter() and their ticket being
         # tracked (or their sync transfer finishing): the swap must also
         # wait these out, or it could close an engine under a submit.
-        self._entrants = 0
-        self._pending_plan: ChannelPlan | None = None
-        self.generation = 0
-        self.swaps = 0
+        self._entrants = 0  # guarded-by: _lock
+        self._pending_plan: ChannelPlan | None = None  # guarded-by: _lock
+        self.generation = 0  # guarded-by: _lock
+        self.swaps = 0  # guarded-by: _lock
         self.all_engines: list[TransferEngine] = []  # every generation's
         self._group = self._build(self.controller.plan)
 
@@ -760,16 +764,18 @@ class AdaptiveChannelGroup:
         self.close()
 
     # -- adaptation ----------------------------------------------------------
-    def _drained(self) -> bool:
+    def _drained(self) -> bool:  # requires-lock: _lock
         """True when nothing issued through the facade is still in flight
         (no live ticket, no submitter mid-issue). Caller must hold the
         lock."""
+        assert_held(self._lock, "_drained")
         self._outstanding = [t for t in self._outstanding if not t.complete]
         return not self._outstanding and self._entrants == 0
 
-    def _swap_locked(self) -> None:
+    def _swap_locked(self) -> None:  # requires-lock: _lock
         """Install the pending generation. Caller holds the lock and has
         verified the drain; runs on a submitting thread only."""
+        assert_held(self._lock, "_swap_locked")
         plan, self._pending_plan = self._pending_plan, None
         old = self._group
         self._group = self._build(plan)
@@ -824,7 +830,15 @@ class AdaptiveChannelGroup:
         detection would starve."""
         peek = getattr(self._group, "_ingest_health_samples", None)
         if peek is not None:
-            peek()
+            # the health windows are guarded by the group's _health_lock
+            # (check_channel_health ingests under it too); try-acquire so a
+            # concurrent health pass — already ingesting — just wins.
+            health_lock = self._group._health_lock
+            if health_lock.acquire(blocking=False):
+                try:
+                    peek()
+                finally:
+                    health_lock.release()
         self.controller.ingest_chunks(self.engines)
 
     def _check_group_health(self) -> bool:
@@ -857,7 +871,9 @@ class AdaptiveChannelGroup:
         self._ingest_chunks()
         self._ingest_dispatch_latency()
         self._check_group_health()
-        if self._pending_plan is None:
+        with self._lock:
+            pending = self._pending_plan is not None
+        if not pending:
             plan = self.controller.propose(force=force)
             if plan is not None:
                 with self._lock:
@@ -885,7 +901,9 @@ class AdaptiveChannelGroup:
         drained, then return the engine of the current generation. The
         caller holds an entrant reference until its ticket is tracked (or
         its sync transfer finished) — see :meth:`_leave`."""
-        if self._pending_plan is None:
+        with self._lock:
+            pending = self._pending_plan is not None
+        if not pending:
             self._ingest_chunks()
             plan = self.controller.propose()
             if plan is not None:
@@ -991,15 +1009,18 @@ class AdaptiveChannelGroup:
     def adapt_summary(self) -> dict[str, Any]:
         """Controller state for benchmarks/ROADMAP reporting."""
         c = self.controller
-        return {
-            "generation": self.generation,
-            "swaps": self.swaps,
-            "refits": c.refits,
-            "replans": c.replans,
-            "suppressed": c.suppressed,
-            "plan": c.plan.row(),
-            "channel_limit": c._channel_limit,
-        }
+        with self._lock:
+            generation, swaps = self.generation, self.swaps
+        with c._lock:
+            return {
+                "generation": generation,
+                "swaps": swaps,
+                "refits": c.refits,
+                "replans": c.replans,
+                "suppressed": c.suppressed,
+                "plan": c.plan.row(),
+                "channel_limit": c._channel_limit,
+            }
 
     def fault_summary(self) -> dict[str, Any]:
         """The shared fault ledger plus the CURRENT generation's quarantine

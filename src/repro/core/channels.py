@@ -53,6 +53,7 @@ from typing import Any, Callable, Sequence
 import jax
 import numpy as np
 
+from repro.analysis.validated import assert_held, make_lock
 from repro.core.cost_model import TransferCostModel
 from repro.core.faults import RecoveryConfig
 from repro.core.runtime import (
@@ -95,10 +96,10 @@ class StagingPool:
     layout of a similar size instead of hitting the allocator."""
 
     def __init__(self) -> None:
-        self._free: dict[int, list[np.ndarray]] = {}
-        self._lock = threading.Lock()
-        self.allocations = 0
-        self.reuses = 0
+        self._lock = make_lock("StagingPool._lock")
+        self._free: dict[int, list[np.ndarray]] = {}  # guarded-by: _lock
+        self.allocations = 0                          # guarded-by: _lock
+        self.reuses = 0                               # guarded-by: _lock
 
     @staticmethod
     def _size_class(nbytes: int) -> int:
@@ -307,28 +308,31 @@ class ChannelGroup:
         self._closed = False
         # bounded recent history (see TransferEngine.stats); aggregate
         # totals live on the member engines' counters.
+        self._stats_lock = make_lock("ChannelGroup._stats_lock")
         self.stats: "collections.deque[TransferStats]" = collections.deque(
-            maxlen=_STATS_WINDOW)
-        self._stats_lock = threading.Lock()
-        self._observers: list[Callable[[TransferStats], None]] = []
-        self._rr = 0  # round-robin cursor for sub-stripe payloads
-        self._joiners: list[threading.Thread] = []
+            maxlen=_STATS_WINDOW)          # guarded-by: _stats_lock
+        self._observers: list[Callable[[TransferStats], None]] = \
+            []                             # guarded-by: _stats_lock
+        # round-robin cursor for sub-stripe payloads
+        self._rr = 0                       # guarded-by: _stats_lock
+        self._joiners: list[threading.Thread] = []  # guarded-by: _stats_lock
         # -- self-healing state (PR 6) ---------------------------------------
         # ``fault_state`` may be handed in so an adaptive facade's plan
         # generations share ONE ledger across safe-point swaps.
         self.recovery = recovery or RecoveryConfig()
         self.fault_state = fault_state or TransferFaultState()
-        self._quarantined: set[int] = set()        # under _stats_lock
-        self._consec_faults = [0] * n_channels     # under _stats_lock
+        self._quarantined: set[int] = set()        # guarded-by: _stats_lock
+        self._consec_faults = [0] * n_channels     # guarded-by: _stats_lock
+        self._health_lock = make_lock("ChannelGroup._health_lock")
         # per-channel descriptor-health windows, fed by PEEKING each
         # engine's chunk_samples via its monotone chunk_seq (the refit
         # consumer pops the same deque destructively — we must not race
         # it for samples, only read the tail it has not yet consumed).
-        self._health_seen = [0] * n_channels
+        self._health_seen = [0] * n_channels       # guarded-by: _health_lock
         self._health: list["collections.deque[tuple[int, float]]"] = [
-            collections.deque(maxlen=64) for _ in range(n_channels)]
-        self._probe_stamp = [float("-inf")] * n_channels
-        self._health_lock = threading.Lock()  # serializes maybe_adapt
+            collections.deque(maxlen=64)
+            for _ in range(n_channels)]            # guarded-by: _health_lock
+        self._probe_stamp = [float("-inf")] * n_channels  # guarded-by: _health_lock
 
     # -- lifecycle ----------------------------------------------------------
     @classmethod
@@ -447,10 +451,12 @@ class ChannelGroup:
             self._rr += 1
             return cands[self._rr % len(cands)]
 
+    # requires-lock: _health_lock
     def _ingest_health_samples(self) -> None:
         """Peek each engine's NEW chunk samples (chunk_seq-delimited tail;
         never pops — the adaptive refit consumer owns the destructive
         read) into the per-channel health windows."""
+        assert_held(self._health_lock, "_ingest_health_samples")
         for i, eng in enumerate(self.engines):
             seq = getattr(eng, "chunk_seq", None)
             if seq is None:
@@ -491,7 +497,7 @@ class ChannelGroup:
         finally:
             self._health_lock.release()
 
-    def _drift_check(self) -> bool:
+    def _drift_check(self) -> bool:  # requires-lock: _health_lock
         rec = self.recovery
         self._ingest_health_samples()
         with self._stats_lock:
@@ -519,10 +525,12 @@ class ChannelGroup:
             changed = True
         return changed
 
+    # requires-lock: _health_lock
     def _probe_quarantined(self) -> bool:
         """Issue a small bounded probe TX on each quarantined channel (rate
         limited); a probe that completes at a healthy rate returns the
         channel to the stripe rotation."""
+        assert_held(self._health_lock, "_probe_quarantined")
         rec = self.recovery
         now = time.monotonic()
         with self._stats_lock:
@@ -536,7 +544,8 @@ class ChannelGroup:
             wait_s = rec.stripe_timeout_s or 1.0
             t0 = time.perf_counter()
             try:
-                eng.tx_async(payload).wait(wait_s)
+                eng.tx_async(payload).wait(wait_s)  # lock-ok: _health_lock is a non-blocking
+                # try-acquire exclusion guard; submitters never contend on it
             except BaseException:
                 continue  # still sick: stays quarantined
             probe_s = time.perf_counter() - t0
@@ -548,11 +557,12 @@ class ChannelGroup:
             with self._stats_lock:
                 active = [j for j in range(self.n_channels)
                           if j not in self._quarantined]
+                rr = self._rr
             if active and rec.drift_quarantine_ratio is not None:
-                ref = self.engines[active[self._rr % len(active)]]
+                ref = self.engines[active[rr % len(active)]]
                 t0 = time.perf_counter()
                 try:
-                    ref.tx_async(payload).wait(wait_s)
+                    ref.tx_async(payload).wait(wait_s)  # lock-ok: see probe above
                     ref_s = time.perf_counter() - t0
                 except BaseException:  # sibling flaked: skip the rate gate
                     ref_s = None
@@ -866,8 +876,12 @@ class ChannelGroup:
 
     # -- reporting ------------------------------------------------------------
     def summary(self) -> dict[str, dict[str, float]]:
-        tx = [s for s in self.stats if s.direction == "tx"]
-        rx = [s for s in self.stats if s.direction == "rx"]
+        # snapshot under the lock: stripe joiners append records
+        # concurrently and deque iteration is not atomic vs appends
+        with self._stats_lock:
+            records = list(self.stats)
+        tx = [s for s in records if s.direction == "tx"]
+        rx = [s for s in records if s.direction == "rx"]
 
         def agg(ss):
             if not ss:

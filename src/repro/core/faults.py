@@ -51,13 +51,13 @@ Fault kinds (:class:`FaultSpec.kind`):
 from __future__ import annotations
 
 import random
-import threading
 import time
 from dataclasses import dataclass
 from typing import Any
 
 import numpy as np
 
+from repro.analysis.validated import assert_held, make_lock
 from repro.core.runtime import TransferFaultError
 from repro.core.transfer import TransferEngine
 
@@ -129,17 +129,18 @@ class FaultInjector:
 
     def __init__(self, plan: FaultPlan):
         self.plan = plan
-        self._lock = threading.Lock()
-        self._n_engines = 0
-        self._rngs: dict[int, random.Random] = {}
-        self._ops: dict[int, int] = {}
-        self._injected: dict[int, int] = {}   # spec index -> firings
-        self._manual_stall: dict[int, float] = {}
+        self._lock = make_lock("FaultInjector._lock")
+        self._n_engines = 0  # guarded-by: _lock
+        self._rngs: dict[int, random.Random] = {}  # guarded-by: _lock
+        self._ops: dict[int, int] = {}  # guarded-by: _lock
+        self._injected: dict[int, int] = {}  # guarded-by: _lock (per-spec firings)
+        self._manual_stall: dict[int, float] = {}  # guarded-by: _lock
         # (channel, op_index, kind, direction, stage) in injection order
-        self.events: list[tuple[int, int, str, str, str]] = []
+        self.events: list[tuple[int, int, str, str, str]] = []  # guarded-by: _lock
 
     # -- scheduling ----------------------------------------------------------
-    def _rng(self, channel: int) -> random.Random:
+    def _rng(self, channel: int) -> random.Random:  # requires-lock: _lock
+        assert_held(self._lock, "_rng")
         rng = self._rngs.get(channel)
         if rng is None:
             rng = self._rngs[channel] = random.Random(

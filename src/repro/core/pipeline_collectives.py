@@ -20,7 +20,6 @@ property-tested in tests/test_collectives.py.
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -124,6 +124,8 @@ import weakref
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from repro.analysis.validated import assert_held, make_condition, make_lock
+
 # Per-class rolling window of dispatch/service latencies (bytes/counters are
 # exact lifetime totals; latency percentiles come from this recent window).
 _LAT_WINDOW = 2048
@@ -449,7 +451,7 @@ class TransferRuntime:
                  cap_burst_s: float = 0.05):
         if workers is None:
             workers = max(2, min(_MAX_WORKERS, os.cpu_count() or 2))
-        self.workers = max(1, int(workers))
+        self.workers = max(1, int(workers))  # guarded-by: _cond
         self.reserve_latency_workers = max(0, int(reserve_latency_workers))
         self.latency_recency_s = float(latency_recency_s)
         self.qos = dict(DEFAULT_QOS)
@@ -464,17 +466,19 @@ class TransferRuntime:
         self.background_budget_s = background_budget_s
         # per-class bandwidth caps (token buckets), set_class_cap-managed.
         self.cap_burst_s = float(cap_burst_s)
-        self._caps: dict[PriorityClass, _TokenBucket] = {}
+        self._cond = make_condition("TransferRuntime._cond")
+        self._caps: dict[PriorityClass, _TokenBucket] = {}  # guarded-by: _cond
         # earliest bucket-refill delay observed by the last _pick_locked
         # pass that found only cap-deferred work (None = no cap deferral):
         # workers size their wait on it so capped work is never stranded.
-        self._cap_wait_hint: float | None = None
-        self._cond = threading.Condition()
+        self._cap_wait_hint: float | None = None            # guarded-by: _cond
         self._queues: dict[PriorityClass, "collections.deque[_Descriptor]"] \
-            = {cls: collections.deque() for cls in PriorityClass}
+            = {cls: collections.deque()                     # guarded-by: _cond
+               for cls in PriorityClass}
         self._vtime: dict[PriorityClass, float] = {
-            cls: 0.0 for cls in PriorityClass}
-        self._executing = 0        # descriptors currently in service
+            cls: 0.0 for cls in PriorityClass}              # guarded-by: _cond
+        # descriptors currently in service
+        self._executing = 0                                 # guarded-by: _cond
         # Reserved-lane activation is RECENCY-gated: the stamp updates on
         # every TOKEN/SENSOR registration or submission, and the lane is
         # active while it is fresher than ``latency_recency_s``. An idle
@@ -482,30 +486,33 @@ class TransferRuntime:
         # BULK get every worker back) instead of pinning it for life.
         # ``_latency_handles`` counts live latency registrations for
         # introspection/diagnostics.
-        self._latency_handles = 0
-        self._latency_last_event = float("-inf")
-        self._alive = 0
-        self._threads: list[threading.Thread] = []
-        self._closed = False
+        self._latency_handles = 0                           # guarded-by: _cond
+        self._latency_last_event = float("-inf")            # guarded-by: _cond
+        self._alive = 0                                     # guarded-by: _cond
+        self._threads: list[threading.Thread] = []          # guarded-by: _cond
+        self._closed = False                                # guarded-by: _cond
         # WEAK registry: an engine dropped without close() (allowed before
         # this runtime existed — per-engine pools just idled out) must not
         # pin its handle in the process-global runtime forever. Queued/
         # in-flight descriptors hold the handle strongly, so it lives
         # exactly as long as work for it can still exist.
-        self._handles: "weakref.WeakSet[RuntimeHandle]" = weakref.WeakSet()
-        self._background: list[Callable[[], None]] = []
-        self._bg_cursor = 0
-        self._bg_running = False  # single-flight: background tasks keep the
-        # cooperative scheduler's single-threaded contract (a sensor_fn
-        # must never race itself across two workers)
-        self._bg_spinner: int | None = None  # thread id of the ONE worker
-        # polling the background lane at _BG_IDLE_WAIT_S cadence; the rest
-        # wait at idle_timeout_s and may idle-exit (no N-worker busy spin)
+        self._handles: "weakref.WeakSet[RuntimeHandle]" = \
+            weakref.WeakSet()                               # guarded-by: _cond
+        self._background: list[Callable[[], None]] = []     # guarded-by: _cond
+        self._bg_cursor = 0                                 # guarded-by: _cond
+        # single-flight: background tasks keep the cooperative scheduler's
+        # single-threaded contract (a sensor_fn must never race itself
+        # across two workers)
+        self._bg_running = False                            # guarded-by: _cond
+        # thread id of the ONE worker polling the background lane at
+        # _BG_IDLE_WAIT_S cadence; the rest wait at idle_timeout_s and may
+        # idle-exit (no N-worker busy spin)
+        self._bg_spinner: int | None = None                 # guarded-by: _cond
         self.stats: dict[PriorityClass, ClassStats] = {
-            cls: ClassStats() for cls in PriorityClass}
-        self.dispatches = 0
-        self.background_slices_run = 0
-        self.background_errors = 0
+            cls: ClassStats() for cls in PriorityClass}     # guarded-by: _cond
+        self.dispatches = 0                                 # guarded-by: _cond
+        self.background_slices_run = 0                      # guarded-by: _cond
+        self.background_errors = 0                          # guarded-by: _cond
 
     # -- registration --------------------------------------------------------
     def register(self, owner: Any, priority: PriorityClass,
@@ -621,8 +628,9 @@ class TransferRuntime:
         return d.done, d.out
 
     # -- arbitration ---------------------------------------------------------
-    def _pick_locked(self) -> _Descriptor | None:
+    def _pick_locked(self) -> _Descriptor | None:  # requires-lock: _cond
         """Choose the next descriptor. Caller holds ``_cond``."""
+        assert_held(self._cond, "_pick_locked")
         now = time.monotonic()
         self._cap_wait_hint = None
         if not self.fair:
@@ -866,12 +874,13 @@ class TransferRuntime:
         return True
 
     # -- background (SENSOR ingest) ------------------------------------------
-    def _next_background_locked(self) -> Callable[[], None] | None:
+    def _next_background_locked(self) -> Callable[[], None] | None:  # requires-lock: _cond
         """Claim the background lane (single-flight). Caller must run the
         returned fn via :meth:`_run_background`, which releases the lane —
         two workers must never run background tasks concurrently (they
         were written for the cooperative scheduler's single-threaded
         model)."""
+        assert_held(self._cond, "_next_background_locked")
         if not self._background or self._bg_running:
             return None
         self._bg_running = True
@@ -976,6 +985,7 @@ class TransferRuntime:
         return len(timed_out)
 
     # -- teardown ------------------------------------------------------------
+    # requires-lock: _cond
     def _cancel_handle_locked(self, handle: RuntimeHandle
                               ) -> list[_Descriptor]:
         """Pull a handle's still-queued descriptors off the queues, flag
@@ -983,6 +993,7 @@ class TransferRuntime:
         :meth:`_finish_cancelled` after releasing the lock (on_cancel runs
         submitter-side completion protocol — ring slot release, master
         ticket errors — that may take engine locks)."""
+        assert_held(self._cond, "_cancel_handle_locked")
         cancelled: list[_Descriptor] = []
         for cls, q in self._queues.items():
             keep = collections.deque()
@@ -1105,7 +1116,7 @@ class TransferRuntime:
 # Process-wide default runtime
 # ---------------------------------------------------------------------------
 
-_global_lock = threading.Lock()
+_global_lock = make_lock("runtime._global_lock")
 _global_runtime: TransferRuntime | None = None
 
 
@@ -1295,13 +1306,12 @@ class DedicatedWorkerPool:
     def __init__(self, workers: int = 1, idle_timeout_s: float = 30.0) -> None:
         self.workers = max(1, workers)
         self.idle_timeout_s = idle_timeout_s
-        self._q: "queue.Queue[tuple[Callable[[], Any] | None, threading.Event | None, list | None]]" = (
-            queue.Queue()
-        )
-        self._lock = threading.Lock()
-        self._alive = 0
-        self._threads: list[threading.Thread] = []
-        self._closed = False
+        self._q: ("queue.Queue[tuple[Callable[[], Any] | None, "
+                  "threading.Event | None, list | None]]") = queue.Queue()
+        self._lock = make_lock("DedicatedWorkerPool._lock")
+        self._alive = 0                   # guarded-by: _lock
+        self._threads: list[threading.Thread] = []  # guarded-by: _lock
+        self._closed = False              # guarded-by: _lock
 
     def _run(self) -> None:
         while True:

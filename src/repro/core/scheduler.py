@@ -1,9 +1,21 @@
+# analysis: skip-module — deprecated re-export shim, no locks of its own
 """Back-compat shim — :class:`CooperativeScheduler` moved to
 :mod:`repro.core.runtime`, where it is the user-level 'scheduled' backend
 of the unified TransferRuntime interface (the paper's three management
-modes as three backends of one abstraction). Import from there."""
+modes as three backends of one abstraction; see
+:class:`repro.core.runtime.ScheduledBackend`). Import from there."""
+
+import warnings
 
 from repro.core.runtime import (  # noqa: F401
     CooperativeScheduler,
     SchedulerStats,
+)
+
+warnings.warn(
+    "repro.core.scheduler is deprecated: CooperativeScheduler/SchedulerStats "
+    "live in repro.core.runtime (the 'scheduled' management backend — see "
+    "repro.core.runtime.ScheduledBackend); import from there.",
+    DeprecationWarning,
+    stacklevel=2,
 )

@@ -70,8 +70,10 @@ from typing import Any, Callable, Sequence
 import jax
 import numpy as np
 
+from repro.analysis.validated import make_lock
 from repro.core.runtime import (
     PREEMPTIBLE_CLASSES,
+    CooperativeScheduler,
     PreemptibleWork,
     PriorityClass,
     RuntimeHandle,
@@ -451,11 +453,11 @@ class LayoutCache:
     their buffers instead of leaking the allocation."""
 
     def __init__(self, pool: Any | None = None) -> None:
-        self._layouts: dict[Any, StagedLayout] = {}
+        self._lock = make_lock("LayoutCache._lock")  # serving/pipeline hit one
+        self._layouts: dict[Any, StagedLayout] = {}  # guarded-by: _lock
         self._pool = pool
-        self._lock = threading.Lock()  # serving/pipeline hit one cache from
-        self.hits = 0                  # several threads concurrently
-        self.misses = 0
+        self.hits = 0                  # guarded-by: _lock
+        self.misses = 0                # guarded-by: _lock
 
     def get(self, key: Any, arrays: Sequence[np.ndarray]) -> StagedLayout:
         with self._lock:
@@ -471,7 +473,8 @@ class LayoutCache:
             return lay
 
     def __len__(self) -> int:
-        return len(self._layouts)
+        with self._lock:
+            return len(self._layouts)
 
 
 def _check_out(arrays: Sequence[Any],
@@ -583,26 +586,31 @@ class TransferEngine:
         # the serving path) — unbounded history would leak in a
         # long-running server; aggregates live in the *_total counters.
         self.stats: "collections.deque[TransferStats]" = collections.deque(
-            maxlen=_STATS_WINDOW)
+            maxlen=_STATS_WINDOW)        # guarded-by: _stats_lock
         self.layouts = LayoutCache()
         # descriptor ring: one completion event per staging slot
-        self._buffers_busy: list[threading.Event | None] = [None] * policy.depth
-        self._buf_idx = 0
-        self._ring_lock = threading.Lock()
-        self._slot_held = [False] * policy.depth
-        self._inflight = 0
-        self.slot_collisions = 0  # two concurrent holders of one slot (bug)
-        self.max_inflight = 0  # high-water mark of concurrent descriptors
-        self.inflight_hwm = 0  # high-water mark of concurrently HELD slots
-        self._stats_lock = threading.Lock()
+        self._ring_lock = make_lock("TransferEngine._ring_lock")
+        self._buffers_busy: list[threading.Event | None] = \
+            [None] * policy.depth         # guarded-by: _ring_lock
+        self._buf_idx = 0                 # guarded-by: _ring_lock
+        self._slot_held = [False] * policy.depth  # guarded-by: _ring_lock
+        self._inflight = 0                # guarded-by: _ring_lock
+        # two concurrent holders of one slot (bug)
+        self.slot_collisions = 0          # guarded-by: _ring_lock
+        # high-water mark of concurrent descriptors
+        self.max_inflight = 0             # guarded-by: _ring_lock
+        # high-water mark of concurrently HELD slots
+        self.inflight_hwm = 0             # guarded-by: _ring_lock
+        self._stats_lock = make_lock("TransferEngine._stats_lock")
         # aggregate byte/transfer counters, mutated ONLY under _stats_lock —
         # the async completion path records from worker threads, so an
         # unlocked read-modify-write here silently drops bytes under load.
-        self.tx_bytes_total = 0
-        self.rx_bytes_total = 0
-        self.tx_count = 0
-        self.rx_count = 0
-        self._observers: list[Callable[[TransferStats], None]] = []
+        self.tx_bytes_total = 0           # guarded-by: _stats_lock
+        self.rx_bytes_total = 0           # guarded-by: _stats_lock
+        self.tx_count = 0                 # guarded-by: _stats_lock
+        self.rx_count = 0                 # guarded-by: _stats_lock
+        self._observers: list[Callable[[TransferStats], None]] = \
+            []                            # guarded-by: _stats_lock
         # bounded deque: append/popleft are GIL-atomic, so samplers (workers)
         # and the refit consumer need no extra lock here.
         self.chunk_samples: "collections.deque[tuple[str, str, int, float]]" \
@@ -610,26 +618,25 @@ class TransferEngine:
         # monotone count of chunk samples ever taken: per-channel health
         # monitors PEEK the newest (chunk_seq - last_seen) entries instead
         # of popping, so they can coexist with the destructive
-        # ingest_chunks() refit consumer. Guarded by _stats_lock.
-        self.chunk_seq = 0
-        # fault-layer ledger (exact lifetime totals, under _stats_lock)
-        self.checksum_failures = 0
-        self.chunks_cancelled = 0  # chunks skipped after a sibling's error
+        # ingest_chunks() refit consumer.
+        self.chunk_seq = 0                # guarded-by: _stats_lock
+        # fault-layer ledger (exact lifetime totals)
+        self.checksum_failures = 0        # guarded-by: _stats_lock
+        self.chunks_cancelled = 0         # guarded-by: _stats_lock
         self._runtime = runtime
-        self._handle: RuntimeHandle | None = None
-        self._handle_lock = threading.Lock()  # concurrent first-submit must
-        self._closed = False                  # not double-register (leak)
+        # concurrent first-submit must not double-register (leak)
+        self._handle_lock = make_lock("TransferEngine._handle_lock")
+        self._handle: RuntimeHandle | None = None  # guarded-by: _handle_lock
+        self._closed = False              # guarded-by: _handle_lock
         if scheduler is None and policy.management is Management.SCHEDULED:
-            from repro.core.runtime import CooperativeScheduler
-
             scheduler = CooperativeScheduler()
         self._scheduler = scheduler
 
     # -- runtime registration (lazy so POLLING engines never touch it) ------
     def _runtime_handle(self) -> RuntimeHandle:
-        if self._closed:
+        if self._closed:  # lock-ok: racy fast-fail; re-checked under lock below
             raise RuntimeError("submit on a closed TransferEngine")
-        h = self._handle
+        h = self._handle  # lock-ok: double-checked init; re-read under lock
         if h is None:
             with self._handle_lock:
                 if self._closed:
@@ -648,7 +655,8 @@ class TransferEngine:
         """The runtime this engine's completions dispatch on (resolved for
         INTERRUPT engines; ``None`` for polling/scheduled engines that were
         not handed one explicitly)."""
-        if (self._runtime is None and not self._closed
+        if (self._runtime is None
+                and not self._closed  # lock-ok: advisory read, benign race
                 and self.policy.management is Management.INTERRUPT):
             self._runtime = get_runtime()
         return self._runtime
@@ -1193,8 +1201,15 @@ class TransferEngine:
 
     # -- reporting -----------------------------------------------------------
     def summary(self) -> dict[str, float]:
-        tx = [s for s in self.stats if s.direction == "tx"]
-        rx = [s for s in self.stats if s.direction == "rx"]
+        # snapshot under the lock: workers append records + bump the fault
+        # ledger concurrently, and iterating a deque being appended from
+        # another thread can skip/duplicate entries
+        with self._stats_lock:
+            records = list(self.stats)
+            checksum_failures = self.checksum_failures
+            chunks_cancelled = self.chunks_cancelled
+        tx = [s for s in records if s.direction == "tx"]
+        rx = [s for s in records if s.direction == "rx"]
         def agg(ss):
             if not ss:
                 return {"us_per_byte": float("nan"), "gbps": float("nan")}
@@ -1203,5 +1218,5 @@ class TransferEngine:
             return {"us_per_byte": tot_t * 1e6 / max(tot_b, 1),
                     "gbps": tot_b / max(tot_t, 1e-12) / 1e9}
         return {"tx": agg(tx), "rx": agg(rx),  # type: ignore[return-value]
-                "checksum_failures": self.checksum_failures,
-                "chunks_cancelled": self.chunks_cancelled}
+                "checksum_failures": checksum_failures,
+                "chunks_cancelled": chunks_cancelled}

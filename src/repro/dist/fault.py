@@ -18,9 +18,9 @@ Two consumers share this module:
 
 from __future__ import annotations
 
-import threading
 from dataclasses import dataclass, field
 
+from repro.analysis.validated import make_lock
 from repro.utils.timing import StepClock
 
 
@@ -86,15 +86,15 @@ class TransferFaultState:
     channel index that raised them."""
 
     def __init__(self) -> None:
-        self._lock = threading.Lock()
-        self.faults = 0
-        self.timeouts = 0
-        self.checksum_failures = 0
-        self.retries = 0
-        self.retry_successes = 0
-        self.quarantines = 0
-        self.unquarantines = 0
-        self.faults_by_channel: dict[int, int] = {}
+        self._lock = make_lock("TransferFaultState._lock")
+        self.faults = 0  # guarded-by: _lock
+        self.timeouts = 0  # guarded-by: _lock
+        self.checksum_failures = 0  # guarded-by: _lock
+        self.retries = 0  # guarded-by: _lock
+        self.retry_successes = 0  # guarded-by: _lock
+        self.quarantines = 0  # guarded-by: _lock
+        self.unquarantines = 0  # guarded-by: _lock
+        self.faults_by_channel: dict[int, int] = {}  # guarded-by: _lock
 
     def record_fault(self, channel: int | None = None, *,
                      timeout: bool = False, checksum: bool = False) -> None:

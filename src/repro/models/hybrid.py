@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.models.layers.attention import KVCache, attention, attn_params
-from repro.models.layers.mlp import mlp_apply, mlp_params
+from repro.models.layers.mlp import mlp_params
 from repro.models.layers.norm import apply_norm, norm_params
 from repro.models.layers.rope import apply_rope
 from repro.models.layers.ssm import mamba2_apply, mamba2_params, ssm_state_zeros

@@ -14,7 +14,7 @@ or Mamba2 which fuses mixer+ffn in one block).
 from __future__ import annotations
 
 import math
-from typing import Any, NamedTuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp

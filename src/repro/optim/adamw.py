@@ -10,7 +10,7 @@ memory across the ('data','model') mesh.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -16,14 +16,14 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.dist.fault import FaultPolicy, FaultState
+from repro.dist.fault import FaultState
 from repro.models.api import Model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.optim.schedule import cosine_schedule

@@ -1,0 +1,467 @@
+"""Tests for the concurrency analyzer (repro.analysis): per-rule fixtures
+asserting the exact rule fires, waiver/baseline suppression, the runtime
+ValidatedLock order validation, and the cleanliness gate over the real
+package (the same invariant scripts/ci.sh --lane lint enforces)."""
+
+import pathlib
+import sys
+import textwrap
+import threading
+import warnings
+
+import pytest
+
+from repro.analysis import (
+    Finding,
+    LockAssertionError,
+    LockOrderViolation,
+    analyze_source,
+    assert_held,
+    enable,
+    extract_module,
+    extract_package,
+    make_condition,
+    make_lock,
+    make_rlock,
+    order_graph,
+    run_rules,
+    split_new,
+)
+
+SRC_ROOT = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+
+def _src(body: str) -> str:
+    return textwrap.dedent(body)
+
+
+def _rules(findings: "list[Finding]", *, waived: bool = False) -> set:
+    return {f.rule for f in findings if f.waived == waived}
+
+
+# ---------------------------------------------------------------------------
+# lock-order
+
+
+def test_lock_order_cycle_detected():
+    findings = analyze_source(_src("""
+        import threading
+
+        class Pair:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def forward(self):
+                with self._a:
+                    self.inner_b()
+
+            def inner_b(self):
+                with self._b:
+                    pass
+
+            def backward(self):
+                with self._b:
+                    self.inner_a()
+
+            def inner_a(self):
+                with self._a:
+                    pass
+    """), rules=("lock-order",))
+    assert _rules(findings) == {"lock-order"}
+    msg = findings[0].message
+    assert "Pair._a" in msg and "Pair._b" in msg
+
+
+def test_lock_order_consistent_order_is_clean():
+    findings = analyze_source(_src("""
+        import threading
+
+        class Pair:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def forward(self):
+                with self._a:
+                    self.inner_b()
+
+            def inner_b(self):
+                with self._b:
+                    pass
+
+            def also_forward(self):
+                with self._a:
+                    with self._b:
+                        pass
+    """), rules=("lock-order",))
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# guarded-by
+
+
+GUARDED_FIXTURE = """
+    import threading
+
+    class Counter:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0  # guarded-by: _lock
+
+        def bump(self):
+            with self._lock:
+                self.count += 1
+
+        def racy_read(self):
+            return self.count{waiver}
+"""
+
+
+def test_guarded_by_unlocked_access_fires():
+    findings = analyze_source(_src(GUARDED_FIXTURE.format(waiver="")),
+                              rules=("guarded-by",))
+    assert _rules(findings) == {"guarded-by"}
+    assert "count" in findings[0].message
+
+
+def test_guarded_by_waiver_suppresses():
+    findings = analyze_source(
+        _src(GUARDED_FIXTURE.format(waiver="  # lock-ok: advisory read")),
+        rules=("guarded-by",))
+    assert _rules(findings) == set()          # nothing active
+    assert _rules(findings, waived=True) == {"guarded-by"}
+
+
+def test_guarded_by_init_exempt():
+    findings = analyze_source(_src("""
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.x = 0  # guarded-by: _lock
+    """), rules=("guarded-by",))
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# blocking
+
+
+def test_blocking_sleep_under_lock_fires():
+    findings = analyze_source(_src("""
+        import threading
+        import time
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def slow(self):
+                with self._lock:
+                    time.sleep(1)
+    """), rules=("blocking",))
+    assert _rules(findings) == {"blocking"}
+    assert "time.sleep" in findings[0].message
+
+
+def test_blocking_transitive_through_helper_fires():
+    findings = analyze_source(_src("""
+        import threading
+        import time
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def outer(self):
+                with self._lock:
+                    self.helper()
+
+            def helper(self):
+                time.sleep(1)
+    """), rules=("blocking",))
+    assert _rules(findings) == {"blocking"}
+
+
+def test_blocking_condition_wait_on_held_lock_exempt():
+    # Condition.wait RELEASES the lock it is called on: not a blocking
+    # violation against that same lock.
+    findings = analyze_source(_src("""
+        import threading
+
+        class C:
+            def __init__(self):
+                self._cond = threading.Condition()
+
+            def park(self):
+                with self._cond:
+                    self._cond.wait()
+    """), rules=("blocking",))
+    assert findings == []
+
+
+def test_blocking_waiver_suppresses_direct_and_transitive():
+    findings = analyze_source(_src("""
+        import threading
+        import time
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def outer(self):
+                with self._lock:
+                    self.helper()
+
+            def helper(self):
+                time.sleep(1)  # lock-ok: bounded by test harness
+
+            def direct(self):
+                with self._lock:
+                    self.helper()
+    """), rules=("blocking",))
+    assert _rules(findings) == set()
+
+
+# ---------------------------------------------------------------------------
+# requires-lock
+
+
+REQUIRES_FIXTURE = """
+    import threading
+
+    class C:
+        def __init__(self):
+            self._lock = threading.Lock()
+
+        def _bump_locked(self):  # requires-lock: _lock
+            pass
+
+        def good(self):
+            with self._lock:
+                self._bump_locked()
+
+        def bad(self):
+            self._bump_locked(){waiver}
+"""
+
+
+def test_requires_lock_unlocked_call_fires():
+    findings = analyze_source(_src(REQUIRES_FIXTURE.format(waiver="")),
+                              rules=("requires-lock",))
+    assert _rules(findings) == {"requires-lock"}
+    assert "_bump_locked" in findings[0].message
+
+
+def test_requires_lock_waiver_suppresses():
+    findings = analyze_source(
+        _src(REQUIRES_FIXTURE.format(waiver="  # lock-ok: single-threaded")),
+        rules=("requires-lock",))
+    assert _rules(findings) == set()
+
+
+def test_requires_lock_satisfied_by_nonblocking_acquire():
+    findings = analyze_source(_src("""
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def _scan_locked(self):  # requires-lock: _lock
+                pass
+
+            def try_scan(self):
+                if not self._lock.acquire(blocking=False):
+                    return False
+                try:
+                    self._scan_locked()
+                finally:
+                    self._lock.release()
+                return True
+    """), rules=("requires-lock",))
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# annotation validation
+
+
+def test_unknown_lock_in_annotation_reported():
+    findings = analyze_source(_src("""
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.x = 0  # guarded-by: _no_such_lock
+    """), rules=("annotation",))
+    assert _rules(findings) == {"annotation"}
+    assert "_no_such_lock" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# baseline + skip-module
+
+
+def test_baseline_suppresses_known_fingerprints():
+    findings = analyze_source(_src(GUARDED_FIXTURE.format(waiver="")),
+                              rules=("guarded-by",))
+    assert len(findings) == 1
+    baseline = {findings[0].fingerprint}
+    new, old = split_new(findings, baseline)
+    assert new == [] and len(old) == 1
+    # an empty baseline keeps the finding "new"
+    new, old = split_new(findings, set())
+    assert len(new) == 1 and old == []
+
+
+def test_fingerprint_is_line_number_free():
+    a = analyze_source(_src(GUARDED_FIXTURE.format(waiver="")),
+                       rules=("guarded-by",))
+    shifted = "# a new leading comment line\n" + _src(
+        GUARDED_FIXTURE.format(waiver=""))
+    b = analyze_source(shifted, rules=("guarded-by",))
+    assert a[0].fingerprint == b[0].fingerprint
+    assert a[0].line != b[0].line
+
+
+def test_skip_module_marker_skips_everything():
+    mod = extract_module(_src("""
+        # analysis: skip-module
+        import threading
+        import time
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def slow(self):
+                with self._lock:
+                    time.sleep(1)
+    """), "shim")
+    assert mod.skipped
+    assert mod.functions == {} and mod.classes == {}
+
+
+# ---------------------------------------------------------------------------
+# the real package must be clean (the lint-lane invariant)
+
+
+def test_package_is_clean():
+    pkg = extract_package(SRC_ROOT)
+    findings = [f for f in run_rules(pkg) if not f.waived]
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_package_waivers_all_carry_reasons():
+    pkg = extract_package(SRC_ROOT)
+    waived = [f for f in run_rules(pkg) if f.waived]
+    assert waived, "expected the known deliberate sites to be waived inline"
+    for f in waived:
+        assert f.waiver.strip(), f"waiver without a reason: {f.render()}"
+
+
+# ---------------------------------------------------------------------------
+# deprecated shim
+
+
+def test_scheduler_shim_warns_and_reexports():
+    sys.modules.pop("repro.core.scheduler", None)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        import repro.core.scheduler as shim
+    assert any(issubclass(w.category, DeprecationWarning)
+               and "repro.core.runtime" in str(w.message) for w in caught)
+    from repro.core.runtime import CooperativeScheduler
+    assert shim.CooperativeScheduler is CooperativeScheduler
+
+
+# ---------------------------------------------------------------------------
+# runtime validation (ValidatedLock)
+
+
+@pytest.fixture
+def validated():
+    enable(True)
+    order_graph.reset()
+    try:
+        yield
+    finally:
+        order_graph.reset()
+        enable(None)
+
+
+def test_validated_lock_order_violation(validated):
+    a = make_lock("T.a")
+    b = make_lock("T.b")
+    with a:
+        with b:
+            pass
+    with b:
+        with pytest.raises(LockOrderViolation):
+            a.acquire()
+
+
+def test_validated_lock_consistent_order_ok(validated):
+    a = make_lock("T.a")
+    b = make_lock("T.b")
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert "T.b" in order_graph.edges().get("T.a", set())
+
+
+def test_validated_rlock_reentry_ok(validated):
+    r = make_rlock("T.r")
+    with r:
+        with r:   # reentrant re-acquire must not self-edge
+            pass
+    assert order_graph.edges().get("T.r", set()) == set()
+
+
+def test_assert_held(validated):
+    lock = make_lock("T.held")
+    with pytest.raises(LockAssertionError):
+        assert_held(lock, "needs_lock")
+    with lock:
+        assert_held(lock, "needs_lock")   # no raise
+
+
+def test_assert_held_noop_when_disabled():
+    enable(False)
+    try:
+        assert_held(threading.Lock(), "whatever")   # plain lock: no-op
+    finally:
+        enable(None)
+
+
+def test_validated_condition_works(validated):
+    cond = make_condition("T.cond")
+    hits = []
+
+    def waiter():
+        with cond:
+            while not hits:
+                cond.wait(timeout=5)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    with cond:
+        hits.append(1)
+        cond.notify_all()
+    t.join(timeout=5)
+    assert not t.is_alive()
+
+
+def test_factories_return_plain_primitives_when_disabled():
+    enable(False)
+    try:
+        assert not hasattr(make_lock("x"), "name")
+        assert not hasattr(make_rlock("x"), "name")
+    finally:
+        enable(None)

@@ -12,7 +12,7 @@ from repro.checkpoint.checkpoint import (
     restore_latest,
     save_checkpoint,
 )
-from repro.core.transfer import Management, TransferPolicy
+from repro.core.transfer import TransferPolicy
 from repro.data.pipeline import DataConfig, StagedPipeline, SyntheticLMSource
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig, adamw_init, adamw_update

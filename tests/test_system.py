@@ -1,6 +1,5 @@
 """End-to-end behaviour: training convergence, restart, serving, NullHop."""
 
-import shutil
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +9,6 @@ import pytest
 from repro.accel.nullhop import NullHopExecutor
 from repro.accel.roshambo import RoShamBoCNN
 from repro.configs.registry import smoke_config
-from repro.core.streaming import HostStreamingExecutor
 from repro.core.transfer import (
     Buffering,
     Management,
