@@ -97,7 +97,8 @@ def main() -> None:
                       f"(token-RX p99 per-engine/runtime ratio "
                       f"{qc['p99_ratio_per_engine_over_runtime']}, "
                       f"fifo/runtime "
-                      f"{qc['p99_ratio_fifo_over_runtime']})")
+                      f"{qc['p99_ratio_fifo_over_runtime']}, coalescing "
+                      f"b32 {doc['coalescing']['speedup_b32']}x)")
         except Exception as e:  # noqa: BLE001 — a merge failure is a failure
             print(f"# {name} MERGE ERROR: {e}", file=sys.stderr)
             failures.append(name)

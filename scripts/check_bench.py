@@ -56,6 +56,8 @@ REQUIRED = {
                        "cap_bulk_share_uncapped", "cap_bulk_share_capped"],
     "fault_recovery": ["rows", "baseline_gbps", "faulted_gbps",
                        "recovered_gbps", "recovery_ratio", "degraded_ratio"],
+    "coalescing": ["rows", "per_desc_us_b1", "per_desc_us_b8",
+                   "per_desc_us_b32", "speedup_b8", "speedup_b32"],
 }
 
 
@@ -85,6 +87,11 @@ def _structural(doc: dict, errors: list[str]) -> None:
         # >= 80% of fault-free throughput with 1 of N channels stalled
         ("fault_recovery.recovery_ratio",
          doc.get("fault_recovery", {}).get("recovery_ratio"), 0.8),
+        # batched-submission acceptance bar: rx_many at batch 32 must
+        # amortize >= 2x of the per-descriptor overhead 32 singles pay
+        # on 4 KiB token payloads (the coalescing tentpole's headline)
+        ("coalescing.speedup_b32",
+         doc.get("coalescing", {}).get("speedup_b32"), 2.0),
     ]
     for name, val, floor in ratio_floors:
         if isinstance(val, (int, float)) and val < floor:
@@ -156,9 +163,19 @@ def _fresh_qos_probe(doc: dict, tol: float, errors: list[str]) -> None:
         errors.append(
             f"fresh cap sweep: capped BULK share {cap_on['bulk_share']} >= "
             f"uncapped {cap_off['bulk_share']} — cap not enforced")
+    # batched submission must still amortize AT ALL on a live host (the
+    # 2x bar is enforced on the committed numbers; the fresh single-rep
+    # probe only guards against rx_many rotting into per-descriptor cost)
+    coal = next(r for r in rows if r["variant"] == "coalesce-headline")
+    if coal["speedup_b32"] <= 1.0:
+        errors.append(
+            f"fresh coalescing sweep: batch-32 speedup "
+            f"{coal['speedup_b32']} <= 1 — batched submission no longer "
+            f"amortizes management overhead")
     print(f"fresh qos probe: arbitrated p99 {arb['token_rx_p99_ms']} ms "
           f"(committed {committed}), preemptions {pre['flood_preemptions']}, "
-          f"bulk share {cap_off['bulk_share']} -> {cap_on['bulk_share']}")
+          f"bulk share {cap_off['bulk_share']} -> {cap_on['bulk_share']}, "
+          f"coalescing b32 {coal['speedup_b32']}x")
 
 
 def main() -> int:

@@ -56,9 +56,10 @@ run_smoke() {
   python benchmarks/adaptive_drift.py --quick
 
   # no standalone qos_contention smoke: check_bench's fresh probe runs the
-  # quick qos benchmark itself and gates on its numbers — running it twice
-  # would just double the most expensive smoke on a 2-core host.
-  echo "== gate: check_bench.py (committed BENCH_transfer.json vs fresh qos/tx probes) =="
+  # quick qos benchmark itself — which includes the rx_many coalescing
+  # sweep (batch 1/8/32 amortization) — and gates on its numbers; running
+  # it twice would just double the most expensive smoke on a 2-core host.
+  echo "== gate: check_bench.py (committed BENCH_transfer.json vs fresh qos/tx/coalescing probes) =="
   python scripts/check_bench.py
 }
 

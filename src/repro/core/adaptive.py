@@ -219,7 +219,8 @@ class RollingFit:
 def choose_management(tx_fits: dict[str, TransferCostModel],
                       payload_bytes: int,
                       current: Management = Management.INTERRUPT,
-                      interrupt_extra_t0_s: float = 0.0
+                      interrupt_extra_t0_s: float = 0.0,
+                      batch: float = 1.0
                       ) -> Management:
     """Polling-vs-interrupt crossover from the per-mode TX fits.
 
@@ -235,13 +236,23 @@ def choose_management(tx_fits: dict[str, TransferCostModel],
     per-class dispatch latency under the CURRENT traffic mix. Polling
     never queues, so under contention the crossover moves right (exactly
     the paper's arbitration-overhead term, now measured from real serving
-    traces instead of assumed zero)."""
+    traces instead of assumed zero).
+
+    ``batch``: observed tx_many/rx_many group size of this stream (EWMA;
+    1.0 = singles). A batched group pays the interrupt path's dispatch
+    wait ONCE for the whole group, so the per-descriptor extra-t0 is
+    amortized by ``batch`` and the crossover moves back LEFT — batching
+    makes the interrupt driver win at smaller payloads, the tentpole's
+    whole point. The fitted t0 is NOT divided here: batched chunk samples
+    already carry amortized per-descriptor times, and dividing again
+    would double-count the saving."""
     poll = tx_fits.get(Management.POLLING.value)
     intr = tx_fits.get(Management.INTERRUPT.value)
     if poll is None or intr is None:
         return current
     if interrupt_extra_t0_s > 0.0:
-        intr = TransferCostModel(t0_s=intr.t0_s + interrupt_extra_t0_s,
+        extra = interrupt_extra_t0_s / max(float(batch), 1.0)
+        intr = TransferCostModel(t0_s=intr.t0_s + extra,
                                  bw_Bps=intr.bw_Bps)
     n_star = TransferCostModel.crossover_bytes(poll, intr)
     return Management.POLLING if payload_bytes < n_star else Management.INTERRUPT
@@ -286,6 +297,10 @@ class OnlineTransferController:
         # stream — the interrupt driver's measured queue-wait, folded into
         # the crossover decision (see choose_management).
         self._dispatch_t0_s = 0.0  # guarded-by: _lock
+        # EWMA of the tx_many/rx_many group size observed on this stream
+        # (1.0 = singles): the dispatch queue-wait above is paid once per
+        # GROUP, so the crossover amortizes it by this factor.
+        self._batch_ewma = 1.0  # guarded-by: _lock
         # enforced bytes/s ceiling on this stream's priority class (the
         # runtime's set_class_cap): plans are sized against the EFFECTIVE
         # (post-cap) bandwidth — a capped stream must not chase block/
@@ -360,6 +375,17 @@ class OnlineTransferController:
         with self._lock:
             self._dispatch_t0_s = ((1 - alpha) * self._dispatch_t0_s
                                    + alpha * float(seconds))
+
+    def note_submit_batch(self, n: int, alpha: float = 0.25) -> None:
+        """Fold an observed tx_many/rx_many group size into the batch EWMA
+        the crossover amortizes dispatch latency by. Single submits call
+        this with 1 (or not at all — the EWMA decays toward 1 only through
+        explicit singles, so a steady batched stream keeps its factor)."""
+        if n < 1:
+            return
+        with self._lock:
+            self._batch_ewma = ((1 - alpha) * self._batch_ewma
+                                + alpha * float(n))
 
     def set_bandwidth_cap(self, bytes_per_s: float | None) -> None:
         """Tell the planner this stream's class is capped at ``bytes_per_s``
@@ -470,7 +496,8 @@ class OnlineTransferController:
             tx_fits.setdefault(mode, m)
             mgmt = choose_management(
                 tx_fits, payload, current=self.plan.policy.management,
-                interrupt_extra_t0_s=self._dispatch_t0_s)
+                interrupt_extra_t0_s=self._dispatch_t0_s,
+                batch=self._batch_ewma)
             if mgmt is Management.POLLING:
                 # below the crossover the user-level polling driver wins:
                 # one channel, one un-partitioned transfer, no worker pool.
@@ -923,6 +950,18 @@ class AdaptiveChannelGroup:
             if ticket is not None:
                 self._outstanding.append(ticket)
 
+    def _leave_many(self, tickets: "Sequence[Ticket] | None") -> None:
+        # batched variant of _leave: every per-descriptor ticket of the
+        # group pins the current generation until it resolves (a swap must
+        # never rebuild rings under an in-flight batch).
+        with self._lock:
+            self._entrants -= 1
+            self._outstanding = [t for t in self._outstanding
+                                 if not t.complete]
+            if tickets:
+                self._outstanding.extend(t for t in tickets
+                                         if t is not None)
+
     @staticmethod
     def _done_ticket(result: list) -> Ticket:
         ev = threading.Event()
@@ -988,6 +1027,50 @@ class AdaptiveChannelGroup:
            ) -> list[np.ndarray]:
         return self.rx_async(device_arrays, out=out,
                              priority=priority).wait()
+
+    # -- batched descriptor submission ---------------------------------------
+    def tx_many(self, host_arrays: "Sequence[np.ndarray]",
+                priority: PriorityClass | None = None) -> list[Ticket]:
+        """Batched TX through the current generation; the observed group
+        size feeds the controller's batch EWMA so the polling/interrupt
+        crossover prices batched dispatch correctly. On a polling
+        generation each submit IS the transfer (done tickets)."""
+        grp = self._enter()
+        tickets = None
+        try:
+            if grp.policy.management is Management.INTERRUPT:
+                tickets = grp.tx_many(host_arrays, priority=priority)
+                self.controller.note_submit_batch(len(tickets))
+                return tickets
+            done = []
+            for a in host_arrays:
+                chunks = grp.tx(np.asarray(a))
+                done.append(self._done_ticket(
+                    chunks[0] if len(chunks) == 1 else chunks))
+            return done
+        finally:
+            self._leave_many(tickets)
+
+    def rx_many(self, device_arrays: Sequence[jax.Array],
+                out: "np.ndarray | Sequence[np.ndarray] | None" = None,
+                priority: PriorityClass | None = None) -> list[Ticket]:
+        """Batched RX through the current generation (see :meth:`tx_many`);
+        ``out`` keeps the flat-carve / per-array zero-copy contract."""
+        grp = self._enter()
+        tickets = None
+        try:
+            if grp.policy.management is Management.INTERRUPT:
+                tickets = grp.rx_many(device_arrays, out=out,
+                                      priority=priority)
+                self.controller.note_submit_batch(len(tickets))
+                return tickets
+            arrays = list(device_arrays)
+            if out is not None and isinstance(out, np.ndarray):
+                out = carve_flat_out(out, arrays)
+            results = grp.rx(arrays, out=out)
+            return [self._done_ticket(r) for r in results]
+        finally:
+            self._leave_many(tickets)
 
     # -- reporting -----------------------------------------------------------
     def summary(self) -> dict[str, dict[str, float]]:

@@ -874,6 +874,58 @@ class ChannelGroup:
         ``out=`` the results land in the caller's preallocated buffers."""
         return self.rx_async(device_arrays, out=out, priority=priority).wait()
 
+    # -- batched descriptor submission ----------------------------------------
+    def tx_many(self, host_arrays: Sequence[np.ndarray],
+                priority: PriorityClass | None = None) -> list[Ticket]:
+        """Batched TX through the group: the K logical descriptors are
+        round-robin partitioned over the ACTIVE channels and each channel's
+        share goes down as ONE ring transaction (``TransferEngine.
+        tx_many``); tickets come back in input order. Unlike the striped
+        paths there is no sibling-retry here — a per-descriptor fault
+        surfaces on its own ticket (the batch amortization contract is
+        exactly-once submission); byte accounting lands on the per-channel
+        engines."""
+        arrays = [np.asarray(a) for a in host_arrays]
+        active = self._active_indices()
+        if len(arrays) <= 1 or len(active) <= 1:
+            return self._next_channel().tx_many(arrays, priority=priority)
+        tickets: list[Ticket | None] = [None] * len(arrays)
+        for c, ch in enumerate(active):
+            idxs = list(range(c, len(arrays), len(active)))
+            if not idxs:
+                continue
+            sub = self.engines[ch].tx_many([arrays[i] for i in idxs],
+                                           priority=priority)
+            for i, t in zip(idxs, sub):
+                tickets[i] = t
+        return tickets  # type: ignore[return-value]
+
+    def rx_many(self, device_arrays: Sequence[jax.Array],
+                out: "np.ndarray | Sequence[np.ndarray] | None" = None,
+                priority: PriorityClass | None = None) -> list[Ticket]:
+        """Batched RX through the group, mirroring :meth:`tx_many`.
+        ``out`` accepts per-array buffers or ONE flat array carved into
+        per-descriptor views (zero-copy), exactly like :meth:`rx_async`."""
+        arrays = list(device_arrays)
+        outs = self._rx_outs(arrays, out)
+        active = self._active_indices()
+        if len(arrays) <= 1 or len(active) <= 1:
+            return self._next_channel().rx_many(
+                arrays, out=outs if out is not None else None,
+                priority=priority)
+        tickets: list[Ticket | None] = [None] * len(arrays)
+        for c, ch in enumerate(active):
+            idxs = list(range(c, len(arrays), len(active)))
+            if not idxs:
+                continue
+            sub = self.engines[ch].rx_many(
+                [arrays[i] for i in idxs],
+                out=([outs[i] for i in idxs] if out is not None else None),
+                priority=priority)
+            for i, t in zip(idxs, sub):
+                tickets[i] = t
+        return tickets  # type: ignore[return-value]
+
     # -- reporting ------------------------------------------------------------
     def summary(self) -> dict[str, dict[str, float]]:
         # snapshot under the lock: stripe joiners append records

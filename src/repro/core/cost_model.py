@@ -126,6 +126,15 @@ class TransferCostModel:
                  b.bw_Bps / max(a.bw_Bps, 1e-3))
         return max(rt, rb)
 
+    def amortized(self, batch: float) -> "TransferCostModel":
+        """The per-descriptor cost model under batched submission: a group
+        of ``batch`` descriptors pays the fixed management overhead ONCE
+        (one ring transaction, one completion handoff), so each logical
+        descriptor sees ``t0 / batch``; bandwidth is unchanged — the
+        paper's management-overhead amortization in model form."""
+        return TransferCostModel(self.t0_s / max(float(batch), 1.0),
+                                 self.bw_Bps)
+
     @staticmethod
     def crossover_bytes(a: "TransferCostModel", b: "TransferCostModel") -> float:
         """Payload size where model b becomes faster than model a (UNIQUE).

@@ -279,6 +279,20 @@ class FaultInjector:
                 return super().rx_async(device_arrays, callback=callback,
                                         out=out, priority=priority)
 
+            # batched submission: a submit_error fails the WHOLE group
+            # before any slot is taken (uniform with tx/rx_async), while
+            # per-descriptor ``_one`` faults fail only the affected ticket
+            # — overriding ``_one`` already forces the engine off the
+            # fused fast path, so injection seams stay per-descriptor.
+            def tx_many(self, host_arrays, priority=None):
+                self._maybe_submit_error("tx")
+                return super().tx_many(host_arrays, priority=priority)
+
+            def rx_many(self, device_arrays, out=None, priority=None):
+                self._maybe_submit_error("rx")
+                return super().rx_many(device_arrays, out=out,
+                                       priority=priority)
+
         def factory(policy, **kw):
             eng = _FaultEngine(policy, **kw)
             with injector._lock:

@@ -104,6 +104,37 @@ point of the ZynqNet-style per-class accounting. Workers park on a
 timed wait sized to the earliest bucket refill, so a cap never strands
 queued work.
 
+Completion coalescing (per-class completion vectors)
+----------------------------------------------------
+The paper's floor on small packets is *management* overhead, not bus
+bandwidth — and once descriptors shrink to token size, the per-completion
+wakeup itself becomes the dominant management cost. Real interrupt
+controllers solve this with MSI-X-style *completion vectors*: many DMA
+completions coalesce into one interrupt. This runtime mirrors that. Each
+:class:`PriorityClass` owns a completion vector (:class:`CoalescePolicy`)
+that batches up to ``max_batch`` finished descriptors *or* a ``budget_s``
+time window into ONE delivery pass — one stats/ticket/outstanding sweep
+instead of N. The policy is adaptive in two ways:
+
+- *class-shaped defaults* (:data:`DEFAULT_COALESCE`): TOKEN/SENSOR
+  coalesce almost nothing (batch 2, 100 us) to protect p99; LAYER/BULK
+  coalesce aggressively (batch 8/32, 1-2 ms) to amortize dispatch;
+- *arrival-gated*: a class whose inter-completion gap (EWMA) exceeds its
+  budget delivers immediately — coalescing sparse traffic would only add
+  latency, never save a wakeup.
+
+Two safety rules keep coalescing invisible to correctness: an errored
+descriptor always flushes its class vector immediately (fault paths are
+never delayed), and a completion that leaves its class *pipeline-empty*
+(no queued or in-service siblings) flushes too — a synchronous waiter at
+the end of a wave never stalls on the budget timer. Engine-side
+protocols (ring-slot release, master-ticket ``finish_one``) run in the
+descriptor body itself and are therefore never deferred; only the
+runtime-level (stats, done-event, outstanding) handoff coalesces.
+Savings and added latency are visible per class in
+:meth:`TransferRuntime.class_summary` (``completion_wakeups``,
+``wakeups_saved``, ``coalesce_batch_p99``, ``coalesce_delay_p99_ms``).
+
 NEURAghe (Meloni et al., 2017) shows the same lesson at system scale — a
 single runtime arbitrating PS/PL work is what makes heterogeneous CNN
 inference compose; ZynqNet (Gschwend, 2016) motivates the per-class
@@ -166,6 +197,29 @@ DEFAULT_QOS: dict[PriorityClass, QosSpec] = {
     PriorityClass.TOKEN: QosSpec(weight=8.0, deadline_s=1e-3),
     PriorityClass.LAYER: QosSpec(weight=2.0, deadline_s=20e-3),
     PriorityClass.BULK: QosSpec(weight=1.0, deadline_s=100e-3),
+}
+
+@dataclass(frozen=True)
+class CoalescePolicy:
+    """Completion-vector coalescing parameters of one priority class.
+
+    ``max_batch``: flush the vector once this many completions coalesced
+    (``<= 1`` disables coalescing for the class). ``budget_s``: flush no
+    later than this long after the first completion entered the vector —
+    the hard bound on latency a coalesced completion can be charged."""
+
+    max_batch: int
+    budget_s: float
+
+
+# MSI-X-shaped defaults: latency classes coalesce a completion pair at
+# most (protecting p99), throughput classes amortize a whole wave of
+# small descriptors into one wakeup.
+DEFAULT_COALESCE: dict[PriorityClass, CoalescePolicy] = {
+    PriorityClass.SENSOR: CoalescePolicy(max_batch=2, budget_s=100e-6),
+    PriorityClass.TOKEN: CoalescePolicy(max_batch=2, budget_s=100e-6),
+    PriorityClass.LAYER: CoalescePolicy(max_batch=8, budget_s=1e-3),
+    PriorityClass.BULK: CoalescePolicy(max_batch=32, budget_s=2e-3),
 }
 
 # Classes served by the reserved dispatch lane (see TransferRuntime): tiny,
@@ -237,6 +291,16 @@ class ClassStats:
     faults: int = 0
     retries: int = 0
     quarantines: int = 0
+    # completion coalescing ledger: delivery passes actually taken, how
+    # many per-completion wakeups the vector saved, and the windowed
+    # batch-size / added-latency distributions. An immediate (uncoalesced)
+    # delivery counts as one wakeup with batch size 1 and zero delay.
+    completion_wakeups: int = 0
+    wakeups_saved: int = 0
+    coalesce_batch: "collections.deque[int]" = field(
+        default_factory=lambda: collections.deque(maxlen=_LAT_WINDOW))
+    coalesce_delay_s: "collections.deque[float]" = field(
+        default_factory=lambda: collections.deque(maxlen=_LAT_WINDOW))
     dispatch_lat_s: "collections.deque[float]" = field(
         default_factory=lambda: collections.deque(maxlen=_LAT_WINDOW))
     service_lat_s: "collections.deque[float]" = field(
@@ -262,6 +326,12 @@ class ClassStats:
             "faults": self.faults,
             "retries": self.retries,
             "quarantines": self.quarantines,
+            "completion_wakeups": self.completion_wakeups,
+            "wakeups_saved": self.wakeups_saved,
+            "coalesce_batch_p50": _pct(self.coalesce_batch, 0.5),
+            "coalesce_batch_p99": _pct(self.coalesce_batch, 0.99),
+            "coalesce_delay_p50_ms": _pct(self.coalesce_delay_s, 0.5) * 1e3,
+            "coalesce_delay_p99_ms": _pct(self.coalesce_delay_s, 0.99) * 1e3,
             "dispatch_p50_ms": _pct(self.dispatch_lat_s, 0.5) * 1e3,
             "dispatch_p99_ms": _pct(self.dispatch_lat_s, 0.99) * 1e3,
             "service_p50_ms": _pct(self.service_lat_s, 0.5) * 1e3,
@@ -362,16 +432,22 @@ class _Descriptor:
 
     __slots__ = ("fn", "done", "out", "cls", "nbytes", "handle",
                  "t_submit", "deadline", "on_cancel",
-                 "started", "service_acc", "t_parked", "preemptions")
+                 "started", "service_acc", "t_parked", "preemptions",
+                 "units")
 
     def __init__(self, fn: Callable[[], Any], cls: PriorityClass,
                  nbytes: int, handle: "RuntimeHandle", deadline_s: float,
-                 on_cancel: Callable[[BaseException], None] | None = None):
+                 on_cancel: Callable[[BaseException], None] | None = None,
+                 units: int = 1):
         self.fn = fn
         self.done = threading.Event()
         self.out: list = []
         self.cls = cls
         self.nbytes = max(int(nbytes), 0)
+        # logical descriptors carried by this one submission (a tx_many/
+        # rx_many group rides one runtime descriptor): dispatch latency is
+        # amortized over units when fed to the adaptive crossover.
+        self.units = max(int(units), 1)
         self.handle = handle
         self.t_submit = time.monotonic()
         self.deadline = self.t_submit + deadline_s
@@ -417,10 +493,10 @@ class RuntimeHandle:
 
     def submit(self, fn: Callable[[], Any], nbytes: int = 0,
                priority: "PriorityClass | None" = None,
-               on_cancel: Callable[[BaseException], None] | None = None
-               ) -> tuple[threading.Event, list]:
+               on_cancel: Callable[[BaseException], None] | None = None,
+               units: int = 1) -> tuple[threading.Event, list]:
         return self.runtime._submit(self, fn, priority or self.cls, nbytes,
-                                    on_cancel)
+                                    on_cancel, units)
 
     def close(self, timeout: float = 5.0) -> None:
         self.runtime._close_handle(self, timeout)
@@ -448,7 +524,8 @@ class TransferRuntime:
                  latency_recency_s: float = _LATENCY_RECENCY_S,
                  idle_timeout_s: float = _IDLE_TIMEOUT_S,
                  background_budget_s: float = 50e-6,
-                 cap_burst_s: float = 0.05):
+                 cap_burst_s: float = 0.05,
+                 coalesce: dict[PriorityClass, CoalescePolicy] | None = None):
         if workers is None:
             workers = max(2, min(_MAX_WORKERS, os.cpu_count() or 2))
         self.workers = max(1, int(workers))  # guarded-by: _cond
@@ -475,6 +552,28 @@ class TransferRuntime:
         self._queues: dict[PriorityClass, "collections.deque[_Descriptor]"] \
             = {cls: collections.deque()                     # guarded-by: _cond
                for cls in PriorityClass}
+        # completion coalescing: per-class vector of finished-but-not-yet-
+        # delivered descriptors [(descriptor, t_done)], the wall deadline
+        # of the oldest vector entry, the EWMA inter-completion gap (the
+        # adaptive "is coalescing worth it" signal) and the stamp of the
+        # last completion per class.
+        self.coalesce = dict(DEFAULT_COALESCE)              # guarded-by: _cond
+        if coalesce:
+            self.coalesce.update(coalesce)
+        self._vectors: dict[PriorityClass,
+                            list[tuple[_Descriptor, float]]] = {
+            cls: [] for cls in PriorityClass}               # guarded-by: _cond
+        self._vec_deadline: dict[PriorityClass, float] = {
+            cls: float("inf") for cls in PriorityClass}     # guarded-by: _cond
+        self._coalesce_gap: dict[PriorityClass, float] = {
+            cls: float("inf") for cls in PriorityClass}     # guarded-by: _cond
+        self._coalesce_last: dict[PriorityClass, float] = {
+            cls: float("-inf") for cls in PriorityClass}    # guarded-by: _cond
+        # in-service descriptors per class (the pipeline-empty flush test:
+        # a completion with no queued AND no in-service siblings must
+        # deliver now, not wait out the coalescing budget).
+        self._executing_by: dict[PriorityClass, int] = {
+            cls: 0 for cls in PriorityClass}                # guarded-by: _cond
         self._vtime: dict[PriorityClass, float] = {
             cls: 0.0 for cls in PriorityClass}              # guarded-by: _cond
         # descriptors currently in service
@@ -563,6 +662,27 @@ class TransferRuntime:
             b = self._caps.get(cls)
             return b.rate if b is not None else None
 
+    # -- completion coalescing -----------------------------------------------
+    def set_coalesce(self, cls: PriorityClass,
+                     policy: CoalescePolicy | None) -> None:
+        """Set (or clear, with ``None`` / ``max_batch <= 1``) the
+        completion-vector policy of one class. Takes effect on the next
+        completion; anything already coalesced in the class vector is
+        delivered immediately so a policy change never strands a ticket."""
+        drained: list[tuple[PriorityClass, list]] = []
+        with self._cond:
+            if policy is None or policy.max_batch <= 1:
+                self.coalesce.pop(cls, None)
+            else:
+                self.coalesce[cls] = policy
+            vec = self._vectors[cls]
+            if vec:
+                self._vectors[cls] = []
+                drained.append((cls, vec))
+            self._cond.notify_all()
+        for batch in drained:
+            self._deliver(batch)
+
     def register_background(self, fn: Callable[[], None]) -> Callable[[], None]:
         """Register a recurring SENSOR-style background task: workers give
         it budgeted slices between completion dispatches (and while idle) —
@@ -592,10 +712,11 @@ class TransferRuntime:
     # -- submission ----------------------------------------------------------
     def _submit(self, handle: RuntimeHandle, fn: Callable[[], Any],
                 cls: PriorityClass, nbytes: int,
-                on_cancel: Callable[[BaseException], None] | None = None
-                ) -> tuple[threading.Event, list]:
+                on_cancel: Callable[[BaseException], None] | None = None,
+                units: int = 1) -> tuple[threading.Event, list]:
         spec = self.qos[cls]
-        d = _Descriptor(fn, cls, nbytes, handle, spec.deadline_s, on_cancel)
+        d = _Descriptor(fn, cls, nbytes, handle, spec.deadline_s, on_cancel,
+                        units)
         with self._cond:
             if self._closed:
                 raise RuntimeError("submit() on a closed TransferRuntime")
@@ -717,13 +838,20 @@ class TransferRuntime:
                     bucket.charge(d.nbytes)
             st.dispatched += 1
             st.dispatch_lat_s.append(now - d.t_submit)
-            st.dispatch_recent.append((now, now - d.t_submit))
+            # dispatch_recent feeds the adaptive crossover's effective t0:
+            # a batched group (units > 1) pays ONE queue wait for its whole
+            # set of logical descriptors, so the per-descriptor price the
+            # cost model should see is amortized. dispatch_lat_s above
+            # stays raw wall-clock for the p99 summaries.
+            st.dispatch_recent.append(
+                (now, (now - d.t_submit) / d.units))
             self.dispatches += 1
         elif d.t_parked is not None:
             # resuming preempted work: record how long it sat parked.
             st.preempt_park_s.append(now - d.t_parked)
             d.t_parked = None
         self._executing += 1
+        self._executing_by[d.cls] += 1
         return d
 
     # -- the event loop ------------------------------------------------------
@@ -745,9 +873,10 @@ class TransferRuntime:
             bg_fn = None
             stay = False
             with self._cond:
+                due = self._drain_due_locked()
                 d = self._pick_locked()
                 is_spinner = False
-                if d is None and not self._closed:
+                if d is None and not due and not self._closed:
                     # exactly ONE worker polls the background lane at the
                     # fast cadence; the rest wait at idle_timeout_s and
                     # may idle-exit — N workers must not busy-wake every
@@ -763,12 +892,21 @@ class TransferRuntime:
                         # until the earliest bucket refill, then re-pick.
                         timeout = min(timeout,
                                       max(self._cap_wait_hint, 1e-4))
+                    vec_hint = self._vector_wait_hint_locked()
+                    if vec_hint is not None:
+                        # coalesced completions pending: wake at the
+                        # earliest vector budget deadline, never later.
+                        timeout = min(timeout, max(vec_hint, 1e-4))
                     self._cond.wait(timeout)
+                    due = self._drain_due_locked()
                     d = self._pick_locked()
-                if d is None:
-                    if not self._closed and any(self._queues.values()):
+                if d is None and not due:
+                    if not self._closed and (
+                            any(self._queues.values())
+                            or any(self._vectors.values())):
                         # queued work exists but is deferred (cap bucket
-                        # refilling / reserved lane): this worker must NOT
+                        # refilling / reserved lane), or a completion
+                        # vector is still filling: this worker must NOT
                         # idle-exit — with a cap, no completion notify may
                         # ever come to wake a respawned worker.
                         stay = True
@@ -782,6 +920,8 @@ class TransferRuntime:
                         return
                     else:
                         bg_fn = self._next_background_locked()
+            for b in due:
+                self._deliver(b)
             if d is not None:
                 if not self._execute(d):
                     continue  # parked mid-chunk: it resumes via the queue
@@ -817,6 +957,7 @@ class TransferRuntime:
             self._queues[d.cls].appendleft(d)
             self.stats[d.cls].preemptions += 1
             self._executing -= 1
+            self._executing_by[d.cls] -= 1
             self._cond.notify()
             return True
 
@@ -851,27 +992,142 @@ class TransferRuntime:
                 if err is None:
                     err = e
         d.out.append(err if err is not None else result)
-        # ordering is load-bearing, in three steps:
-        # 1. completion stats BEFORE the done event — a caller unblocked
-        #    by wait() must see its own completion in class_summary();
+        # hand the completion to the per-class vector: it either flushes a
+        # batch now (immediate / max_batch / pipeline-empty / error) or
+        # parks the descriptor until the budget deadline. _executing drops
+        # here regardless — the WORKER is free even when the runtime-level
+        # (stats, done-event, outstanding) handoff is deferred. Due
+        # vectors of OTHER classes ride the same lock acquisition so a
+        # fully-busy pool still bounds their staleness.
         with self._cond:
-            st = self.stats[d.cls]
-            st.completed += 1
-            st.service_lat_s.append(d.service_acc)
-        # 2. the done event — tickets resolve;
-        d.done.set()
-        # 3. outstanding/executing AFTER done — a close() drain observing
-        #    outstanding == 0 may then rely on every ticket being set.
-        with self._cond:
-            d.handle._outstanding -= 1
             self._executing -= 1
+            self._executing_by[d.cls] -= 1
+            batch = self._vector_add_locked(d, err)
+            due = self._drain_due_locked()
             if any(self._queues.values()):
                 # a worker slot just freed: a head deferred by the reserved
                 # latency lane (or parked waiters) must be re-examined NOW
                 self._cond.notify()
-            if d.handle._closed and d.handle._outstanding <= 0:
-                self._cond.notify_all()
+        self._deliver(batch)
+        for b in due:
+            self._deliver(b)
         return True
+
+    # -- completion vectors (MSI-X-style coalescing) --------------------------
+    # requires-lock: _cond
+    def _vector_add_locked(self, d: _Descriptor,
+                           err: BaseException | None
+                           ) -> tuple[PriorityClass, list] | None:
+        """Fold a finished descriptor into its class completion vector.
+        Returns a batch ``(cls, [(descriptor, t_done), ...])`` the CALLER
+        must hand to :meth:`_deliver` after releasing the lock, or None
+        when the completion coalesced (a later flush delivers it)."""
+        assert_held(self._cond, "_vector_add_locked")
+        now = time.monotonic()
+        # EWMA of the inter-completion gap — the adaptive signal: when
+        # completions arrive slower than the coalescing budget, batching
+        # can never fill a vector in time and would only add latency.
+        gap = now - self._coalesce_last[d.cls]
+        self._coalesce_last[d.cls] = now
+        prev = self._coalesce_gap[d.cls]
+        self._coalesce_gap[d.cls] = (
+            gap if prev == float("inf") else 0.75 * prev + 0.25 * gap)
+        vec = self._vectors[d.cls]
+        entry = (d, now)
+        pol = self.coalesce.get(d.cls)
+        if (pol is None or pol.max_batch <= 1 or err is not None
+                or self._closed or d.handle._closed):
+            # immediate delivery — an error (or teardown) also flushes the
+            # whole vector so completion order within the class holds.
+            if vec:
+                self._vectors[d.cls] = []
+                return (d.cls, vec + [entry])
+            return (d.cls, [entry])
+        if not vec and self._coalesce_gap[d.cls] > pol.budget_s:
+            return (d.cls, [entry])  # sparse arrivals: don't coalesce
+        vec.append(entry)
+        if len(vec) == 1:
+            self._vec_deadline[d.cls] = now + pol.budget_s
+        if (len(vec) >= pol.max_batch
+                or (not self._queues[d.cls]
+                    and self._executing_by[d.cls] == 0)):
+            # full vector — or the class pipeline just drained: the wave
+            # is over, a synchronous waiter must not eat the budget timer.
+            self._vectors[d.cls] = []
+            return (d.cls, vec)
+        return None
+
+    def _drain_due_locked(self) -> list[tuple[PriorityClass, list]]:  # requires-lock: _cond
+        """Pop every class vector whose budget deadline has passed; the
+        caller delivers them outside the lock."""
+        assert_held(self._cond, "_drain_due_locked")
+        now = time.monotonic()
+        batches = []
+        for cls, vec in self._vectors.items():
+            if vec and now >= self._vec_deadline[cls]:
+                self._vectors[cls] = []
+                batches.append((cls, vec))
+        return batches
+
+    def _drain_all_locked(self) -> list[tuple[PriorityClass, list]]:  # requires-lock: _cond
+        """Pop every non-empty class vector regardless of deadline (early
+        delivery is always safe); used by teardown and timeout escalation."""
+        assert_held(self._cond, "_drain_all_locked")
+        batches = []
+        for cls, vec in self._vectors.items():
+            if vec:
+                self._vectors[cls] = []
+                batches.append((cls, vec))
+        return batches
+
+    def _vector_wait_hint_locked(self) -> float | None:  # requires-lock: _cond
+        """Seconds until the earliest pending vector deadline (None when
+        every vector is empty) — idle workers clamp their wait on it so a
+        coalesced completion is never stranded past its budget."""
+        assert_held(self._cond, "_vector_wait_hint_locked")
+        now = time.monotonic()
+        hint = None
+        for cls, vec in self._vectors.items():
+            if vec:
+                wait = self._vec_deadline[cls] - now
+                if hint is None or wait < hint:
+                    hint = wait
+        return hint
+
+    def _deliver(self, batch: tuple[PriorityClass, list] | None) -> None:
+        """Complete one coalesced batch — ONE wakeup's worth of handoffs.
+        Preserves :meth:`_execute`'s load-bearing three-step ordering,
+        batched:
+        1. completion stats BEFORE the done events — a caller unblocked
+           by wait() must see its own completion in class_summary();
+        2. the done events, in completion order — tickets resolve;
+        3. outstanding AFTER done — a close() drain observing
+           outstanding == 0 may then rely on every ticket being set."""
+        if not batch:
+            return
+        cls, entries = batch
+        t_flush = time.monotonic()
+        with self._cond:
+            st = self.stats[cls]
+            st.completion_wakeups += 1
+            st.wakeups_saved += len(entries) - 1
+            st.coalesce_batch.append(len(entries))
+            for d, t_done in entries:
+                st.completed += 1
+                st.service_lat_s.append(d.service_acc)
+                st.coalesce_delay_s.append(t_flush - t_done)
+        for d, _ in entries:
+            d.done.set()
+        with self._cond:
+            for d, _ in entries:
+                d.handle._outstanding -= 1
+            if any(self._queues.values()):
+                self._cond.notify()
+            for d, _ in entries:
+                if d.handle._closed and d.handle._outstanding <= 0:
+                    self._cond.notify_all()
+                    break
+        return
 
     # -- background (SENSOR ingest) ------------------------------------------
     def _next_background_locked(self) -> Callable[[], None] | None:  # requires-lock: _cond
@@ -953,6 +1209,11 @@ class TransferRuntime:
         timed_out: list[_Descriptor] = []
         now = time.monotonic()
         with self._cond:
+            # escalation implies a waiter is already past its patience:
+            # flush every completion vector early (always safe) so a
+            # coalesced-but-undelivered completion is never mistaken for
+            # a dropped one.
+            pending = self._drain_all_locked()
             for cls, q in self._queues.items():
                 keep = collections.deque()
                 while q:
@@ -968,6 +1229,8 @@ class TransferRuntime:
                 q.extend(keep)
             if timed_out:
                 self._cond.notify_all()
+        for b in pending:
+            self._deliver(b)
         # outside the lock: done.set + on_cancel run submitter-side protocol
         # (ring slot release, master-ticket errors) that takes engine locks.
         for d in timed_out:
@@ -1036,6 +1299,13 @@ class TransferRuntime:
             if handle._closed and handle not in self._handles:
                 return
             handle._closed = True
+            # flush every coalescing vector before draining: a completion
+            # parked in a vector holds _outstanding up, and the drain wait
+            # below must converge on real in-flight work only.
+            pending = self._drain_all_locked()
+        for b in pending:
+            self._deliver(b)
+        with self._cond:
             while handle._outstanding > 0:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
@@ -1061,6 +1331,7 @@ class TransferRuntime:
             if self._closed:
                 return
             self._closed = True
+            pending = self._drain_all_locked()
             for h in list(self._handles):
                 h._closed = True
                 cancelled.extend(self._cancel_handle_locked(h))
@@ -1069,6 +1340,8 @@ class TransferRuntime:
             self._background.clear()
             threads = list(self._threads)
             self._cond.notify_all()
+        for b in pending:
+            self._deliver(b)
         self._finish_cancelled(cancelled)
         for t in threads:
             t.join(timeout=timeout)
@@ -1092,6 +1365,9 @@ class TransferRuntime:
                 bucket = self._caps.get(cls)
                 row["cap_bytes_per_s"] = (bucket.rate if bucket is not None
                                           else None)
+                pol = self.coalesce.get(cls)
+                row["coalesce_max_batch"] = (pol.max_batch
+                                             if pol is not None else 1)
                 out[cls.value] = row
             return out
 

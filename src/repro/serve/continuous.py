@@ -171,15 +171,34 @@ class ContinuousBatchingEngine:
         # crosses back to the host, as a measured RX on the engine. Under
         # INTERRUPT it rides a shared-runtime worker at TOKEN priority
         # (arbitrated ahead of bulk layer TX) while the next-step input
-        # prep dispatches.
-        out = [self._tok_host]  # reused every step: zero-copy detokenize
-        ticket = (self.transfer.rx_async([tok_dev], out=out,
-                                         priority=PriorityClass.TOKEN)
-                  if self.transfer.policy.management is Management.INTERRUPT
-                  else None)
-        self.tokens = tok_dev[:, None].astype(jnp.int32)
-        nxt = ticket.wait(self.rx_timeout_s)[0] if ticket else self.transfer.rx(
-            [tok_dev], out=out, priority=PriorityClass.TOKEN)[0]
+        # prep dispatches. With more than one active slot the per-request
+        # tokens go down as ONE rx_many ring transaction — per-slot
+        # tickets, one completion handoff — instead of paying the
+        # per-descriptor management overhead per request (the batched-
+        # submission consumer the coalescing tentpole was built for).
+        interrupt = (
+            self.transfer.policy.management is Management.INTERRUPT)
+        if (interrupt and len(active) > 1
+                and hasattr(self.transfer, "rx_many")):
+            tickets = self.transfer.rx_many(
+                [tok_dev[s:s + 1] for s in active],
+                out=[self._tok_host[s:s + 1] for s in active],
+                priority=PriorityClass.TOKEN)
+            self.tokens = tok_dev[:, None].astype(jnp.int32)
+            for t in tickets:
+                t.wait(self.rx_timeout_s)
+            # per-slot landings wrote self._tok_host in place (inactive
+            # slots keep stale values and are never read below).
+            nxt = self._tok_host
+        else:
+            out = [self._tok_host]  # reused every step: zero-copy detok
+            ticket = (self.transfer.rx_async([tok_dev], out=out,
+                                             priority=PriorityClass.TOKEN)
+                      if interrupt else None)
+            self.tokens = tok_dev[:, None].astype(jnp.int32)
+            nxt = (ticket.wait(self.rx_timeout_s)[0] if ticket
+                   else self.transfer.rx([tok_dev], out=out,
+                                         priority=PriorityClass.TOKEN)[0])
         nxt = np.asarray(nxt).reshape(-1)
         for slot in active:
             self.slots[slot].tokens.append(int(nxt[slot]))

@@ -522,3 +522,105 @@ def test_chaos_hammer_exact_byte_accounting_under_qos_load():
     for cls in classes:
         assert summ[cls.value]["completed"] > 0
     rt.close()
+
+
+# ---- batched submission under faults (tx_many / rx_many) -------------------
+
+def test_many_mid_batch_fault_fails_only_affected_ticket():
+    """A per-descriptor fault inside a batched group errors ONLY its
+    ticket: siblings complete with exact data, the group's single ring
+    slot is released exactly once, and the engine is reusable."""
+    inj = FaultInjector(FaultPlan(seed=5, specs=(
+        FaultSpec(kind="drop", p=1.0, direction="tx", after_ops=2,
+                  hold_s=0.0, max_injections=1),)))
+    eng = inj.engine_factory()(_ring(depth=4))
+    arrays = [np.full(1 << 10, i, np.uint8) for i in range(5)]
+    tickets = eng.tx_many(arrays)
+    assert len(tickets) == 5
+    # ops on channel 0: submit-stage check (op 0), then one op per
+    # descriptor (1..5) — after_ops=2 drops the SECOND descriptor.
+    with pytest.raises(InjectedFault):
+        tickets[1].wait(5.0)
+    for i in (0, 2, 3, 4):
+        dev = tickets[i].wait(5.0)
+        np.testing.assert_array_equal(
+            np.asarray(dev).reshape(-1).view(np.uint8), arrays[i])
+    _assert_ring_clean(eng)
+    # exact accounting: only the 4 surviving descriptors' bytes recorded
+    assert eng.tx_bytes_total == 4 * (1 << 10)
+    # immediately reusable for another batch
+    again = [t.wait(5.0) for t in eng.tx_many(arrays[:2])]
+    assert len(again) == 2
+    _assert_ring_clean(eng)
+    eng.close()
+
+
+def test_many_rx_drop_never_writes_out_buffer():
+    """A dropped RX descriptor in a batch must not touch the caller's
+    ``out=`` landing buffer; sibling descriptors land theirs exactly."""
+    inj = FaultInjector(FaultPlan(seed=6, specs=(
+        FaultSpec(kind="drop", p=1.0, direction="rx", hold_s=0.0,
+                  max_injections=1),)))
+    eng = inj.engine_factory()(_ring(depth=4))
+    arrays = [np.full(256, 10 + i, np.uint8) for i in range(4)]
+    devs = [t.wait(5.0) for t in eng.tx_many(arrays)]
+    outs = [np.full(256, 0xEE, np.uint8) for _ in arrays]
+    tickets = eng.rx_many(devs, out=outs)
+    # the first RX op draws the single drop; the rest land
+    with pytest.raises(InjectedFault):
+        tickets[0].wait(5.0)
+    np.testing.assert_array_equal(outs[0], np.full(256, 0xEE, np.uint8))
+    for i in (1, 2, 3):
+        assert tickets[i].wait(5.0) is outs[i]
+        np.testing.assert_array_equal(outs[i], arrays[i])
+    _assert_ring_clean(eng)
+    assert eng.rx_bytes_total == 3 * 256
+    eng.close()
+
+
+def test_many_submit_error_fails_group_before_any_slot():
+    """A transient submit_error on the batched entry points fails the
+    whole group AT THE CALL (uniform with tx/rx_async) — no ring slot is
+    consumed, and the next batch goes through clean."""
+    inj = FaultInjector(FaultPlan(seed=7, specs=(
+        FaultSpec(kind="submit_error", p=1.0, direction="tx",
+                  max_injections=1),
+        FaultSpec(kind="submit_error", p=1.0, direction="rx",
+                  max_injections=1),)))
+    eng = inj.engine_factory()(_ring(depth=2))
+    arrays = [np.zeros(128, np.uint8) for _ in range(3)]
+    with pytest.raises(InjectedFault):
+        eng.tx_many(arrays)
+    _assert_ring_clean(eng)
+    devs = [t.wait(5.0) for t in eng.tx_many(arrays)]  # tx injection spent
+    with pytest.raises(InjectedFault):
+        eng.rx_many(devs)
+    _assert_ring_clean(eng)
+    hosts = [t.wait(5.0) for t in eng.rx_many(devs)]
+    assert len(hosts) == 3
+    _assert_ring_clean(eng)
+    eng.close()
+
+
+def test_group_many_fault_surfaces_on_its_own_ticket():
+    """Through ChannelGroup the batch is round-robin partitioned; a fault
+    on one channel's share errors only the affected descriptor's ticket —
+    NO sibling retry on the batched path (exactly-once submission) — and
+    the other channel's descriptors are unaffected."""
+    inj = FaultInjector(FaultPlan(seed=8, specs=(
+        FaultSpec(kind="drop", p=1.0, channel=0, direction="tx",
+                  hold_s=0.0, max_injections=1),)))
+    g = ChannelGroup(_ring(depth=4), n_channels=2,
+                     engine_factory=inj.engine_factory())
+    arrays = [np.full(512, i, np.uint8) for i in range(4)]
+    tickets = g.tx_many(arrays)  # ch0 gets idx 0,2; ch1 gets idx 1,3
+    with pytest.raises(InjectedFault):
+        tickets[0].wait(5.0)
+    for i in (1, 2, 3):
+        dev = tickets[i].wait(5.0)
+        np.testing.assert_array_equal(
+            np.asarray(dev).reshape(-1).view(np.uint8), arrays[i])
+    assert len(inj.events) == 1 and inj.events[0][0] == 0  # no retry fired
+    for eng in g.engines:
+        _assert_ring_clean(eng)
+    g.close()

@@ -13,6 +13,7 @@ from repro.core.adaptive import AdaptiveChannelGroup
 from repro.core.channels import ChannelGroup
 from repro.core.cost_model import TransferCostModel
 from repro.core.runtime import (
+    CoalescePolicy,
     CooperativeScheduler,
     PollingBackend,
     PreemptibleWork,
@@ -767,4 +768,150 @@ def test_stress_four_classes_on_one_runtime():
         assert s[cls.value]["completed"] > 0
     assert sensor_count["n"] > 0  # collection survived the 4-class storm
     assert rt.n_registered == 0
+    rt.close()
+
+
+# ---- completion coalescing -------------------------------------------------
+
+def test_coalescing_saves_wakeups_on_bulk_burst():
+    """A burst of BULK completions coalesces into few delivery passes:
+    completed == submitted (no lost/double completions), and the wakeup
+    ledger balances exactly (wakeups_saved = completed - wakeups)."""
+    n = 64
+    with TransferRuntime(workers=1) as rt:
+        h = rt.register("burst", PriorityClass.BULK)
+        pairs = [h.submit(lambda: 1, nbytes=4096) for _ in range(n)]
+        for ev, _out in pairs:
+            assert ev.wait(10.0)
+        s = rt.class_summary()["bulk"]
+        assert s["completed"] == s["submitted"] == n
+        # every descriptor's out list holds EXACTLY one result
+        assert all(len(out) == 1 for _ev, out in pairs)
+        assert s["completion_wakeups"] < n  # the burst actually coalesced
+        assert s["wakeups_saved"] == n - s["completion_wakeups"]
+        assert s["coalesce_batch_p99"] > 1
+        h.close()
+
+
+def test_sparse_arrivals_bypass_coalescing():
+    """Arrivals spaced wider than the class budget deliver immediately:
+    batch size stays 1 and no wakeups are saved — an idle decode loop
+    never waits out a coalescing window for its only token."""
+    with TransferRuntime(workers=1) as rt:
+        h = rt.register("sparse", PriorityClass.TOKEN)
+        for _ in range(4):
+            ev, _ = h.submit(lambda: 1, nbytes=64)
+            assert ev.wait(10.0)  # each completes before the next submits
+            time.sleep(0.005)  # >> TOKEN budget (100 us)
+        s = rt.class_summary()["token"]
+        assert s["completed"] == 4
+        assert s["completion_wakeups"] == 4
+        assert s["wakeups_saved"] == 0
+        assert s["coalesce_batch_p99"] == 1
+        h.close()
+
+
+def test_set_coalesce_drains_stranded_vector():
+    """Clearing a class's coalesce policy delivers anything already in its
+    completion vector — a policy change never strands a ticket behind a
+    long budget while a sibling descriptor holds the pipeline open."""
+    with TransferRuntime(workers=1) as rt:
+        rt.set_coalesce(PriorityClass.LAYER,
+                        CoalescePolicy(max_batch=64, budget_s=30.0))
+        h = rt.register("strand", PriorityClass.LAYER)
+        # warm-up: the first completion of a class is always sparse-immediate
+        ev, _ = h.submit(lambda: 0, nbytes=64)
+        assert ev.wait(10.0)
+        release = threading.Event()
+        # A completes while B is queued behind it (pipeline stays open), so
+        # A coalesces into the vector and waits on the 30 s budget...
+        ev_a, _ = h.submit(lambda: 1, nbytes=64)
+        ev_b, _ = h.submit(release.wait, nbytes=64)
+        time.sleep(0.15)
+        assert not ev_a.is_set()  # stranded behind the huge budget
+        # ...until the policy change flushes it.
+        rt.set_coalesce(PriorityClass.LAYER, None)
+        assert ev_a.wait(2.0)
+        release.set()
+        assert ev_b.wait(10.0)
+        h.close()
+
+
+@pytest.mark.stress
+def test_stress_coalescing_four_class_hammer():
+    """4-class load WITH completion coalescing: BULK floods big transfers
+    (widest coalescing window) while TOKEN hammers batched rx_many and
+    SENSOR/LAYER roundtrip. Exact byte accounting per engine, every ticket
+    resolves exactly once, BULK's window saves real wakeups, and a queued
+    TOKEN completion is never delayed past its class deadline by BULK's
+    coalescing budget."""
+    rt = TransferRuntime(workers=2)
+    classes = [PriorityClass.SENSOR, PriorityClass.TOKEN,
+               PriorityClass.LAYER, PriorityClass.BULK]
+    engines = {cls: TransferEngine(
+        TransferPolicy.kernel_level_ring(4, block_bytes=1 << 15),
+        runtime=rt, priority=cls) for cls in classes}
+    iters, errors = 6, []
+    tok_elems, bulk_elems = 1024, 256 * 1024  # 4 KiB tokens, 1 MiB bulk
+
+    def hammer_token():
+        try:
+            eng = engines[PriorityClass.TOKEN]
+            x = [np.full(tok_elems, float(i), np.float32) for i in range(8)]
+            for _ in range(iters):
+                devs = [t.wait(30.0) for t in eng.tx_many(x)]
+                outs = [np.empty(tok_elems, np.float32) for _ in x]
+                for i, t in enumerate(eng.rx_many(devs, out=outs)):
+                    assert t.wait(30.0) is outs[i]
+                for a, o in zip(x, outs):
+                    np.testing.assert_array_equal(o, a)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    def hammer_sync(cls, elems):
+        try:
+            eng = engines[cls]
+            x = np.full(elems, 7.0, np.float32)
+            for _ in range(iters):
+                host = eng.rx_async(eng.tx_async(x).wait(30.0)).wait(30.0)
+                flat = np.concatenate([np.asarray(h).reshape(-1)
+                                       for h in host])
+                np.testing.assert_array_equal(flat, x)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = ([threading.Thread(target=hammer_token) for _ in range(2)]
+               + [threading.Thread(target=hammer_sync, args=(c, n))
+                  for c, n in [(PriorityClass.SENSOR, 2048),
+                               (PriorityClass.LAYER, 64 * 1024),
+                               (PriorityClass.BULK, bulk_elems),
+                               (PriorityClass.BULK, bulk_elems)]])
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    # exact per-engine byte accounting: every submitted byte completed
+    assert engines[PriorityClass.TOKEN].tx_bytes_total == \
+        2 * iters * 8 * tok_elems * 4
+    assert engines[PriorityClass.TOKEN].rx_bytes_total == \
+        2 * iters * 8 * tok_elems * 4
+    assert engines[PriorityClass.BULK].tx_bytes_total == \
+        2 * iters * bulk_elems * 4
+    s = rt.class_summary()
+    for cls in classes:
+        row = s[cls.value]
+        assert row["completed"] == row["submitted"], cls
+        assert row["completed"] > 0, cls
+        assert row["completion_wakeups"] + row["wakeups_saved"] == \
+            row["completed"], cls
+    # BULK's wide window did real coalescing under flood
+    assert s["bulk"]["wakeups_saved"] > 0
+    # ...without holding TOKEN completions past the TOKEN class deadline
+    # (1 ms): TOKEN's own 100 us budget bounds its added latency.
+    tok_delay = s["token"]["coalesce_delay_p99_ms"]
+    assert tok_delay == tok_delay and tok_delay <= 1.0  # not NaN, bounded
+    for eng in engines.values():
+        assert eng.slot_collisions == 0
+        eng.close()
     rt.close()

@@ -439,3 +439,123 @@ def test_rx_async_requires_interrupt():
     eng = TransferEngine(TransferPolicy.user_level_polling())
     with pytest.raises(ValueError):
         eng.rx_async([])
+
+
+# -- batched descriptor submission: tx_many / rx_many ------------------------
+# The coalescing tentpole's submission side: a GROUP of small descriptors is
+# one ring transaction with per-descriptor tickets. These properties pin the
+# contract the serving layer leans on — batched results are byte-identical to
+# K single submits, in input order, with exact byte accounting.
+
+_RING_DEPTHS = [0, 2, 6]  # 0 = kernel_level default, else explicit ring
+
+
+def _interrupt_ring(depth: int) -> "TransferPolicy":
+    if depth == 0:
+        return TransferPolicy.kernel_level()
+    return TransferPolicy.kernel_level_ring(depth)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 9), base=st.integers(1, 300), di=st.integers(0, 2))
+def test_tx_many_rx_many_roundtrip_property(k, base, di):
+    eng = TransferEngine(_interrupt_ring(_RING_DEPTHS[di]))
+    try:
+        arrays = [((np.arange(base + 17 * i) + i) % 251).astype(np.float32)
+                  for i in range(k)]
+        tx_tickets = eng.tx_many(arrays)
+        assert len(tx_tickets) == k
+        devs = [t.wait(10.0) for t in tx_tickets]
+        for a, d in zip(arrays, devs):
+            np.testing.assert_array_equal(np.asarray(d).reshape(-1), a)
+        rx_tickets = eng.rx_many(devs)
+        hosts = [t.wait(10.0) for t in rx_tickets]
+        for a, h in zip(arrays, hosts):
+            np.testing.assert_array_equal(np.asarray(h).reshape(-1), a)
+    finally:
+        eng.close()
+
+
+def test_many_byte_accounting_matches_singles():
+    """tx_many/rx_many account exactly the bytes K single submits would:
+    tx_bytes_total / rx_bytes_total are equal across the two engines, and
+    the batch lands as ONE stats record carrying all K descriptors."""
+    arrays = [(np.arange(64 + 32 * i) % 97).astype(np.int32)
+              for i in range(5)]
+    total = sum(a.nbytes for a in arrays)
+
+    batched = TransferEngine(TransferPolicy.kernel_level())
+    singles = TransferEngine(TransferPolicy.kernel_level())
+    try:
+        devs = [t.wait(10.0) for t in batched.tx_many(arrays)]
+        for t in batched.rx_many(devs):
+            t.wait(10.0)
+        sdevs = [singles.tx_async(a).wait(10.0)[0] for a in arrays]
+        for d in sdevs:
+            singles.rx_async([d]).wait(10.0)
+        assert batched.tx_bytes_total == total == singles.tx_bytes_total
+        assert batched.rx_bytes_total == total == singles.rx_bytes_total
+        # one ring transaction -> one record per direction, K chunks each
+        tx_recs = [s for s in batched.stats if s.direction == "tx"]
+        rx_recs = [s for s in batched.stats if s.direction == "rx"]
+        assert len(tx_recs) == 1 and tx_recs[0].n_chunks == len(arrays)
+        assert len(rx_recs) == 1 and rx_recs[0].n_chunks == len(arrays)
+        assert tx_recs[0].nbytes == rx_recs[0].nbytes == total
+    finally:
+        batched.close()
+        singles.close()
+
+
+def test_rx_many_out_zero_copy_landing():
+    """rx_many keeps rx_async's out= contract per descriptor: each ticket
+    resolves to the CALLER'S buffer object, written in place."""
+    eng = TransferEngine(TransferPolicy.kernel_level())
+    try:
+        arrays = [(np.arange(100 * (i + 1)) % 53).astype(np.float32)
+                  for i in range(4)]
+        devs = [t.wait(10.0) for t in eng.tx_many(arrays)]
+        outs = [np.empty_like(a) for a in arrays]
+        tickets = eng.rx_many(devs, out=outs)
+        for i, t in enumerate(tickets):
+            got = t.wait(10.0)
+            assert got is outs[i]  # zero-copy: the caller's array itself
+            np.testing.assert_array_equal(outs[i], arrays[i])
+    finally:
+        eng.close()
+
+
+def test_many_requires_interrupt():
+    eng = TransferEngine(TransferPolicy.user_level_polling())
+    with pytest.raises(ValueError):
+        eng.tx_many([np.zeros(4, np.float32)])
+    with pytest.raises(ValueError):
+        eng.rx_many([])
+
+
+@settings(max_examples=6, deadline=None)
+@given(k=st.integers(2, 12), nch=st.integers(2, 3))
+def test_group_many_striping_preserves_order(k, nch):
+    """ChannelGroup round-robins a batch over its channels; tickets come
+    back in INPUT order and a flat out= array is carved per descriptor."""
+    from repro.core.channels import ChannelGroup
+
+    grp = ChannelGroup(TransferPolicy.kernel_level_ring(4), n_channels=nch)
+    try:
+        arrays = [((np.arange(32 + 8 * i) + 3 * i) % 127).astype(np.int32)
+                  for i in range(k)]
+        total_words = sum(a.size for a in arrays)
+        devs = [t.wait(10.0) for t in grp.tx_many(arrays)]
+        for a, d in zip(arrays, devs):
+            np.testing.assert_array_equal(np.asarray(d).reshape(-1), a)
+        flat = np.empty(total_words, np.int32)
+        tickets = grp.rx_many(devs, out=flat)
+        for t in tickets:
+            t.wait(10.0)
+        off = 0
+        for a in arrays:
+            np.testing.assert_array_equal(flat[off:off + a.size], a)
+            off += a.size
+        # byte accounting lands on the per-channel engines and sums exactly
+        assert sum(e.rx_bytes_total for e in grp.engines) == flat.nbytes
+    finally:
+        grp.close()
