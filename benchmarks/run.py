@@ -21,6 +21,7 @@ from benchmarks import (
     qos_contention,
     roofline,
     roshambo_table,
+    sg_vs_pack,
     streaming_layers,
     transfer_sweep,
     txrx_balance,
@@ -33,6 +34,7 @@ BENCHES = {
     "txrx_balance": txrx_balance.run,  # loop-back scenario
     "streaming_layers": streaming_layers.run,  # NullHop model at LM scale
     "multichannel_sweep": multichannel_sweep.run,  # striped rings + adaptive
+    "sg_vs_pack": sg_vs_pack.run,  # scatter-gather vs staging-copy pack
     "adaptive_drift": adaptive_drift.run,  # online refit vs stale plan
     "qos_contention": qos_contention.run,  # shared-runtime QoS arbitration
     "fault_recovery": fault_recovery.run,  # quarantine + replan vs stall
@@ -84,6 +86,14 @@ def main() -> None:
                 print(f"# merged multichannel rows into BENCH_transfer.json "
                       f"(single-ring/multi tx us/B ratio "
                       f"{mc['tx_us_per_byte_ratio_single_ring_over_multi']})")
+            if name == "sg_vs_pack":
+                doc = sg_vs_pack.merge_bench_json(rows)
+                sc = doc["staging_copy"]
+                print(f"# merged sg_vs_pack rows into BENCH_transfer.json "
+                      f"(few-large pack/SG tx us/B ratio "
+                      f"{sc['pack_over_sg_us_per_byte_few_large']}, "
+                      f"decisions few-large={sc['decision_few_large']} "
+                      f"many-small={sc['decision_many_small']})")
             if name == "adaptive_drift":
                 doc = adaptive_drift.merge_bench_json(rows)
                 ad = doc["adaptive_drift"]

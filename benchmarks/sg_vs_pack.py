@@ -1,0 +1,202 @@
+"""Scatter-gather vs staged-pack TX — the staging-copy cost, measured.
+
+The PR-1 hot path pays a full host memcpy per layer set:
+:meth:`~repro.core.transfer.StagedLayout.pack` copies every array into one
+contiguous staging buffer before the descriptor is submitted. The
+scatter-gather form (``tx_sg``) submits the SAME layer set as segment views
+riding ONE ring slot — zero staging copy, but one descriptor-walk overhead
+per segment (SNIPPETS.md Snippet 1's ISSUE_RD/WAIT_CPL loop). Which side
+wins is a pure crossover in the fitted cost model:
+
+    pack: total/copy_BW + t0 + total/BW       (memcpy, then one descriptor)
+    SG:   t0 + K*seg_t0 + total/BW            (K segment walks, no memcpy)
+
+so SG wins iff ``K * seg_t0 < total / copy_BW`` — few large segments ride
+SG, many small arrays keep the pack. This benchmark sweeps segment count x
+segment size over both regimes, records the measured crossover, and merges a
+``"staging_copy"`` section into ``BENCH_transfer.json``; the few-large-
+segments win is floored in ``scripts/check_bench.py``.
+
+Pack timings use ``force=True``: the hot path this models carries fresh
+bytes every frame (pipeline batches, activations), so the staging memcpy is
+real — the unchanged-weights fast path that skips it is a different regime
+and exactly the one where the SG decision does not matter.
+
+``--quick`` shrinks the shapes and repeats for the CI smoke run (and does
+not rewrite the JSON).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.core.channels import calibrate_transfer
+from repro.core.transfer import (
+    StagedLayout,
+    TransferEngine,
+    TransferPolicy,
+    choose_sg,
+    host_copy_bw_Bps,
+    sg_crossover_segments,
+)
+
+BENCH_JSON = pathlib.Path(
+    __file__).resolve().parent.parent / "BENCH_transfer.json"
+
+# (n_segments, bytes_per_segment): the two acceptance shapes plus a sweep
+# spanning the crossover. FEW_LARGE matches the streaming_layers regime
+# (a handful of >= MiB-scale per-layer params); MANY_SMALL is the
+# pathological SG shape (hundreds of KiB-scale arrays, descriptor-walk
+# overhead dominates).
+FEW_LARGE = (4, 12 << 20)
+MANY_SMALL = (512, 8 << 10)
+SWEEP = [(2, 8 << 20), (8, 2 << 20), (32, 256 << 10), (128, 32 << 10)]
+QUICK_FEW_LARGE = (4, 1 << 20)
+QUICK_MANY_SMALL = (64, 8 << 10)
+QUICK_SWEEP = [(2, 1 << 20), (32, 32 << 10)]
+
+
+def _arrays(n: int, seg_bytes: int, rng: np.random.Generator) -> list:
+    return [rng.standard_normal(seg_bytes // 4).astype(np.float32)
+            for _ in range(n)]
+
+
+def _measure(engine: TransferEngine, arrays: list,
+             repeats: int) -> tuple[float, float]:
+    """Best-of pack-vs-SG wall seconds for one layer set (interleaved
+    trials, so allocator/page-cache drift hits both paths equally)."""
+    lay = StagedLayout(arrays)
+    segs = lay.sg_segments(arrays)
+    # warmup both paths: prime the staging buffer, device allocator, rings
+    jax.block_until_ready(lay.unpack(engine.tx(lay.pack(arrays,
+                                                        force=True))))
+    jax.block_until_ready(engine.tx_sg(segs).wait())
+    pack_ts, sg_ts = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        dev = lay.unpack(engine.tx(lay.pack(arrays, force=True)))
+        jax.block_until_ready(dev)
+        pack_ts.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        dev = engine.tx_sg(segs).wait()
+        jax.block_until_ready(dev)
+        sg_ts.append(time.perf_counter() - t0)
+    lay.release()
+    return min(pack_ts), min(sg_ts)
+
+
+def _fit_seg_t0(rows: list[dict]) -> float:
+    """Per-segment walk cost fitted from the measured SG walls over the
+    sweep: t = t0 + K*seg_t0 + total/BW, least-squares over every
+    (K, total, wall) point. This is the benchmark-side twin of the
+    controller's live ``ingest_sg`` refit — the calibration sweep's fitted
+    ``t0`` intercept is lost in noise on fast hosts, but the K-slope is
+    directly observable once segment counts vary."""
+    a = np.array([[1.0, r["n_segments"], r["total_bytes"]] for r in rows])
+    b = np.array([r["sg_us_per_byte"] * 1e-6 * r["total_bytes"]
+                  for r in rows])
+    coef, *_ = np.linalg.lstsq(a, b, rcond=None)
+    return float(max(coef[1], 1e-9))
+
+
+def run(repeats: int = 5, quick: bool = False) -> list[dict]:
+    repeats = 2 if quick else repeats
+    few_large = QUICK_FEW_LARGE if quick else FEW_LARGE
+    many_small = QUICK_MANY_SMALL if quick else MANY_SMALL
+    sweep = QUICK_SWEEP if quick else SWEEP
+    shapes = ([("few_large", *few_large), ("many_small", *many_small)]
+              + [(f"sweep_{n}x{b >> 10}KiB", n, b) for n, b in sweep])
+
+    model = calibrate_transfer()
+    copy_bw = host_copy_bw_Bps()
+    rng = np.random.default_rng(0)
+    engine = TransferEngine(
+        TransferPolicy.kernel_level_ring(4, block_bytes=1 << 20))
+    rows = []
+    try:
+        for name, n, seg_bytes in shapes:
+            arrays = _arrays(n, seg_bytes, rng)
+            total = n * seg_bytes
+            pack_s, sg_s = _measure(engine, arrays, repeats)
+            rows.append({
+                "bench": "sg_vs_pack", "shape": name,
+                "n_segments": n, "seg_bytes": seg_bytes,
+                "total_bytes": total,
+                "pack_us_per_byte": round(pack_s * 1e6 / total, 6),
+                "sg_us_per_byte": round(sg_s * 1e6 / total, 6),
+                "pack_over_sg": round(pack_s / max(sg_s, 1e-12), 3),
+            })
+    finally:
+        engine.close()
+    # decisions use the seg_t0 refitted from THIS sweep's SG walls (the
+    # live-controller crossover, not the calibration intercept)
+    seg_t0 = _fit_seg_t0(rows)
+    for r in rows:
+        r["decision"] = ("sg" if choose_sg(
+            [r["seg_bytes"]] * r["n_segments"], model,
+            seg_t0_s=seg_t0, copy_bw_Bps=copy_bw) else "pack")
+    rows.append({
+        "bench": "sg_vs_pack", "shape": "calibration",
+        "model_t0_us": round(model.t0_s * 1e6, 3),
+        "model_bw_GBps": round(model.bw_Bps / 1e9, 3),
+        "host_copy_bw_GBps": round(copy_bw / 1e9, 3),
+        "seg_t0_us_fitted": round(seg_t0 * 1e6, 3),
+        # fitted crossover at the few-large total: layer sets with FEWER
+        # segments than this ride SG, more ride the pack
+        "crossover_segments": round(sg_crossover_segments(
+            few_large[0] * few_large[1], model,
+            seg_t0_s=seg_t0, copy_bw_Bps=copy_bw), 1),
+    })
+    return rows
+
+
+def merge_bench_json(rows: list[dict],
+                     path: pathlib.Path | str = BENCH_JSON) -> dict:
+    """Fold the sweep into BENCH_transfer.json under ``"staging_copy"``."""
+    path = pathlib.Path(path)
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    few = next(r for r in rows if r["shape"] == "few_large")
+    small = next(r for r in rows if r["shape"] == "many_small")
+    calib = next(r for r in rows if r["shape"] == "calibration")
+    doc["staging_copy"] = {
+        "rows": rows,
+        "pack_us_per_byte_few_large": few["pack_us_per_byte"],
+        "sg_us_per_byte_few_large": few["sg_us_per_byte"],
+        # the acceptance headline: scatter-gather vs staged-pack TX us/B on
+        # the few-large-segments shape (>1 = killing the staging copy won)
+        "pack_over_sg_us_per_byte_few_large": round(
+            few["pack_us_per_byte"]
+            / max(few["sg_us_per_byte"], 1e-12), 3),
+        # the cost-model decisions the hot path memoizes: SG for few large
+        # segments, pack for many small arrays — automatically.
+        "decision_few_large": few["decision"],
+        "decision_many_small": small["decision"],
+        "crossover_segments": calib["crossover_segments"],
+        "host_copy_bw_GBps": calib["host_copy_bw_GBps"],
+    }
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes, no JSON rewrite (CI smoke)")
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args()
+    bench_rows = run(repeats=args.repeats, quick=args.quick)
+    for r in bench_rows:
+        print(r)
+    if not args.quick:
+        doc = merge_bench_json(bench_rows)
+        sc = doc["staging_copy"]
+        print(f"wrote {BENCH_JSON}: pack/SG tx us/B ratio (few-large) "
+              f"{sc['pack_over_sg_us_per_byte_few_large']}, decisions "
+              f"few-large={sc['decision_few_large']} "
+              f"many-small={sc['decision_many_small']}")

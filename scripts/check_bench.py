@@ -58,6 +58,11 @@ REQUIRED = {
                        "recovered_gbps", "recovery_ratio", "degraded_ratio"],
     "coalescing": ["rows", "per_desc_us_b1", "per_desc_us_b8",
                    "per_desc_us_b32", "speedup_b8", "speedup_b32"],
+    "staging_copy": ["rows", "pack_us_per_byte_few_large",
+                     "sg_us_per_byte_few_large",
+                     "pack_over_sg_us_per_byte_few_large",
+                     "decision_few_large", "decision_many_small",
+                     "crossover_segments"],
 }
 
 
@@ -92,12 +97,32 @@ def _structural(doc: dict, errors: list[str]) -> None:
         # on 4 KiB token payloads (the coalescing tentpole's headline)
         ("coalescing.speedup_b32",
          doc.get("coalescing", {}).get("speedup_b32"), 2.0),
+        # scatter-gather acceptance bar: killing the staging copy must keep
+        # SG >= 1.5x lower TX us/B than the pack path on the few-large-
+        # segments shape (the sg_vs_pack headline)
+        ("staging_copy.pack_over_sg_us_per_byte_few_large",
+         doc.get("staging_copy", {}).get(
+             "pack_over_sg_us_per_byte_few_large"), 1.5),
     ]
     for name, val, floor in ratio_floors:
         if isinstance(val, (int, float)) and val < floor:
             errors.append(
                 f"{name} = {val} < {floor}: the optimized path regressed "
                 f"past its baseline in the committed file")
+    # the pack-vs-SG crossover must land the right way on both acceptance
+    # shapes: few large segments ride SG, many small arrays keep the pack
+    # (a flipped decision means the cost-model pricing rotted)
+    sc = doc.get("staging_copy", {})
+    if "decision_few_large" in sc and sc["decision_few_large"] != "sg":
+        errors.append(
+            f"staging_copy.decision_few_large = {sc['decision_few_large']} "
+            f"(expected 'sg'): the crossover no longer picks scatter-gather "
+            f"for few large segments")
+    if "decision_many_small" in sc and sc["decision_many_small"] != "pack":
+        errors.append(
+            f"staging_copy.decision_many_small = "
+            f"{sc['decision_many_small']} (expected 'pack'): the crossover "
+            f"no longer picks the staged pack for many small arrays")
     # a 50% BULK cap that does not reduce the BULK share at all means cap
     # enforcement rotted into a no-op
     qc = doc.get("qos_contention", {})

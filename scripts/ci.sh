@@ -55,6 +55,9 @@ run_smoke() {
   echo "== smoke: adaptive_drift --quick =="
   python benchmarks/adaptive_drift.py --quick
 
+  echo "== smoke: sg_vs_pack --quick =="
+  python benchmarks/sg_vs_pack.py --quick
+
   # no standalone qos_contention smoke: check_bench's fresh probe runs the
   # quick qos benchmark itself — which includes the rx_many coalescing
   # sweep (batch 1/8/32 amortization) — and gates on its numbers; running

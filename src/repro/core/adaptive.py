@@ -82,12 +82,17 @@ from repro.core.transfer import (
     Partitioning,
     LayoutCache,
     Management,
+    SGTicket,
     StagedLayout,
     Ticket,
     TransferEngine,
     TransferPolicy,
     TransferStats,
+    _sg_segment_views,
     carve_flat_out,
+    choose_sg,
+    reassemble_chunks,
+    sg_crossover_segments,
 )
 
 
@@ -313,6 +318,16 @@ class OnlineTransferController:
         # channels actually in rotation, not the configured maximum —
         # "replan around the reduced channel set". None = no restriction.
         self._channel_limit: int | None = None  # guarded-by: _lock
+        # EWMA of the per-segment descriptor-walk cost under grouped (SG /
+        # tx_many) submission, refit from live grouped-transaction samples:
+        # the pack-vs-SG crossover prices the SG side with this instead of
+        # assuming a full t0 per segment. None until the first SG/batched
+        # transaction lands.
+        self._sg_seg_t0_s: float | None = None  # guarded-by: _lock
+        # the seg-t0 value the last memoized pack-vs-SG decisions were
+        # priced with; drifting past the hysteresis signals consumers to
+        # drop their per-layer-set memos (LayoutCache.invalidate_sg).
+        self._sg_ref_seg_t0_s: float | None = None  # guarded-by: _lock
         self.refits = 0  # guarded-by: _lock
         self.replans = 0  # guarded-by: _lock
         self.suppressed = 0  # guarded-by: _lock (hysteresis kept the plan)
@@ -386,6 +401,66 @@ class OnlineTransferController:
         with self._lock:
             self._batch_ewma = ((1 - alpha) * self._batch_ewma
                                 + alpha * float(n))
+
+    # -- pack-vs-SG crossover -----------------------------------------------
+    def ingest_sg(self, engines: Sequence[TransferEngine]) -> bool:
+        """Drain every engine's grouped-transaction samples and refit the
+        per-segment walk cost the pack-vs-SG crossover prices with: each
+        ``(k, total, wall)`` sample gives ``seg_t0 ~= (wall - t0 -
+        total/BW)/k`` against the current plan's fitted model, folded into
+        an EWMA. Returns True when the refit cost drifted past the config
+        hysteresis since the last True — callers drop their memoized
+        per-layer-set decisions (``LayoutCache.invalidate_sg``) then."""
+        with self._lock:
+            m = self.plan.model
+        for eng in engines:
+            dq = getattr(eng, "sg_samples", None)
+            if dq is None:
+                continue
+            while True:
+                try:
+                    _d, k, total, wall = dq.popleft()
+                except IndexError:
+                    break
+                if k <= 1 or wall <= 0.0:
+                    continue
+                est = max((wall - m.t0_s - total / m.bw_Bps) / k, 1e-7)
+                with self._lock:
+                    cur = self._sg_seg_t0_s
+                    self._sg_seg_t0_s = (est if cur is None
+                                         else 0.75 * cur + 0.25 * est)
+        with self._lock:
+            cur, ref = self._sg_seg_t0_s, self._sg_ref_seg_t0_s
+            if cur is None:
+                return False
+            if ref is not None and max(cur / ref, ref / cur) \
+                    < self.cfg.hysteresis:
+                return False
+            self._sg_ref_seg_t0_s = cur
+            return ref is not None  # first fit: nothing memoized yet
+
+    def sg_seg_t0_s(self) -> float | None:
+        """Current refit per-segment walk cost (None before any grouped
+        transaction landed — consumers fall back to the full t0)."""
+        with self._lock:
+            return self._sg_seg_t0_s
+
+    def prefer_sg(self, sizes: Sequence[int]) -> bool:
+        """Live pack-vs-SG decision for one layer set: prices
+        :func:`~repro.core.transfer.choose_sg` with the plan's fitted
+        model and the refit per-segment walk cost."""
+        with self._lock:
+            m = self.plan.model
+            seg = self._sg_seg_t0_s
+        return choose_sg(sizes, m, seg_t0_s=seg)
+
+    def sg_crossover(self, total_bytes: int) -> float:
+        """Segment count where pack starts beating SG for ``total_bytes``,
+        under the current fits (the recorded crossover point)."""
+        with self._lock:
+            m = self.plan.model
+            seg = self._sg_seg_t0_s
+        return sg_crossover_segments(total_bytes, m, seg_t0_s=seg)
 
     def set_bandwidth_cap(self, bytes_per_s: float | None) -> None:
         """Tell the planner this stream's class is capped at ``bytes_per_s``
@@ -808,6 +883,9 @@ class AdaptiveChannelGroup:
         self._group = self._build(plan)
         self.generation += 1
         self.swaps += 1
+        # a new generation means a new cost world (mode/chunking changed):
+        # memoized pack-vs-SG decisions were priced against the old plan.
+        self.layouts.invalidate_sg()
         # old generation is fully drained, so close() drain-deregisters
         # immediately; the retired engines permanently reject submits
         # (nothing holds them — the facade now routes to the new build).
@@ -867,6 +945,10 @@ class AdaptiveChannelGroup:
                 finally:
                     health_lock.release()
         self.controller.ingest_chunks(self.engines)
+        if self.controller.ingest_sg(self.engines):
+            # the per-segment walk cost drifted past hysteresis: memoized
+            # per-layer-set pack-vs-SG decisions are stale — re-price.
+            self.layouts.invalidate_sg()
 
     def _check_group_health(self) -> bool:
         """Run the current generation's quarantine/probe health pass; when
@@ -1071,6 +1153,57 @@ class AdaptiveChannelGroup:
             return [self._done_ticket(r) for r in results]
         finally:
             self._leave_many(tickets)
+
+    # -- scatter-gather ------------------------------------------------------
+    def prefer_sg(self, sizes: "Sequence[int]") -> bool:
+        """Pack-vs-SG decision priced against the CURRENT fitted plan plus
+        the live per-segment walk estimate (see the controller)."""
+        return self.controller.prefer_sg(list(sizes))
+
+    def tx_sg(self, segments: Sequence,
+              priority: PriorityClass | None = None) -> SGTicket:
+        """Scatter-gather TX through the current generation: one logical
+        transfer over the segment list, zero staging copy. On a polling
+        generation each segment IS transferred inline (done tickets)."""
+        grp = self._enter()
+        sg = None
+        try:
+            if (grp.policy.management is Management.INTERRUPT
+                    and hasattr(grp, "tx_sg")):
+                sg = grp.tx_sg(segments, priority=priority)
+                self.controller.note_submit_batch(len(sg))
+                return sg
+            views, _sizes = _sg_segment_views(segments, "tx")
+            done = []
+            for v in views:
+                chunks = grp.tx(v)
+                flat = reassemble_chunks(chunks)
+                done.append(self._done_ticket(flat.reshape(v.shape)))
+            return SGTicket(done)
+        finally:
+            self._leave_many(sg.tickets if sg is not None else None)
+
+    def rx_sg(self, segments: Sequence,
+              out: "np.ndarray | Sequence[np.ndarray] | None" = None,
+              priority: PriorityClass | None = None) -> SGTicket:
+        """Scatter-gather RX (see :meth:`tx_sg`); ``out`` keeps the
+        flat-carve / per-segment zero-copy contract."""
+        grp = self._enter()
+        sg = None
+        try:
+            if (grp.policy.management is Management.INTERRUPT
+                    and hasattr(grp, "rx_sg")):
+                sg = grp.rx_sg(segments, out=out, priority=priority)
+                self.controller.note_submit_batch(len(sg))
+                return sg
+            views, _sizes = _sg_segment_views(segments, "rx")
+            outs = out
+            if out is not None and isinstance(out, np.ndarray):
+                outs = carve_flat_out(out, views)
+            results = grp.rx(views, out=outs)
+            return SGTicket([self._done_ticket(r) for r in results])
+        finally:
+            self._leave_many(sg.tickets if sg is not None else None)
 
     # -- reporting -----------------------------------------------------------
     def summary(self) -> dict[str, dict[str, float]]:

@@ -68,6 +68,7 @@ from repro.core.transfer import (
     LayoutCache,
     Management,
     Partitioning,
+    SGTicket,
     StagedLayout,
     Ticket,
     TransferEngine,
@@ -75,9 +76,24 @@ from repro.core.transfer import (
     TransferStats,
     _STATS_WINDOW,
     _check_out,
+    _sg_segment_views,
     carve_flat_out,
 )
 from repro.dist.fault import TransferFaultState
+
+
+class _IndexTicket(Ticket):
+    """Per-segment view over one striped scatter-gather join: all segments
+    share the joiner's master event/result, each ticket projecting out its
+    own ordered slot. A post-retry join failure surfaces on every segment
+    (the group already retried the faulted share on siblings)."""
+
+    def __init__(self, done: threading.Event, out: list, index: int):
+        super().__init__(done, out)
+        self._index = index
+
+    def wait(self, timeout: float | None = None) -> Any:
+        return super().wait(timeout)[self._index]
 
 _MIN_STRIPE_BYTES = 1 << 20  # below this a second channel costs more than t0
 _CAL_SIZES = (16 << 10, 128 << 10, 1 << 20, 8 << 20)
@@ -925,6 +941,105 @@ class ChannelGroup:
             for i, t in zip(idxs, sub):
                 tickets[i] = t
         return tickets  # type: ignore[return-value]
+
+    # -- scatter-gather --------------------------------------------------------
+    def prefer_sg(self, sizes: Sequence[int],
+                  model: Any | None = None) -> bool:
+        """Pack-vs-SG decision for the group: priced by the first ACTIVE
+        channel's engine (all channels share the policy, so one engine's
+        fit speaks for the group)."""
+        active = self._active_indices()
+        return self.engines[active[0] if active else 0].prefer_sg(
+            sizes, model)
+
+    def _sg_assign(self, sizes: list[int],
+                   active: list[int]) -> list[tuple[int, list[int]]]:
+        """Greedy least-loaded assignment of segments to ACTIVE channels —
+        bytes-balanced at SEGMENT granularity; a segment never splits
+        (splitting would reintroduce the partial-copy the SG form exists
+        to avoid). Returns ``(channel, segment_indices)`` pairs."""
+        assign: list[list[int]] = [[] for _ in active]
+        loads = [0] * len(active)
+        for i, nb in enumerate(sizes):
+            c = min(range(len(active)), key=loads.__getitem__)
+            assign[c].append(i)
+            loads[c] += nb
+        return [(active[c], idxs) for c, idxs in enumerate(assign) if idxs]
+
+    def tx_sg(self, segments: Sequence,
+              priority: PriorityClass | None = None) -> SGTicket:
+        """Scatter-gather TX through the group: the segment list is spread
+        over the ACTIVE channels by byte load and each channel's share goes
+        down as ONE ring slot (its engine's ``tx_sg``), zero staging copy.
+        Results come back in the original segment order; a faulted share
+        retries whole on a sibling channel (the striped-recovery contract),
+        so striping and quarantine compose with the SG form."""
+        views, sizes = _sg_segment_views(segments, "tx")
+        active = self._active_indices()
+        total = sum(sizes)
+        if (len(views) <= 1 or len(active) <= 1
+                or total < 2 * self.min_stripe_bytes):
+            # sub-stripe or single-channel: delegate the whole chain —
+            # round-robin keeps concurrent small SG submits spread.
+            return self._next_channel().tx_sg(views, priority=priority)
+        used = self._sg_assign(sizes, active)
+        master = threading.Event()
+        ticket_out: list = []
+        t0 = time.perf_counter()
+        issue = [lambda eng, idxs=idxs: eng.tx_sg(
+            [views[i] for i in idxs], priority=priority)
+            for _c, idxs in used]
+        channels = [c for c, _idxs in used]
+
+        def assemble(per_channel: list) -> list:
+            results: list = [None] * len(views)
+            for (_, idxs), ch_out in zip(used, per_channel):
+                for i, o in zip(idxs, ch_out):
+                    results[i] = o
+            return results
+
+        self._spawn_joiner(issue, channels, assemble, "tx", total,
+                           len(views), master, ticket_out, None, t0)
+        return SGTicket([_IndexTicket(master, ticket_out, i)
+                         for i in range(len(views))])
+
+    def rx_sg(self, segments: Sequence,
+              out: "np.ndarray | Sequence[np.ndarray] | None" = None,
+              priority: PriorityClass | None = None) -> SGTicket:
+        """Scatter-gather RX through the group (see :meth:`tx_sg`); ``out``
+        accepts per-segment buffers or ONE flat array carved into
+        per-segment views (zero-copy), exactly like :meth:`rx_async`."""
+        views, sizes = _sg_segment_views(segments, "rx")
+        outs = self._rx_outs(views, out)
+        active = self._active_indices()
+        total = sum(sizes)
+        if (len(views) <= 1 or len(active) <= 1
+                or total < 2 * self.min_stripe_bytes):
+            return self._next_channel().rx_sg(
+                views, out=outs if out is not None else None,
+                priority=priority)
+        used = self._sg_assign(sizes, active)
+        master = threading.Event()
+        ticket_out: list = []
+        t0 = time.perf_counter()
+        issue = [lambda eng, idxs=idxs: eng.rx_sg(
+            [views[i] for i in idxs],
+            out=([outs[i] for i in idxs] if out is not None else None),
+            priority=priority)
+            for _c, idxs in used]
+        channels = [c for c, _idxs in used]
+
+        def assemble(per_channel: list) -> list:
+            results: list = [None] * len(views)
+            for (_, idxs), ch_out in zip(used, per_channel):
+                for i, o in zip(idxs, ch_out):
+                    results[i] = o
+            return results
+
+        self._spawn_joiner(issue, channels, assemble, "rx", total,
+                           len(views), master, ticket_out, None, t0)
+        return SGTicket([_IndexTicket(master, ticket_out, i)
+                         for i in range(len(views))])
 
     # -- reporting ------------------------------------------------------------
     def summary(self) -> dict[str, dict[str, float]]:

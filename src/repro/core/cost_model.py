@@ -126,6 +126,22 @@ class TransferCostModel:
                  b.bw_Bps / max(a.bw_Bps, 1e-3))
         return max(rt, rb)
 
+    def time_pack(self, total_bytes: int, copy_bw_Bps: float) -> float:
+        """Staged-pack cost of one layer set: the host memcpy into the
+        staging buffer (``total/copy_BW``) plus one UNIQUE descriptor over
+        the packed payload — the hot-path price scatter-gather removes."""
+        return total_bytes / max(copy_bw_Bps, 1.0) + self.time_unique(
+            total_bytes)
+
+    def time_sg(self, sizes: "list[int] | tuple[int, ...]",
+                seg_t0_s: float | None = None) -> float:
+        """Scatter-gather cost of the same layer set: ONE ring transaction
+        whose descriptor walk visits K segments (``seg_t0`` each — the
+        ISSUE_RD/WAIT_CPL loop iteration; defaults to the full ``t0``
+        until a live refit shrinks it), zero staging copy."""
+        seg_t0 = self.t0_s if seg_t0_s is None else seg_t0_s
+        return self.t0_s + len(sizes) * seg_t0 + sum(sizes) / self.bw_Bps
+
     def amortized(self, batch: float) -> "TransferCostModel":
         """The per-descriptor cost model under batched submission: a group
         of ``batch`` descriptors pays the fixed management overhead ONCE

@@ -293,6 +293,17 @@ class FaultInjector:
                 return super().rx_many(device_arrays, out=out,
                                        priority=priority)
 
+            # scatter-gather rides _submit_many; overriding _one above
+            # already forces its per-segment loop, so payload-stage faults
+            # land on individual segment tickets (mid-segment isolation).
+            def tx_sg(self, segments, priority=None):
+                self._maybe_submit_error("tx")
+                return super().tx_sg(segments, priority=priority)
+
+            def rx_sg(self, segments, out=None, priority=None):
+                self._maybe_submit_error("rx")
+                return super().rx_sg(segments, out=out, priority=priority)
+
         def factory(policy, **kw):
             eng = _FaultEngine(policy, **kw)
             with injector._lock:

@@ -282,6 +282,10 @@ class ClassStats:
     # scheduler passes where this class had queued work but its token
     # bucket was empty (deferred by its bandwidth cap).
     cap_deferrals: int = 0
+    # submissions whose EDF deadline was stretched to the cap bucket's
+    # drain horizon (cap-aware deadlines: a throttled class must not sit
+    # permanently overdue while stage 0 vetoes it).
+    cap_deadline_stretches: int = 0
     # fault-handling ledger (PR 6): descriptors cancelled by the timeout
     # scan / ticket deadline, faults observed (injected or organic, incl.
     # checksum mismatches), stripe retries issued by the channel layer,
@@ -322,6 +326,7 @@ class ClassStats:
             "deadline_promotions": self.deadline_promotions,
             "preemptions": self.preemptions,
             "cap_deferrals": self.cap_deferrals,
+            "cap_deadline_stretches": self.cap_deadline_stretches,
             "timeouts": self.timeouts,
             "faults": self.faults,
             "retries": self.retries,
@@ -734,6 +739,24 @@ class TransferRuntime:
                     self._vtime[cls] = max(self._vtime[cls], min(busy))
             if not self.fair:
                 d.deadline = float("inf")  # FIFO baseline: no promotion
+            elif cls in self._caps:
+                # cap-aware EDF: a throttled class's dispatch horizon is set
+                # by its token-bucket refill rate, not the QoS spec. Stretch
+                # the deadline past the time the bucket needs to drain the
+                # queued backlog plus this descriptor, so a hard-capped
+                # class does not go permanently overdue — stage 0 would veto
+                # every EDF pick anyway, and the class_summary() ledger
+                # would report promotions that never dispatch. Keeps
+                # deadline_promotions meaningful under heavy throttling.
+                bucket = self._caps[cls]
+                cap_now = time.monotonic()
+                backlog = sum(dd.nbytes for dd in q)
+                drain_s = (bucket.delay_s(cap_now)
+                           + (backlog + d.nbytes) / bucket.rate)
+                capped_deadline = cap_now + drain_s + spec.deadline_s
+                if capped_deadline > d.deadline:
+                    d.deadline = capped_deadline
+                    self.stats[cls].cap_deadline_stretches += 1
             q.append(d)
             handle._outstanding += 1
             st = self.stats[cls]

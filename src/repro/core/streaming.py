@@ -236,15 +236,29 @@ class HostStreamingExecutor:
         # layer being computed (the descriptor-ring in-flight rule; slot
         # `depth` is reserved for the concurrent RX stream).
         tx_window = max(1, policy.depth - 1)
-        pending_tx: list[Ticket] = []
+        pending_tx: list[tuple[str, Ticket]] = []  # ("pack"|"sg", ticket)
         next_tx = 0
+        # per-layer-set pack-vs-SG gate: few large params ride scatter-gather
+        # segments (one ring slot, zero staging memcpy); many small params
+        # keep the staged pack. Decisions are memoized per layer key in the
+        # LayoutCache and re-priced when the online fit moves the crossover.
+        sg_capable = (hasattr(engine, "tx_sg")
+                      and hasattr(engine, "prefer_sg")
+                      and policy.management is Management.INTERRUPT)
 
         def issue_tx() -> None:
             nonlocal next_tx
             while next_tx < len(layers) and len(pending_tx) < tx_window:
-                payload = layouts[next_tx].pack(layers[next_tx][1])
-                pending_tx.append(
-                    engine.tx_async(payload, layout=layouts[next_tx]))
+                name, params, _ = layers[next_tx]
+                lay = layouts[next_tx]
+                if sg_capable and engine.layouts.decide_sg(
+                        (next_tx, name), lay, engine.prefer_sg):
+                    pending_tx.append(
+                        ("sg", engine.tx_sg(lay.sg_segments(params))))
+                else:
+                    payload = lay.pack(params)
+                    pending_tx.append(
+                        ("pack", engine.tx_async(payload, layout=lay)))
                 next_tx += 1
 
         issue_tx()
@@ -266,8 +280,13 @@ class HostStreamingExecutor:
             # --- TX: wait for this layer's in-flight params, then refill the
             # ring window (layers i+1 .. i+depth-1 stream during compute)
             t0 = time.perf_counter()
-            chunks = pending_tx.pop(0).wait()
-            params_dev = layouts[i].unpack(chunks)
+            kind, ticket = pending_tx.pop(0)
+            if kind == "sg":
+                # SG segments are whole arrays: results arrive shaped, no
+                # staging unpack (and no staging buffer was ever touched).
+                params_dev = ticket.wait()
+            else:
+                params_dev = layouts[i].unpack(ticket.wait())
             issue_tx()
             tx_s = time.perf_counter() - t0
             tx_bytes = layouts[i].nbytes

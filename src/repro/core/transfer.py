@@ -86,10 +86,11 @@ from repro.core.runtime import (
 
 __all__ = [  # re-exports: the fault taxonomy lives in runtime (no cycle)
     "Management", "Buffering", "Partitioning", "TransferPolicy",
-    "TransferStats", "TransferEngine", "Ticket", "StagedLayout",
+    "TransferStats", "TransferEngine", "Ticket", "SGTicket", "StagedLayout",
     "LayoutCache", "BufferInFlightError", "TransferFaultError",
     "TransferTimeoutError", "TransferChecksumError", "reassemble_chunks",
-    "carve_flat_out",
+    "carve_flat_out", "choose_sg", "sg_crossover_segments",
+    "host_copy_bw_Bps",
 ]
 
 # Per-engine rolling window of (direction, management, nbytes, seconds)
@@ -99,6 +100,15 @@ _CHUNK_SAMPLE_WINDOW = 512
 # Per-engine/group window of recorded TransferStats (recent history for
 # summaries/tests; exact lifetime totals live in the *_total counters).
 _STATS_WINDOW = 4096
+# Per-engine rolling window of grouped-transaction samples
+# (direction, n_segments, total_bytes, wall_s) from _submit_many — the
+# pack-vs-SG crossover refits the effective per-segment overhead from these.
+_SG_SAMPLE_WINDOW = 64
+# pack-vs-SG fallback rule when no cost model is fitted yet: SG only for
+# layer sets that are unambiguously "few large arrays" (the shape where
+# dodging the staging memcpy cannot lose to per-segment overhead).
+_SG_FALLBACK_MAX_SEGMENTS = 16
+_SG_FALLBACK_MIN_SEG_BYTES = 1 << 18
 
 
 class Management(enum.Enum):
@@ -295,6 +305,47 @@ class Ticket:
         return self._done.is_set()
 
 
+class SGTicket:
+    """Handle for one logical scatter-gather transfer: K segments riding ONE
+    ring slot and ONE runtime descriptor, tracked per segment (the SG
+    descriptor chain of SNIPPETS.md Snippet 1 — the ISSUE_RD/WAIT_CPL loop
+    walks the segment list, one logical completion at the end).
+
+    ``wait`` reassembles results in segment order and re-raises the first
+    segment error; ``wait_each`` keeps faults isolated to their own segment —
+    sibling segments still yield their results (the mid-segment fault
+    isolation contract)."""
+
+    __slots__ = ("tickets",)
+
+    def __init__(self, tickets: Sequence[Ticket]):
+        self.tickets = list(tickets)
+
+    def __len__(self) -> int:
+        return len(self.tickets)
+
+    @property
+    def complete(self) -> bool:
+        return all(t.complete for t in self.tickets)
+
+    def wait(self, timeout: float | None = None) -> list:
+        """Ordered per-segment results (``timeout`` bounds each segment
+        wait); the first failed segment re-raises here."""
+        return [t.wait(timeout) for t in self.tickets]
+
+    def wait_each(self, timeout: float | None = None) -> list:
+        """Ordered per-segment results with faults ISOLATED: a failed
+        segment contributes its exception object in place, siblings their
+        results — nothing raises."""
+        out: list = []
+        for t in self.tickets:
+            try:
+                out.append(t.wait(timeout))
+            except BaseException as e:  # noqa: BLE001 — isolation contract
+                out.append(e)
+        return out
+
+
 class BufferInFlightError(RuntimeError):
     """Raised when a staging buffer is re-used before its transfer completed.
 
@@ -430,6 +481,28 @@ class StagedLayout:
             for off, shape, dtype, nb in self.specs
         ]
 
+    def seg_sizes(self) -> list[int]:
+        """Per-array byte sizes — the segment list the pack-vs-SG decision
+        prices."""
+        return [nb for _off, _shape, _dtype, nb in self.specs]
+
+    def sg_segments(self, arrays: Sequence[np.ndarray]) -> list[tuple]:
+        """The whole-array SG segment list for this layer set: the
+        zero-copy alternative to :meth:`pack` (no staging buffer touched,
+        no busy window — each array IS its own descriptor segment)."""
+        if not self.matches(arrays):
+            raise ValueError("array shapes/dtypes do not match this layout")
+        return [(np.asarray(a), 0, nb)
+                for a, (_off, _shape, _dtype, nb) in zip(arrays, self.specs)]
+
+    def prefer_sg(self, model: Any, *, seg_t0_s: float | None = None,
+                  copy_bw_Bps: float | None = None) -> bool:
+        """Pack-vs-SG decision for this layer set, priced by a fitted
+        :class:`~repro.core.cost_model.TransferCostModel` (see
+        :func:`choose_sg`)."""
+        return choose_sg(self.seg_sizes(), model, seg_t0_s=seg_t0_s,
+                         copy_bw_Bps=copy_bw_Bps)
+
     def release(self) -> None:
         """Return the staging buffer to the pool; the layout is dead after.
 
@@ -458,6 +531,10 @@ class LayoutCache:
         self._pool = pool
         self.hits = 0                  # guarded-by: _lock
         self.misses = 0                # guarded-by: _lock
+        # per-layer-set pack-vs-SG memo: one decision per key per refit
+        # generation (invalidate_sg() clears on controller replans), so the
+        # hot path never re-prices a layer set it already decided.
+        self._sg_choice: dict[Any, bool] = {}  # guarded-by: _lock
 
     def get(self, key: Any, arrays: Sequence[np.ndarray]) -> StagedLayout:
         with self._lock:
@@ -467,10 +544,35 @@ class LayoutCache:
                 return lay
             if lay is not None:
                 lay.release()  # stale shapes: recycle the old staging buffer
+                self._sg_choice.pop(key, None)  # shapes changed: re-decide
             lay = StagedLayout(arrays, pool=self._pool)
             self._layouts[key] = lay
             self.misses += 1
             return lay
+
+    def decide_sg(self, key: Any, layout: StagedLayout,
+                  decide: Callable[[list[int]], bool]) -> bool:
+        """Per-layer-set pack-vs-SG decision, memoized per key.
+
+        ``layout`` is the key's resolved :class:`StagedLayout` (the caller
+        already holds it from :meth:`get` — no second lookup, no hit-count
+        skew). ``decide(seg_sizes)`` (typically ``engine.prefer_sg``) runs
+        once per key/shape/refit generation; repeat frames hit the memo. A
+        shape change on the key or :meth:`invalidate_sg` re-prices."""
+        with self._lock:
+            hit = self._sg_choice.get(key)
+            if hit is not None:
+                return hit
+        choice = bool(decide(layout.seg_sizes()))
+        with self._lock:
+            self._sg_choice[key] = choice
+        return choice
+
+    def invalidate_sg(self) -> None:
+        """Drop every memoized pack-vs-SG decision (the online controller
+        calls this after a refit moved the crossover)."""
+        with self._lock:
+            self._sg_choice.clear()
 
     def __len__(self) -> int:
         with self._lock:
@@ -529,6 +631,115 @@ def carve_flat_out(out: np.ndarray, arrays: Sequence[Any]) -> list[np.ndarray]:
         views.append(flat[off:off + nb])
         off += nb
     return views
+
+
+# ---------------------------------------------------------------------------
+# Scatter-gather segments: zero-copy descriptor lists instead of staging packs
+# ---------------------------------------------------------------------------
+
+def _sg_segment_views(segments: Sequence[Any],
+                      direction: str) -> tuple[list, list[int]]:
+    """Normalize SG ``(array, offset, nbytes)`` segments to zero-copy views.
+
+    A bare array is shorthand for a whole-array segment. Whole-array
+    segments keep their shape/dtype (TX lands them as shaped device
+    arrays — no unpack bitcast needed); partial segments must be
+    itemsize-aligned and become flat element-range views. Nothing is
+    staged or copied here — eliminating that memcpy is the point of the
+    SG form."""
+    views: list = []
+    sizes: list[int] = []
+    for i, seg in enumerate(segments):
+        if isinstance(seg, (tuple, list)) and len(seg) == 3:
+            a, off, nb = seg
+        else:
+            a, off, nb = seg, 0, None
+        if direction == "tx":
+            a = np.asarray(a)
+        total = int(a.size) * a.dtype.itemsize
+        off = int(off)
+        nb = total - off if nb is None else int(nb)
+        if off < 0 or nb < 0 or off + nb > total:
+            raise ValueError(
+                f"SG segment {i}: byte range [{off}, {off + nb}) outside "
+                f"the {total}-byte array")
+        if off == 0 and nb == total:
+            views.append(a)
+        else:
+            item = a.dtype.itemsize
+            if off % item or nb % item:
+                raise ValueError(
+                    f"SG segment {i}: partial range ({off}, {nb}) not "
+                    f"aligned to the {item}-byte array itemsize")
+            if direction == "tx" and not a.flags.c_contiguous:
+                raise ValueError(
+                    f"SG segment {i}: partial TX range of a non-contiguous "
+                    f"array would copy into a temporary — the staging "
+                    f"memcpy SG exists to avoid")
+            views.append(a.reshape(-1)[off // item:(off + nb) // item])
+        sizes.append(nb)
+    return views, sizes
+
+
+_copy_bw_lock = make_lock("transfer._copy_bw_lock")
+_copy_bw_Bps: float | None = None  # guarded-by: _copy_bw_lock
+
+
+def host_copy_bw_Bps() -> float:
+    """Measured host staging-memcpy bandwidth (bytes/s), cached per process.
+
+    This is the per-byte price of ``StagedLayout.pack`` that the SG form
+    refuses to pay; the pack-vs-SG decision charges the pack side with it.
+    Measured once (best of 3 over an 8 MiB copy), not assumed."""
+    global _copy_bw_Bps
+    with _copy_bw_lock:
+        if _copy_bw_Bps is not None:
+            return _copy_bw_Bps
+        src = np.ones(8 << 20, np.uint8)
+        dst = np.empty_like(src)
+        np.copyto(dst, src)  # warm: page the buffers in before timing
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            np.copyto(dst, src)
+            best = min(best, time.perf_counter() - t0)
+        _copy_bw_Bps = src.nbytes / max(best, 1e-9)
+        return _copy_bw_Bps
+
+
+def choose_sg(sizes: Sequence[int], model: Any, *,
+              seg_t0_s: float | None = None,
+              copy_bw_Bps: float | None = None) -> bool:
+    """Pack-vs-SG decision for one segment-size list, priced by a fitted
+    ``t(n) = t0 + n/BW`` cost model (duck-typed: anything with ``t0_s`` /
+    ``bw_Bps``).
+
+    - pack: one descriptor over the packed total, PLUS the staging memcpy
+      — ``t0 + total/BW + total/copy_BW``.
+    - SG:   one ring transaction walking K segment descriptors, zero copy
+      — ``t0 + K*seg_t0 + total/BW`` (``seg_t0`` is the per-segment walk
+      cost; defaults to the full ``t0`` until a live refit shrinks it).
+
+    Link and base management terms cancel, so SG wins exactly when
+    ``K * seg_t0 < total / copy_BW``: few large arrays -> SG (the memcpy
+    dominates), many small arrays -> pack (the segment walk dominates)."""
+    k = len(sizes)
+    if k == 0:
+        return False
+    total = int(sum(sizes))
+    seg_t0 = float(model.t0_s) if seg_t0_s is None else float(seg_t0_s)
+    copy_bw = host_copy_bw_Bps() if copy_bw_Bps is None else float(copy_bw_Bps)
+    return k * max(seg_t0, 1e-9) < total / max(copy_bw, 1.0)
+
+
+def sg_crossover_segments(total_bytes: int, model: Any, *,
+                          seg_t0_s: float | None = None,
+                          copy_bw_Bps: float | None = None) -> float:
+    """Segment count at which pack starts beating SG for a fixed total
+    payload (the recorded crossover point): ``K* = total/(copy_BW*seg_t0)``."""
+    seg_t0 = float(model.t0_s) if seg_t0_s is None else float(seg_t0_s)
+    copy_bw = host_copy_bw_Bps() if copy_bw_Bps is None else float(copy_bw_Bps)
+    return int(total_bytes) / (max(copy_bw, 1.0) * max(seg_t0, 1e-9))
 
 
 def _split(arr: np.ndarray, policy: TransferPolicy) -> list[np.ndarray]:
@@ -615,6 +826,11 @@ class TransferEngine:
         # and the refit consumer need no extra lock here.
         self.chunk_samples: "collections.deque[tuple[str, str, int, float]]" \
             = collections.deque(maxlen=_CHUNK_SAMPLE_WINDOW)
+        # grouped-transaction samples (direction, n_segments, total_bytes,
+        # wall_s) from _submit_many — same GIL-atomic deque discipline; the
+        # pack-vs-SG crossover refits the per-segment walk cost from these.
+        self.sg_samples: "collections.deque[tuple[str, int, int, float]]" \
+            = collections.deque(maxlen=_SG_SAMPLE_WINDOW)
         # monotone count of chunk samples ever taken: per-channel health
         # monitors PEEK the newest (chunk_seq - last_seen) entries instead
         # of popping, so they can coexist with the destructive
@@ -1239,6 +1455,10 @@ class TransferEngine:
             if ok_n:
                 self._record(TransferStats(ok_bytes, wall, ok_n, direction,
                                            self.policy.tag))
+                if ok_n > 1 and wall > 0.0:
+                    # grouped-transaction sample: the SG/batched crossover
+                    # refits the per-segment walk cost from (k, total, wall)
+                    self.sg_samples.append((direction, ok_n, ok_bytes, wall))
             for i in range(n):
                 out_lists[i].append(
                     errs[i] if errs[i] is not None else results[i])
@@ -1343,6 +1563,84 @@ class TransferEngine:
         sizes = [int(a.size) * a.dtype.itemsize for a in arrays]
         return self._submit_many(arrays, "rx", sizes,
                                  outs if out is not None else None, priority)
+
+    # -- scatter-gather descriptors (one slot, K segments, zero staging copy)
+    def tx_sg(self, segments: Sequence[Any],
+              priority: PriorityClass | None = None) -> SGTicket:
+        """Scatter-gather TX: a logical transfer submitted as a list of
+        ``(array, offset, nbytes)`` segments (bare arrays = whole-array
+        segments) that occupies ONE ring slot and ONE runtime descriptor
+        (``units=K``), with per-segment completion tracking and ordered
+        reassembly — and ZERO staging memcpy: each segment view goes
+        straight into the device put (the SG descriptor chain of the BSA
+        DMA engine, SNIPPETS.md Snippet 1). Whole-array segments come back
+        as shaped device arrays, so no unpack bitcast is needed either."""
+        if self.policy.management is not Management.INTERRUPT:
+            raise ValueError("tx_sg requires INTERRUPT management")
+        views, sizes = _sg_segment_views(segments, "tx")
+        return SGTicket(self._submit_many(views, "tx", sizes, None, priority))
+
+    def rx_sg(self, segments: Sequence[Any],
+              out: "np.ndarray | Sequence[np.ndarray] | None" = None,
+              priority: PriorityClass | None = None) -> SGTicket:
+        """Scatter-gather RX, mirroring :meth:`tx_sg`. ``out`` keeps the
+        zero-copy landing contract per segment: a sequence of per-segment
+        buffers, or ONE flat array carved at segment boundaries (the
+        striped reassembly landing zone)."""
+        if self.policy.management is not Management.INTERRUPT:
+            raise ValueError("rx_sg requires INTERRUPT management")
+        views, sizes = _sg_segment_views(segments, "rx")
+        outs = None
+        if out is not None:
+            outs = (carve_flat_out(out, views) if isinstance(out, np.ndarray)
+                    else _check_out(views, out))
+        return SGTicket(self._submit_many(views, "rx", sizes, outs, priority))
+
+    def _sg_fit(self) -> Any | None:
+        """Fit ``t(n) = t0 + n/BW`` from this engine's own recent TX chunk
+        samples — the model the standalone pack-vs-SG decision prices with
+        when no online controller is attached. None until there are enough
+        samples spanning a real size range (a degenerate fit would put the
+        crossover anywhere)."""
+        samples = [(n, t) for d, _m, n, t in list(self.chunk_samples)
+                   if d == "tx" and n > 0 and t > 0]
+        if len(samples) < 8:
+            return None
+        ns = np.array([s[0] for s in samples], float)
+        if ns.max() < 4 * max(ns.min(), 1.0):
+            return None
+        ts = np.array([s[1] for s in samples], float)
+        from repro.core.cost_model import TransferCostModel  # no cycle: lazy
+        return TransferCostModel.fit(ns, ts)
+
+    def sg_seg_t0_s(self, model: Any | None = None) -> float | None:
+        """Effective per-segment walk cost under grouped submission,
+        estimated from recent ``_submit_many`` transactions: each sample
+        gives ``seg_t0 ~= (wall - t0 - total/BW) / K``. Median over the
+        window (robust to one preempted outlier); None without data."""
+        m = model if model is not None else self._sg_fit()
+        if m is None:
+            return None
+        est = [max((wall - m.t0_s - total / m.bw_Bps) / k, 1e-7)
+               for _d, k, total, wall in list(self.sg_samples) if k > 1]
+        if not est:
+            return None
+        return float(np.median(np.array(est)))
+
+    def prefer_sg(self, sizes: Sequence[int],
+                  model: Any | None = None) -> bool:
+        """Pack-vs-SG decision for one layer set (see :func:`choose_sg`),
+        with the engine's best current knowledge: an explicit fitted
+        ``model`` wins; else a fit from the engine's own chunk samples;
+        else the structural few-large-arrays fallback.
+        AdaptiveChannelGroup overrides this with the controller's live
+        refit."""
+        sizes = [int(s) for s in sizes]
+        m = model if model is not None else self._sg_fit()
+        if m is None:
+            return (0 < len(sizes) <= _SG_FALLBACK_MAX_SEGMENTS
+                    and min(sizes) >= _SG_FALLBACK_MIN_SEG_BYTES)
+        return choose_sg(sizes, m, seg_t0_s=self.sg_seg_t0_s(m))
 
     # -- reporting -----------------------------------------------------------
     def summary(self) -> dict[str, float]:

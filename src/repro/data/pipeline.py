@@ -118,8 +118,19 @@ class StagedPipeline:
             keys = sorted(host_batch)
             arrays = [np.ascontiguousarray(host_batch[k]) for k in keys]
             lay = self.engine.layouts.get(("batch", tuple(keys)), arrays)
-            dev = lay.unpack(self.engine.tx(lay.pack(arrays),
-                                            priority=PriorityClass.BULK))
+            if (hasattr(self.engine, "tx_sg")
+                    and hasattr(self.engine, "prefer_sg")
+                    and self.engine.policy.management is Management.INTERRUPT
+                    and self.engine.layouts.decide_sg(
+                        ("batch", tuple(keys)), lay,
+                        self.engine.prefer_sg)):
+                # few large batch arrays: scatter-gather skips the staging
+                # memcpy — each array is its own descriptor segment.
+                dev = self.engine.tx_sg(lay.sg_segments(arrays),
+                                        priority=PriorityClass.BULK).wait()
+            else:
+                dev = lay.unpack(self.engine.tx(lay.pack(arrays),
+                                                priority=PriorityClass.BULK))
             # batch boundary, TX retired: safe point for an online-adaptive
             # engine to refit its cost model and swap plan generations
             # (no-op on plain engines/groups).

@@ -128,13 +128,30 @@ class ContinuousBatchingEngine:
         self.queue.append(req)
 
     def _admit(self) -> None:
+        admits: list[tuple[int, Request]] = []
         for slot in range(self.n_slots):
-            if self.slots[slot] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            prompt = np.ascontiguousarray(req.prompt[None], dtype=np.int32)
-            prompt_dev = reassemble_chunks(
-                self.transfer.tx(prompt)).reshape(prompt.shape)
+            if self.slots[slot] is None and self.queue:
+                admits.append((slot, self.queue.popleft()))
+        if not admits:
+            return
+        prompts = [np.ascontiguousarray(r.prompt[None], dtype=np.int32)
+                   for _s, r in admits]
+        # with several admissions pending, the (ragged) prompts go down as
+        # ONE scatter-gather ring transaction — each prompt its own
+        # descriptor segment, no per-prompt management overhead and no
+        # staging copy (ragged shapes cannot share a packed payload
+        # without padding anyway).
+        if (len(admits) > 1
+                and self.transfer.policy.management is Management.INTERRUPT
+                and hasattr(self.transfer, "tx_sg")):
+            devs = self.transfer.tx_sg(prompts).wait()
+            prompt_devs = [d.reshape(p.shape)
+                           for d, p in zip(devs, prompts)]
+        else:
+            prompt_devs = [
+                reassemble_chunks(self.transfer.tx(p)).reshape(p.shape)
+                for p in prompts]
+        for (slot, req), prompt_dev in zip(admits, prompt_devs):
             logits, one_cache = self._prefill1(
                 self.params, {"tokens": prompt_dev})
             first = int(np.asarray(

@@ -175,10 +175,28 @@ class ServingEngine:
         return jax.random.categorical(
             sub, logits / self.cfg.temperature)[:, None].astype(jnp.int32)
 
-    def _tx_prompts(self, prompts: np.ndarray) -> jax.Array:
-        """Stage the prompt batch through the transfer engine (measured TX)."""
+    def _tx_prompts(self, prompts: np.ndarray,
+                    extra_inputs: dict | None = None) -> dict:
+        """Stage the prompt batch (and any side inputs) through the transfer
+        engine as the prefill batch dict. With side inputs on an SG-capable
+        INTERRUPT engine, prompts + extras ride ONE scatter-gather ring slot
+        (one logical descriptor, zero staging copy) instead of a measured
+        prompt TX plus unmeasured ``device_put`` calls."""
         arr = np.ascontiguousarray(prompts, dtype=np.int32)
-        return reassemble_chunks(self.engine.tx(arr)).reshape(arr.shape)
+        extra = {k: np.ascontiguousarray(v)
+                 for k, v in (extra_inputs or {}).items()}
+        if (extra
+                and self.engine.policy.management is Management.INTERRUPT
+                and hasattr(self.engine, "tx_sg")):
+            keys = sorted(extra)
+            devs = self.engine.tx_sg([arr] + [extra[k] for k in keys]).wait()
+            batch = {"tokens": devs[0].reshape(arr.shape)}
+            batch.update(dict(zip(keys, devs[1:])))
+            return batch
+        batch = {"tokens":
+                 reassemble_chunks(self.engine.tx(arr)).reshape(arr.shape)}
+        batch.update({k: jnp.asarray(v) for k, v in extra.items()})
+        return batch
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
                  extra_inputs: dict | None = None) -> list[RequestResult]:
@@ -191,9 +209,7 @@ class ServingEngine:
         parallel (each owns its transfer rings and buffers)."""
         b = prompts.shape[0]
         max_new_tokens = max(1, max_new_tokens)  # prefill always emits one
-        batch = {"tokens": self._tx_prompts(prompts)}
-        if extra_inputs:
-            batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
+        batch = self._tx_prompts(prompts, extra_inputs)
         # read the CURRENT policy off the engine: an online-adaptive engine
         # may have swapped plan generations since construction.
         overlap_rx = self.engine.policy.management is Management.INTERRUPT

@@ -559,3 +559,166 @@ def test_group_many_striping_preserves_order(k, nch):
         assert sum(e.rx_bytes_total for e in grp.engines) == flat.nbytes
     finally:
         grp.close()
+
+# ---- scatter-gather: one ring slot, zero staging copy ----------------------
+# The SG form submits a segment LIST as one logical transfer: byte-identical
+# to the pack path, but each segment is its own zero-copy view riding a
+# single ring transaction.
+
+def test_sg_roundtrip_matches_pack_bytes():
+    """SG and pack deliver byte-identical device payloads for the same
+    layer set (the correctness contract that lets the cost model choose)."""
+    eng = TransferEngine(TransferPolicy.kernel_level_ring(4))
+    try:
+        arrays = [(np.arange(400 + 130 * i) % 251).astype(np.float32)
+                  for i in range(4)]
+        lay = StagedLayout(arrays)
+        packed = lay.unpack(eng.tx(lay.pack(arrays)))
+        sg = eng.tx_sg(lay.sg_segments(arrays)).wait(10.0)
+        for p, s, a in zip(packed, sg, arrays):
+            np.testing.assert_array_equal(np.asarray(p).reshape(-1), a)
+            np.testing.assert_array_equal(np.asarray(s), a)
+            assert np.asarray(s).dtype == a.dtype and s.shape == a.shape
+    finally:
+        eng.close()
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 8), base=st.integers(2, 400), di=st.integers(0, 2))
+def test_sg_roundtrip_property(k, base, di):
+    """tx_sg -> rx_sg is the identity for k whole-array segments on any
+    INTERRUPT ring depth; ordering is segment order."""
+    eng = TransferEngine(_interrupt_ring(_RING_DEPTHS[di]))
+    try:
+        arrays = [((np.arange(base + 31 * i) + 7 * i) % 251)
+                  .astype(np.float32) for i in range(k)]
+        devs = eng.tx_sg(arrays).wait(10.0)
+        backs = eng.rx_sg(devs).wait(10.0)
+        for a, d, b in zip(arrays, devs, backs):
+            np.testing.assert_array_equal(np.asarray(d), a)
+            np.testing.assert_array_equal(np.asarray(b), a)
+    finally:
+        eng.close()
+
+
+def test_sg_partial_segments_roundtrip():
+    """(array, offset, nbytes) sub-range segments transfer exactly the
+    requested bytes — no staging buffer ever sees them."""
+    eng = TransferEngine(TransferPolicy.kernel_level())
+    try:
+        a = (np.arange(1024) % 251).astype(np.float32)
+        item = a.dtype.itemsize
+        segs = [(a, 0, 256 * item), (a, 512 * item, 256 * item)]
+        devs = eng.tx_sg(segs).wait(10.0)
+        np.testing.assert_array_equal(np.asarray(devs[0]), a[:256])
+        np.testing.assert_array_equal(np.asarray(devs[1]), a[512:768])
+    finally:
+        eng.close()
+
+
+def test_sg_segment_validation():
+    eng = TransferEngine(TransferPolicy.kernel_level())
+    try:
+        a = np.zeros(64, np.float32)
+        with pytest.raises(ValueError):  # misaligned offset
+            eng.tx_sg([(a, 2, 8)])
+        with pytest.raises(ValueError):  # out of bounds
+            eng.tx_sg([(a, 0, a.nbytes + 4)])
+        with pytest.raises(ValueError):  # non-contiguous partial TX view
+            eng.tx_sg([(np.zeros((8, 8), np.float32)[:, ::2], 0, 16)])
+    finally:
+        eng.close()
+
+
+def test_sg_requires_interrupt():
+    eng = TransferEngine(TransferPolicy.user_level_polling())
+    with pytest.raises(ValueError):
+        eng.tx_sg([np.zeros(4, np.float32)])
+    with pytest.raises(ValueError):
+        eng.rx_sg([])
+
+
+def test_rx_sg_out_zero_copy_landing():
+    """rx_sg keeps the out= zero-copy contract: per-segment buffers are
+    written in place and a flat array is carved per segment."""
+    eng = TransferEngine(TransferPolicy.kernel_level())
+    try:
+        arrays = [(np.arange(64 * (i + 1)) % 53).astype(np.float32)
+                  for i in range(3)]
+        devs = eng.tx_sg(arrays).wait(10.0)
+        outs = [np.empty_like(a) for a in arrays]
+        sg = eng.rx_sg(devs, out=outs)
+        for i, got in enumerate(sg.wait(10.0)):
+            assert got is outs[i]  # zero-copy: the caller's array itself
+            np.testing.assert_array_equal(outs[i], arrays[i])
+        # flat variant: one preallocated byte array, carved per segment
+        flat = np.empty(sum(a.nbytes for a in arrays), np.uint8)
+        results = eng.rx_sg(devs, out=flat).wait(10.0)
+        off = 0
+        for a, r in zip(arrays, results):
+            np.testing.assert_array_equal(
+                flat[off:off + a.nbytes].view(np.float32), a)
+            off += a.nbytes
+    finally:
+        eng.close()
+
+
+def test_sg_one_ring_slot_and_byte_accounting():
+    """K segments ride ONE ring transaction: one stats record per
+    direction carrying all K descriptors and the exact summed bytes."""
+    eng = TransferEngine(TransferPolicy.kernel_level())
+    try:
+        arrays = [(np.arange(128 + 64 * i) % 97).astype(np.int32)
+                  for i in range(5)]
+        total = sum(a.nbytes for a in arrays)
+        devs = eng.tx_sg(arrays).wait(10.0)
+        eng.rx_sg(devs).wait(10.0)
+        assert eng.tx_bytes_total == total == eng.rx_bytes_total
+        tx_recs = [s for s in eng.stats if s.direction == "tx"]
+        rx_recs = [s for s in eng.stats if s.direction == "rx"]
+        assert len(tx_recs) == 1 and tx_recs[0].n_chunks == len(arrays)
+        assert len(rx_recs) == 1 and rx_recs[0].n_chunks == len(arrays)
+        assert eng.slot_collisions == 0
+    finally:
+        eng.close()
+
+
+def test_choose_sg_crossover_decision():
+    """The pack-vs-SG pricing: SG wins iff K*seg_t0 < total/copy_BW, so
+    few large segments ride SG and many small arrays keep the pack."""
+    from repro.core.transfer import choose_sg, sg_crossover_segments
+
+    model = TransferCostModel(t0_s=50e-6, bw_Bps=8e9)
+    copy_bw = 10e9
+    few_large = [8 << 20] * 4     # 4 x 8 MiB: 4*50us << 32MiB/10GBps
+    many_small = [4 << 10] * 512  # 512 x 4 KiB: 512*50us >> 2MiB/10GBps
+    assert choose_sg(few_large, model, copy_bw_Bps=copy_bw) is True
+    assert choose_sg(many_small, model, copy_bw_Bps=copy_bw) is False
+    # the crossover segment count separates the two regimes
+    k_star = sg_crossover_segments(32 << 20, model, copy_bw_Bps=copy_bw)
+    assert 4 < k_star < 512
+
+
+def test_layout_cache_sg_memo_and_invalidation():
+    """decide_sg prices once per key, the memo survives repeat frames,
+    invalidate_sg() and a shape change both re-price."""
+    cache = LayoutCache()
+    arrays = [np.zeros(256, np.float32), np.zeros(512, np.float32)]
+    lay = cache.get("k", arrays)
+    calls = []
+
+    def decide(sizes):
+        calls.append(list(sizes))
+        return True
+
+    assert cache.decide_sg("k", lay, decide) is True
+    assert cache.decide_sg("k", lay, decide) is True  # memo hit
+    assert calls == [[1024, 2048]]
+    cache.invalidate_sg()
+    assert cache.decide_sg("k", lay, decide) is True
+    assert len(calls) == 2
+    # shape change on the key evicts the stale decision
+    arrays2 = [np.zeros(300, np.float32), np.zeros(512, np.float32)]
+    lay2 = cache.get("k", arrays2)
+    assert cache.decide_sg("k", lay2, decide) is True
+    assert len(calls) == 3 and calls[-1] == [1200, 2048]
