@@ -23,6 +23,7 @@ from benchmarks import (
     roshambo_table,
     sg_vs_pack,
     streaming_layers,
+    tenant_isolation,
     transfer_sweep,
     txrx_balance,
 )
@@ -37,6 +38,7 @@ BENCHES = {
     "sg_vs_pack": sg_vs_pack.run,  # scatter-gather vs staging-copy pack
     "adaptive_drift": adaptive_drift.run,  # online refit vs stale plan
     "qos_contention": qos_contention.run,  # shared-runtime QoS arbitration
+    "tenant_isolation": tenant_isolation.run,  # tier-2 heavy-hitter WFQ
     "fault_recovery": fault_recovery.run,  # quarantine + replan vs stall
     "collective_overlap": collective_overlap.run,  # blocks-mode collectives
     "roofline": roofline.run,  # reads dry-run artifacts
@@ -109,6 +111,12 @@ def main() -> None:
                       f"fifo/runtime "
                       f"{qc['p99_ratio_fifo_over_runtime']}, coalescing "
                       f"b32 {doc['coalescing']['speedup_b32']}x)")
+            if name == "tenant_isolation":
+                ti = tenant_isolation.merge_bench_json(rows)
+                print(f"# merged tenant_isolation rows into "
+                      f"BENCH_transfer.json (victim p99 vs noflood: wfq "
+                      f"{ti['isolation_ratio_wfq']}x, single-tier "
+                      f"{ti['isolation_ratio_single_tier']}x)")
         except Exception as e:  # noqa: BLE001 — a merge failure is a failure
             print(f"# {name} MERGE ERROR: {e}", file=sys.stderr)
             failures.append(name)

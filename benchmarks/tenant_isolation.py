@@ -1,0 +1,242 @@
+"""Heavy-hitter isolation across 1000 tenants of ONE priority class.
+
+The tentpole claim of the second arbitration tier: per-tenant byte-weighted
+fair queuing *inside* a class means one tenant flooding megabyte
+descriptors cannot make the other 999 tenants wait out its backlog. The
+class tier alone (PR 5's WFQ between classes) cannot help here — every
+tenant is BULK, so a single-tier runtime serves the flood FIFO and every
+victim queues behind the whole backlog.
+
+Synthetic population: 999 victim tenants drawing submissions from a
+zipf(1.2) popularity curve (a few hot tenants, a long tail — the shape a
+multi-tenant serving box actually sees) plus one flooding tenant that
+keeps a deep backlog of 1 MiB descriptors queued at all times. Victims
+submit 4 KiB descriptors one at a time and measure submit->completion
+wall time. Four variants:
+
+- ``noflood``         : two-tier runtime, victims only — the baseline p99.
+- ``flood-single``    : ``TransferRuntime(tenant_fair=False)`` + flood —
+                        tier 2 disabled, victims queue FIFO behind the
+                        flood backlog (the ablation arm).
+- ``flood-wfq``       : two-tier runtime + flood — per-tenant vtime makes
+                        each 4 KiB victim descriptor win the next dispatch
+                        slot over the flood's megabyte-charged flow.
+- ``flood-cap-admit`` : flood-wfq plus a leaf cap on the flooder's flow
+                        (the cap tree's per-tenant bucket) and an
+                        :class:`AdmissionController` consulted before each
+                        flood top-up — deferrals and sheds must both show
+                        up in the ledgers.
+
+Headline: ``isolation_ratio_wfq`` (flood-wfq victim p99 over noflood) is
+the acceptance bar — scripts/check_bench.py fails the committed file when
+it exceeds 1.5x, or when the single-tier ratio does not exceed the WFQ
+ratio (tier 2 rotted into a no-op).
+
+    PYTHONPATH=src python benchmarks/tenant_isolation.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import threading
+import time
+
+import numpy as np
+
+from repro.core.qos import AdmissionController, AdmissionPolicy, QosSpec
+from repro.core.runtime import (
+    ClassQos,
+    PriorityClass,
+    TransferRuntime,
+    _pct,
+)
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_transfer.json"
+
+N_TENANTS = 1000          # 999 zipf victims + 1 flooder
+ZIPF_A = 1.2
+FLOOD_DEPTH = 32          # descriptors the flooder keeps queued
+FLOOD_NBYTES = 1 << 20    # megabyte descriptors: WFQ charges by bytes...
+FLOOD_SERVICE_S = 300e-6  # ...but each holds the worker only briefly
+VICTIM_NBYTES = 4 << 10
+VICTIM_SERVICE_S = 2e-3   # victim service time dominates its OWN latency
+FLOOD_CAP_BPS = 64e6      # leaf cap for the cap-admit variant (~64 desc/s)
+CLS = PriorityClass.BULK
+
+
+def _victim_tenant(rng: np.random.Generator) -> str:
+    """One zipf(1.2) draw folded onto the 999 victim ids."""
+    return f"t{(int(rng.zipf(ZIPF_A)) - 1) % (N_TENANTS - 1) + 1}"
+
+
+def _flood_loop(h, rt, stop: threading.Event, counters: dict,
+                admission: AdmissionController | None) -> None:
+    """Keep ``FLOOD_DEPTH`` flood descriptors queued; optionally ask the
+    admission controller before each top-up burst (the serving-layer seam
+    a real multi-tenant frontend would sit behind)."""
+    spec = QosSpec(tenant="flood")
+    # track the backlog with our own completion events, not
+    # rt.tenant_depth: the single-tier ablation arm ignores tenant tags,
+    # so the runtime-side depth reads 0 there and would unbound the flood.
+    pending: list[threading.Event] = []
+    while not stop.is_set():
+        pending = [ev for ev in pending if not ev.is_set()]
+        counters["depth"] = len(pending)
+        if len(pending) >= FLOOD_DEPTH:
+            time.sleep(FLOOD_SERVICE_S)
+            continue
+        if admission is not None:
+            d = admission.decide("flood", cls=CLS)
+            if not d.admitted:
+                counters["sheds"] += 1
+                time.sleep(d.retry_after_s or 1e-3)
+                continue
+        for _ in range(FLOOD_DEPTH - len(pending)):
+            ev, _ = h.submit(lambda: time.sleep(FLOOD_SERVICE_S),
+                             nbytes=FLOOD_NBYTES, qos=spec)
+            pending.append(ev)
+            counters["submitted"] += 1
+    for ev in pending:  # drain: leave no queued flood work behind
+        ev.wait(10.0)
+    counters["depth"] = 0
+
+
+def _run_variant(name: str, *, flood: bool, tenant_fair: bool,
+                 cap_admit: bool = False, quick: bool = False) -> dict:
+    n_events = 60 if quick else 400
+    rng = np.random.default_rng(0)
+    qos = {CLS: ClassQos(weight=1.0, deadline_s=60.0)}
+    counters = {"submitted": 0, "sheds": 0, "depth": 0}
+    waits: list[float] = []
+    with TransferRuntime(workers=1, qos=qos,
+                         tenant_fair=tenant_fair) as rt:
+        # measure arbitration, not completion batching: immediate wakeups
+        rt.set_coalesce(CLS, None)
+        h = rt.register(f"bench-{name}", CLS)
+        admission = None
+        if cap_admit:
+            rt.set_tenant_cap(CLS, "flood", FLOOD_CAP_BPS, burst_s=0.005)
+            admission = AdmissionController(
+                runtime=rt, cls=CLS,
+                policy=AdmissionPolicy(queue_depth=8, shed_depth=24))
+        stop = threading.Event()
+        flooder = None
+        if flood:
+            flooder = threading.Thread(
+                target=_flood_loop, args=(h, rt, stop, counters, admission),
+                daemon=True)
+            flooder.start()
+            # let the flood backlog actually build before measuring
+            t0 = time.monotonic()
+            while (counters["depth"] < FLOOD_DEPTH // 2
+                   and time.monotonic() - t0 < 2.0):
+                time.sleep(1e-3)
+        for _ in range(4):  # warmup: worker spin-up + first dispatches
+            ev, _ = h.submit(lambda: time.sleep(VICTIM_SERVICE_S),
+                             nbytes=VICTIM_NBYTES,
+                             qos=QosSpec(tenant=_victim_tenant(rng)))
+            ev.wait()
+        for _ in range(n_events):
+            spec = QosSpec(tenant=_victim_tenant(rng))
+            t0 = time.perf_counter()
+            ev, _ = h.submit(lambda: time.sleep(VICTIM_SERVICE_S),
+                             nbytes=VICTIM_NBYTES, qos=spec)
+            ev.wait()
+            waits.append(time.perf_counter() - t0)
+        stop.set()
+        if flooder is not None:
+            flooder.join(timeout=30)
+        summary = rt.class_summary().get(CLS.value, {})
+        tenants = summary.get("tenants", {})
+        flood_row = tenants.get("flood", {})
+        h.close()
+    return {
+        "bench": "tenant_isolation",
+        "variant": name,
+        "n_victim_events": n_events,
+        "n_tenants": N_TENANTS,
+        "tenants_active": len(tenants),
+        "victim_p50_ms": round(_pct(waits, 0.5) * 1e3, 3),
+        "victim_p99_ms": round(_pct(waits, 0.99) * 1e3, 3),
+        "victim_max_ms": round(max(waits) * 1e3, 3),
+        "flood_submitted": counters["submitted"],
+        "flood_completed": int(flood_row.get("completed", 0)),
+        "flood_cap_deferrals": int(flood_row.get("cap_deferrals", 0)),
+        "admission_sheds": counters["sheds"],
+    }
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = [
+        _run_variant("noflood", flood=False, tenant_fair=True, quick=quick),
+        _run_variant("flood-single", flood=True, tenant_fair=False,
+                     quick=quick),
+        _run_variant("flood-wfq", flood=True, tenant_fair=True, quick=quick),
+        _run_variant("flood-cap-admit", flood=True, tenant_fair=True,
+                     cap_admit=True, quick=quick),
+    ]
+    by = {r["variant"]: r for r in rows}
+    base = max(by["noflood"]["victim_p99_ms"], 1e-6)
+    rows.append({
+        "bench": "tenant_isolation",
+        "variant": "headline",
+        "isolation_ratio_wfq": round(
+            by["flood-wfq"]["victim_p99_ms"] / base, 3),
+        "isolation_ratio_single_tier": round(
+            by["flood-single"]["victim_p99_ms"] / base, 3),
+        "isolation_ratio_cap_admit": round(
+            by["flood-cap-admit"]["victim_p99_ms"] / base, 3),
+    })
+    return rows
+
+
+def merge_bench_json(rows: list[dict],
+                     path: pathlib.Path = BENCH_JSON) -> dict:
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    by = {r["variant"]: r for r in rows}
+    head = by["headline"]
+    doc["tenant_isolation"] = {
+        "rows": rows,
+        "n_tenants": N_TENANTS,
+        "victim_p99_noflood_ms": by["noflood"]["victim_p99_ms"],
+        "victim_p99_flood_wfq_ms": by["flood-wfq"]["victim_p99_ms"],
+        "victim_p99_flood_single_ms": by["flood-single"]["victim_p99_ms"],
+        "victim_p99_flood_cap_admit_ms":
+            by["flood-cap-admit"]["victim_p99_ms"],
+        "isolation_ratio_wfq": head["isolation_ratio_wfq"],
+        "isolation_ratio_single_tier": head["isolation_ratio_single_tier"],
+        "isolation_ratio_cap_admit": head["isolation_ratio_cap_admit"],
+        "flood_cap_deferrals": by["flood-cap-admit"]["flood_cap_deferrals"],
+        "admission_sheds": by["flood-cap-admit"]["admission_sheds"],
+    }
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    return doc["tenant_isolation"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer victim events; do NOT rewrite BENCH json")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    keys = ["variant", "victim_p50_ms", "victim_p99_ms", "victim_max_ms",
+            "tenants_active", "flood_completed", "flood_cap_deferrals",
+            "admission_sheds"]
+    print(",".join(keys))
+    for r in rows[:-1]:
+        print(",".join(str(r[k]) for k in keys))
+    head = rows[-1]
+    print(f"victim p99 degradation vs noflood: "
+          f"wfq {head['isolation_ratio_wfq']}x, "
+          f"single-tier {head['isolation_ratio_single_tier']}x, "
+          f"cap+admit {head['isolation_ratio_cap_admit']}x")
+    if not args.quick:
+        merge_bench_json(rows)
+        print(f"merged into {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

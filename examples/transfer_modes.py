@@ -15,19 +15,18 @@ import numpy as np
 
 from repro.accel.nullhop import NullHopExecutor
 from repro.accel.roshambo import RoShamBoCNN
-from repro.core.runtime import (
-    PriorityClass,
-    TransferRuntime,
-    backend_for,
-)
-from repro.core.transfer import (
+from repro.core import (  # the curated facade — import surface types here
     Buffering,
     Management,
     Partitioning,
-    Ticket,
+    PriorityClass,
+    QosSpec,
     TransferEngine,
     TransferPolicy,
+    TransferRuntime,
+    backend_for,
 )
+from repro.core.transfer import Ticket
 
 POLICIES = [
     ("user-level polling", TransferPolicy.user_level_polling()),
@@ -101,11 +100,13 @@ def demo_unified_runtime():
 
         t = threading.Thread(target=flood, daemon=True)
         t.start()
+        # the QosSpec submit context: class + tenant on one object (the
+        # deprecated spelling was priority=PriorityClass.TOKEN)
+        tok_qos = QosSpec(priority=PriorityClass.TOKEN, tenant="demo")
         lats = []
         for _ in range(50):
             t0 = time.perf_counter()
-            tok_eng.rx_async(tok_dev, out=[tok_out],
-                             priority=PriorityClass.TOKEN).wait()
+            tok_eng.rx_async(tok_dev, out=[tok_out], qos=tok_qos).wait()
             lats.append(time.perf_counter() - t0)
             time.sleep(0.002)
         stop.set()
@@ -115,10 +116,16 @@ def demo_unified_runtime():
         print(f"  token RX under bulk flood: p50 {lats[len(lats)//2]*1e3:.2f} "
               f"ms, max {lats[-1]*1e3:.2f} ms; sensor slices {events['n']}")
         print("  per-class ledger:")
-        for cls, row in rt.class_summary().items():
+        summary = rt.class_summary()
+        for cls, row in summary.items():
             print(f"    {cls:7s} n={row['completed']:<5d} "
                   f"bytes={row['bytes_total']:<12d} "
                   f"dispatch p99 {row['dispatch_p99_ms']:.3f} ms")
+        demo_row = summary["token"]["tenants"].get("demo")
+        if demo_row:
+            print(f"    token tenant 'demo': n={demo_row['completed']} "
+                  f"bytes={demo_row['bytes_total']} dispatch p99 "
+                  f"{demo_row['dispatch_p99_ms']:.3f} ms")
         bulk_eng.close()
         tok_eng.close()
 

@@ -63,6 +63,12 @@ REQUIRED = {
                      "pack_over_sg_us_per_byte_few_large",
                      "decision_few_large", "decision_many_small",
                      "crossover_segments"],
+    "tenant_isolation": ["rows", "victim_p99_noflood_ms",
+                         "victim_p99_flood_wfq_ms",
+                         "victim_p99_flood_single_ms",
+                         "isolation_ratio_wfq",
+                         "isolation_ratio_single_tier",
+                         "flood_cap_deferrals", "admission_sheds"],
 }
 
 
@@ -123,6 +129,25 @@ def _structural(doc: dict, errors: list[str]) -> None:
             f"staging_copy.decision_many_small = "
             f"{sc['decision_many_small']} (expected 'pack'): the crossover "
             f"no longer picks the staged pack for many small arrays")
+    # tenant-isolation acceptance bar: with the second arbitration tier on,
+    # a 1000-tenant zipf population's victim p99 under a megabyte-descriptor
+    # flood must stay within 1.5x of the no-flood baseline (a CEILING, not a
+    # floor), and the single-tier ablation must be measurably worse than the
+    # two-tier run — equal-or-better means tier 2 rotted into a no-op
+    ti = doc.get("tenant_isolation", {})
+    wfq = ti.get("isolation_ratio_wfq")
+    single = ti.get("isolation_ratio_single_tier")
+    if isinstance(wfq, (int, float)) and wfq > 1.5:
+        errors.append(
+            f"tenant_isolation.isolation_ratio_wfq = {wfq} > 1.5: the "
+            f"per-tenant WFQ tier is no longer isolating victims from the "
+            f"flooding tenant in the committed file")
+    if (isinstance(wfq, (int, float)) and isinstance(single, (int, float))
+            and single <= wfq):
+        errors.append(
+            f"tenant_isolation: single-tier victim degradation {single}x <= "
+            f"two-tier {wfq}x — the second arbitration tier is not buying "
+            f"any isolation over the FIFO ablation")
     # a 50% BULK cap that does not reduce the BULK share at all means cap
     # enforcement rotted into a no-op
     qc = doc.get("qos_contention", {})

@@ -58,6 +58,9 @@ run_smoke() {
   echo "== smoke: sg_vs_pack --quick =="
   python benchmarks/sg_vs_pack.py --quick
 
+  echo "== smoke: tenant_isolation --quick (tier-2 heavy-hitter WFQ) =="
+  python benchmarks/tenant_isolation.py --quick
+
   # no standalone qos_contention smoke: check_bench's fresh probe runs the
   # quick qos benchmark itself — which includes the rx_many coalescing
   # sweep (batch 1/8/32 amortization) — and gates on its numbers; running

@@ -7,6 +7,9 @@ partitioning (unique / blocks) — at every memory boundary of a TPU system:
 - completion dispatch: :mod:`repro.core.runtime` (ONE shared interrupt-style
                      TransferRuntime arbitrating every engine's completions
                      by QoS class — the paper's kernel driver, centralized)
+- submit context   : :mod:`repro.core.qos` (:class:`QosSpec` — class, tenant,
+                     weight, caps, deadlines on ONE object — plus serving-side
+                     admission control)
 - host <-> device  : :mod:`repro.core.transfer` (measured on this machine)
 - multi-channel    : :mod:`repro.core.channels` (striped rings + adaptive
                      cost-model policy, the NEURAghe/ZynqNet lesson)
@@ -15,20 +18,32 @@ partitioning (unique / blocks) — at every memory boundary of a TPU system:
 - HBM  <-> VMEM    : :mod:`repro.kernels` grids parameterized by the policy
 - chip <-> chip    : :mod:`repro.core.pipeline_collectives` (blocks-mode rings)
 - per-layer stream : :mod:`repro.core.streaming` (the NullHop execution model)
+
+``__all__`` below is the curated public surface — import from here
+(``from repro.core import TransferEngine, QosSpec``), not from the
+submodules, which stay free to reshuffle internals.
 """
 
-from repro.core.runtime import (  # noqa: F401
+from repro.core.runtime import (
+    ClassQos,
     CooperativeScheduler,
     PollingBackend,
     PriorityClass,
-    QosSpec,
     ScheduledBackend,
     TransferRuntime,
     backend_for,
     get_runtime,
     set_runtime,
 )
-from repro.core.transfer import (  # noqa: F401
+from repro.core.qos import (
+    DEFAULT_TENANT,
+    AdmissionController,
+    AdmissionDecision,
+    AdmissionError,
+    AdmissionPolicy,
+    QosSpec,
+)
+from repro.core.transfer import (
     Buffering,
     BufferInFlightError,
     LayoutCache,
@@ -39,18 +54,62 @@ from repro.core.transfer import (  # noqa: F401
     TransferEngine,
     TransferStats,
 )
-from repro.core.channels import (  # noqa: F401
+from repro.core.channels import (
     ChannelGroup,
     ChannelPlan,
     StagingPool,
     calibrate_transfer,
     plan_channels,
 )
-from repro.core.adaptive import (  # noqa: F401
+from repro.core.adaptive import (
     AdaptiveChannelGroup,
     AdaptiveConfig,
     OnlineTransferController,
     RollingFit,
     choose_management,
 )
-from repro.core.cost_model import TransferCostModel  # noqa: F401
+from repro.core.cost_model import TransferCostModel
+
+__all__ = [
+    # runtime (completion dispatch + two-tier arbitration)
+    "ClassQos",
+    "CooperativeScheduler",
+    "PollingBackend",
+    "PriorityClass",
+    "ScheduledBackend",
+    "TransferRuntime",
+    "backend_for",
+    "get_runtime",
+    "set_runtime",
+    # qos (the unified submit context + admission control)
+    "DEFAULT_TENANT",
+    "AdmissionController",
+    "AdmissionDecision",
+    "AdmissionError",
+    "AdmissionPolicy",
+    "QosSpec",
+    # transfer (single-engine policy matrix)
+    "Buffering",
+    "BufferInFlightError",
+    "LayoutCache",
+    "Management",
+    "Partitioning",
+    "StagedLayout",
+    "TransferPolicy",
+    "TransferEngine",
+    "TransferStats",
+    # channels (striped rings)
+    "ChannelGroup",
+    "ChannelPlan",
+    "StagingPool",
+    "calibrate_transfer",
+    "plan_channels",
+    # adaptive (online controller)
+    "AdaptiveChannelGroup",
+    "AdaptiveConfig",
+    "OnlineTransferController",
+    "RollingFit",
+    "choose_management",
+    # cost model
+    "TransferCostModel",
+]

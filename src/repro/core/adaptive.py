@@ -75,6 +75,7 @@ from repro.core.channels import (
 )
 from repro.core.cost_model import TransferCostModel
 from repro.core.faults import RecoveryConfig
+from repro.core.qos import QosSpec, resolve_submit_qos
 from repro.core.runtime import PriorityClass, TransferRuntime
 from repro.dist.fault import TransferFaultState
 from repro.core.transfer import (
@@ -732,12 +733,14 @@ class AdaptiveChannelGroup:
                  priority: PriorityClass = PriorityClass.LAYER,
                  state_path: "str | os.PathLike | None" = None,
                  recovery: RecoveryConfig | None = None,
-                 fault_state: TransferFaultState | None = None):
+                 fault_state: TransferFaultState | None = None,
+                 qos: QosSpec | None = None):
         self.cfg = cfg or AdaptiveConfig()
         self._devices = devices
         self._factory = engine_factory
         self._runtime = runtime
-        self.priority = priority
+        self.qos = QosSpec(priority=priority).merged(qos)
+        self.priority = self.qos.priority
         self.state_path = state_path
         # ONE fault ledger across every plan generation: counters must
         # survive safe-point swaps, or a replan would erase the very
@@ -800,7 +803,8 @@ class AdaptiveChannelGroup:
                              layouts=self.layouts, runtime=self._runtime,
                              priority=self.priority,
                              recovery=self.recovery,
-                             fault_state=self.fault_state)
+                             fault_state=self.fault_state,
+                             qos=self.qos)
             engines = list(g.engines)
         else:
             factory = self._factory or TransferEngine
@@ -1005,6 +1009,14 @@ class AdaptiveChannelGroup:
         self._ingest_chunks()
 
     # -- engine surface ------------------------------------------------------
+    def _resolve_qos(self, where: str, qos: QosSpec | None,
+                     priority: PriorityClass | None) -> QosSpec:
+        """One facade call's effective submit context (see
+        :meth:`TransferEngine._resolve_qos` — same shim, facade default)."""
+        spec = resolve_submit_qos(f"{type(self).__name__}.{where}",
+                                  qos, priority)
+        return self.qos.merged(spec)
+
     def _enter(self):
         """Per-submit safe-point check: apply a pending swap if the ring is
         drained, then return the engine of the current generation. The
@@ -1053,13 +1065,13 @@ class AdaptiveChannelGroup:
     def _issue_tx(self, arr: np.ndarray,
                   callback: Callable[[list], None] | None,
                   layout: StagedLayout | None,
-                  priority: PriorityClass | None = None) -> Ticket:
+                  qos: QosSpec | None = None) -> Ticket:
         eng = self._enter()
         ticket = None
         try:
             if eng.policy.management is Management.INTERRUPT:
                 ticket = eng.tx_async(arr, callback=callback, layout=layout,
-                                      priority=priority)
+                                      qos=qos)
                 return ticket
             # polling generation: the submit IS the transfer (the paper's
             # user-level driver blocks the host); hand back a done ticket.
@@ -1073,24 +1085,30 @@ class AdaptiveChannelGroup:
     def tx_async(self, host_array: np.ndarray,
                  callback: Callable[[list], None] | None = None,
                  layout: StagedLayout | None = None,
-                 priority: PriorityClass | None = None) -> Ticket:
-        return self._issue_tx(host_array, callback, layout, priority)
+                 priority: PriorityClass | None = None, *,
+                 qos: QosSpec | None = None) -> Ticket:
+        spec = self._resolve_qos("tx_async", qos, priority)
+        return self._issue_tx(host_array, callback, layout, qos=spec)
 
     def tx(self, host_array: np.ndarray,
-           priority: PriorityClass | None = None) -> list[jax.Array]:
-        return self.tx_async(host_array, priority=priority).wait()
+           priority: PriorityClass | None = None, *,
+           qos: QosSpec | None = None) -> list[jax.Array]:
+        spec = self._resolve_qos("tx", qos, priority)
+        return self.tx_async(host_array, qos=spec).wait()
 
     def rx_async(self, device_arrays: Sequence[jax.Array],
                  callback: Callable[[list], None] | None = None,
                  out: "np.ndarray | Sequence[np.ndarray] | None" = None,
-                 priority: PriorityClass | None = None
+                 priority: PriorityClass | None = None, *,
+                 qos: QosSpec | None = None
                  ) -> Ticket:
+        spec = self._resolve_qos("rx_async", qos, priority)
         eng = self._enter()
         ticket = None
         try:
             if eng.policy.management is Management.INTERRUPT:
                 ticket = eng.rx_async(device_arrays, callback=callback,
-                                      out=out, priority=priority)
+                                      out=out, qos=spec)
                 return ticket
             arrays = list(device_arrays)
             if out is not None and isinstance(out, np.ndarray):
@@ -1105,23 +1123,26 @@ class AdaptiveChannelGroup:
 
     def rx(self, device_arrays: Sequence[jax.Array],
            out: "np.ndarray | Sequence[np.ndarray] | None" = None,
-           priority: PriorityClass | None = None
+           priority: PriorityClass | None = None, *,
+           qos: QosSpec | None = None
            ) -> list[np.ndarray]:
-        return self.rx_async(device_arrays, out=out,
-                             priority=priority).wait()
+        spec = self._resolve_qos("rx", qos, priority)
+        return self.rx_async(device_arrays, out=out, qos=spec).wait()
 
     # -- batched descriptor submission ---------------------------------------
     def tx_many(self, host_arrays: "Sequence[np.ndarray]",
-                priority: PriorityClass | None = None) -> list[Ticket]:
+                priority: PriorityClass | None = None, *,
+                qos: QosSpec | None = None) -> list[Ticket]:
         """Batched TX through the current generation; the observed group
         size feeds the controller's batch EWMA so the polling/interrupt
         crossover prices batched dispatch correctly. On a polling
         generation each submit IS the transfer (done tickets)."""
+        spec = self._resolve_qos("tx_many", qos, priority)
         grp = self._enter()
         tickets = None
         try:
             if grp.policy.management is Management.INTERRUPT:
-                tickets = grp.tx_many(host_arrays, priority=priority)
+                tickets = grp.tx_many(host_arrays, qos=spec)
                 self.controller.note_submit_batch(len(tickets))
                 return tickets
             done = []
@@ -1135,15 +1156,16 @@ class AdaptiveChannelGroup:
 
     def rx_many(self, device_arrays: Sequence[jax.Array],
                 out: "np.ndarray | Sequence[np.ndarray] | None" = None,
-                priority: PriorityClass | None = None) -> list[Ticket]:
+                priority: PriorityClass | None = None, *,
+                qos: QosSpec | None = None) -> list[Ticket]:
         """Batched RX through the current generation (see :meth:`tx_many`);
         ``out`` keeps the flat-carve / per-array zero-copy contract."""
+        spec = self._resolve_qos("rx_many", qos, priority)
         grp = self._enter()
         tickets = None
         try:
             if grp.policy.management is Management.INTERRUPT:
-                tickets = grp.rx_many(device_arrays, out=out,
-                                      priority=priority)
+                tickets = grp.rx_many(device_arrays, out=out, qos=spec)
                 self.controller.note_submit_batch(len(tickets))
                 return tickets
             arrays = list(device_arrays)
@@ -1161,16 +1183,18 @@ class AdaptiveChannelGroup:
         return self.controller.prefer_sg(list(sizes))
 
     def tx_sg(self, segments: Sequence,
-              priority: PriorityClass | None = None) -> SGTicket:
+              priority: PriorityClass | None = None, *,
+              qos: QosSpec | None = None) -> SGTicket:
         """Scatter-gather TX through the current generation: one logical
         transfer over the segment list, zero staging copy. On a polling
         generation each segment IS transferred inline (done tickets)."""
+        spec = self._resolve_qos("tx_sg", qos, priority)
         grp = self._enter()
         sg = None
         try:
             if (grp.policy.management is Management.INTERRUPT
                     and hasattr(grp, "tx_sg")):
-                sg = grp.tx_sg(segments, priority=priority)
+                sg = grp.tx_sg(segments, qos=spec)
                 self.controller.note_submit_batch(len(sg))
                 return sg
             views, _sizes = _sg_segment_views(segments, "tx")
@@ -1185,15 +1209,17 @@ class AdaptiveChannelGroup:
 
     def rx_sg(self, segments: Sequence,
               out: "np.ndarray | Sequence[np.ndarray] | None" = None,
-              priority: PriorityClass | None = None) -> SGTicket:
+              priority: PriorityClass | None = None, *,
+              qos: QosSpec | None = None) -> SGTicket:
         """Scatter-gather RX (see :meth:`tx_sg`); ``out`` keeps the
         flat-carve / per-segment zero-copy contract."""
+        spec = self._resolve_qos("rx_sg", qos, priority)
         grp = self._enter()
         sg = None
         try:
             if (grp.policy.management is Management.INTERRUPT
                     and hasattr(grp, "rx_sg")):
-                sg = grp.rx_sg(segments, out=out, priority=priority)
+                sg = grp.rx_sg(segments, out=out, qos=spec)
                 self.controller.note_submit_batch(len(sg))
                 return sg
             views, _sizes = _sg_segment_views(segments, "rx")

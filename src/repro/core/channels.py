@@ -56,6 +56,7 @@ import numpy as np
 from repro.analysis.validated import assert_held, make_lock
 from repro.core.cost_model import TransferCostModel
 from repro.core.faults import RecoveryConfig
+from repro.core.qos import QosSpec, resolve_submit_qos
 from repro.core.runtime import (
     PriorityClass,
     TransferChecksumError,
@@ -287,7 +288,8 @@ class ChannelGroup:
                  runtime: TransferRuntime | None = None,
                  priority: PriorityClass = PriorityClass.LAYER,
                  recovery: RecoveryConfig | None = None,
-                 fault_state: TransferFaultState | None = None):
+                 fault_state: TransferFaultState | None = None,
+                 qos: QosSpec | None = None):
         policy = policy or TransferPolicy.kernel_level_ring()
         if policy.management is not Management.INTERRUPT:
             raise ValueError(
@@ -316,11 +318,14 @@ class ChannelGroup:
         # benchmark inject engines with synthetic timing through it. ALL
         # stripes share one runtime (None = the process default): striping
         # multiplies channels, never completion pools.
-        self.priority = priority
+        self.qos = QosSpec(priority=priority).merged(qos)
+        self.priority = self.qos.priority
         self._runtime = runtime
         factory = engine_factory or TransferEngine
+        # factories keep the narrow (policy, device, runtime, priority)
+        # signature — per-call qos= carries the rest down at submit time.
         self.engines = [factory(policy, device=d, runtime=runtime,
-                                priority=priority) for d in devices]
+                                priority=self.priority) for d in devices]
         self._closed = False
         # bounded recent history (see TransferEngine.stats); aggregate
         # totals live on the member engines' counters.
@@ -425,19 +430,32 @@ class ChannelGroup:
                    if i not in self._quarantined]
         return act or list(range(self.n_channels))  # never zero channels
 
-    def _note_runtime_fault(self, **counts) -> None:
+    def _resolve_qos(self, where: str, qos: QosSpec | None,
+                     priority: PriorityClass | None) -> QosSpec:
+        """One group call's effective submit context (see
+        :meth:`TransferEngine._resolve_qos` — same shim, group default)."""
+        spec = resolve_submit_qos(f"{type(self).__name__}.{where}",
+                                  qos, priority)
+        return self.qos.merged(spec)
+
+    def _note_runtime_fault(self, tenant: str | None = None,
+                            **counts) -> None:
         rt = self.runtime
         if rt is not None:
-            rt.note_fault(self.priority, **counts)
+            rt.note_fault(self.priority, tenant=tenant, **counts)
 
-    def _note_fault(self, ch: int, err: BaseException) -> None:
-        """Attribute one fault to channel ``ch``; quarantine it after
+    def _note_fault(self, ch: int, err: BaseException,
+                    tenant: str | None = None) -> None:
+        """Attribute one fault to channel ``ch`` (and to ``tenant`` when
+        the stripe carried one); quarantine the channel after
         ``recovery.quarantine_after`` consecutive faults (never the last
         active channel — a degraded channel beats no channel)."""
         self.fault_state.record_fault(
             ch, timeout=isinstance(err, TransferTimeoutError),
-            checksum=isinstance(err, TransferChecksumError))
+            checksum=isinstance(err, TransferChecksumError),
+            tenant=tenant)
         self._note_runtime_fault(
+            tenant=tenant,
             faults=1, timeouts=int(isinstance(err, TransferTimeoutError)))
         quarantined = False
         with self._stats_lock:
@@ -448,8 +466,8 @@ class ChannelGroup:
                 self._quarantined.add(ch)
                 quarantined = True
         if quarantined:
-            self.fault_state.record_quarantine(ch, on=True)
-            self._note_runtime_fault(quarantines=1)
+            self.fault_state.record_quarantine(ch, on=True, tenant=tenant)
+            self._note_runtime_fault(tenant=tenant, quarantines=1)
 
     def _note_success(self, ch: int) -> None:
         with self._stats_lock:
@@ -669,7 +687,7 @@ class ChannelGroup:
         return [s for s in np.array_split(flat, n) if s.size]
 
     def _run_stripe(self, issue_fn: Callable[[TransferEngine], Ticket],
-                    ch: int) -> Any:
+                    ch: int, tenant: str | None = None) -> Any:
         """Issue one stripe on channel ``ch``, wait (bounded by
         ``recovery.stripe_timeout_s``), and on a retryable fault resubmit
         on a sibling channel up to ``recovery.max_retries`` times.
@@ -686,10 +704,11 @@ class ChannelGroup:
             try:
                 result = issue_fn(self.engines[ch]).wait(wait_s)
             except TransferFaultError as e:
-                self._note_fault(ch, e)
+                self._note_fault(ch, e, tenant=tenant)
                 if attempt > 0:
-                    self.fault_state.record_retry(success=False)
-                    self._note_runtime_fault(retries=1)
+                    self.fault_state.record_retry(success=False,
+                                                  tenant=tenant)
+                    self._note_runtime_fault(tenant=tenant, retries=1)
                 sibling = self._sibling_for_retry(ch)
                 if attempt >= self.recovery.max_retries or sibling is None:
                     raise
@@ -698,8 +717,8 @@ class ChannelGroup:
                 continue
             self._note_success(ch)
             if attempt > 0:
-                self.fault_state.record_retry(success=True)
-                self._note_runtime_fault(retries=1)
+                self.fault_state.record_retry(success=True, tenant=tenant)
+                self._note_runtime_fault(tenant=tenant, retries=1)
             return result
 
     def _join(self, issue: list[Callable[[TransferEngine], Ticket]],
@@ -708,7 +727,7 @@ class ChannelGroup:
               direction: str, nbytes: int, n_items: int,
               master: threading.Event, ticket_out: list,
               callback: Callable[[list], None] | None,
-              t0: float) -> None:
+              t0: float, tenant: str | None = None) -> None:
         """Coordinator: issue every stripe's transfer from its OWN thread
         (a full ring back-pressures its submitter, so issuing serially from
         one thread would serialize the channels), wait bounded, retry
@@ -719,7 +738,8 @@ class ChannelGroup:
 
         def run_one(i: int) -> None:
             try:
-                per_channel[i] = self._run_stripe(issue[i], channels[i])
+                per_channel[i] = self._run_stripe(issue[i], channels[i],
+                                                  tenant=tenant)
             except BaseException as e:  # noqa: BLE001 — surfaced at wait()
                 errs[i] = e
 
@@ -748,14 +768,15 @@ class ChannelGroup:
         master.set()
 
     def _spawn_joiner(self, issue, channels, assemble, direction, nbytes,
-                      n_items, master, ticket_out, callback, t0) -> None:
+                      n_items, master, ticket_out, callback, t0,
+                      tenant: str | None = None) -> None:
         # a few short-lived threads per *striped* transfer (~50 us spawn vs
         # the >= 2*min_stripe_bytes transfer they issue/join); sub-stripe
         # traffic takes the delegated path and never pays this.
         t = threading.Thread(
             target=self._join,
             args=(issue, channels, assemble, direction, nbytes, n_items,
-                  master, ticket_out, callback, t0),
+                  master, ticket_out, callback, t0, tenant),
             daemon=True,
         )
         with self._stats_lock:
@@ -767,12 +788,14 @@ class ChannelGroup:
     def tx_async(self, host_array: np.ndarray,
                  callback: Callable[[list], None] | None = None,
                  layout: StagedLayout | None = None,
-                 priority: PriorityClass | None = None) -> Ticket:
+                 priority: PriorityClass | None = None, *,
+                 qos: QosSpec | None = None) -> Ticket:
         """Striped asynchronous TX: each stripe rides its own channel's ring.
 
         The combined ticket completes when every channel drained; ``layout``
         (when given) is marked busy for the whole group transfer before any
         descriptor is submitted."""
+        spec = self._resolve_qos("tx_async", qos, priority)
         arr = np.asarray(host_array)
         flat = arr.reshape(-1)
         active = self._active_indices()  # quarantined rings take no stripes
@@ -783,7 +806,7 @@ class ChannelGroup:
             return self._next_channel().tx_async(
                 flat, callback=self._delegated("tx", int(arr.nbytes), 1,
                                                callback),
-                layout=layout, priority=priority)
+                layout=layout, qos=spec)
         master = threading.Event()
         ticket_out: list = []
         t0 = time.perf_counter()
@@ -791,7 +814,7 @@ class ChannelGroup:
             layout._busy = master  # busy BEFORE submit (whole-group window)
         # engine-parameterized issue closures: the joiner issues stripe i on
         # channels[i] first and may RE-issue it on a sibling after a fault.
-        issue = [lambda eng, s=s: eng.tx_async(s, priority=priority)
+        issue = [lambda eng, s=s: eng.tx_async(s, qos=spec)
                  for s in stripes]
         channels = active[:len(stripes)]
 
@@ -804,13 +827,16 @@ class ChannelGroup:
             return out
 
         self._spawn_joiner(issue, channels, assemble, "tx", int(arr.nbytes),
-                           len(stripes), master, ticket_out, callback, t0)
+                           len(stripes), master, ticket_out, callback, t0,
+                           tenant=spec.tenant)
         return Ticket(master, ticket_out)
 
     def tx(self, host_array: np.ndarray,
-           priority: PriorityClass | None = None) -> list[jax.Array]:
+           priority: PriorityClass | None = None, *,
+           qos: QosSpec | None = None) -> list[jax.Array]:
         """Synchronous striped TX; returns the ordered device chunk list."""
-        return self.tx_async(host_array, priority=priority).wait()
+        spec = self._resolve_qos("tx", qos, priority)
+        return self.tx_async(host_array, qos=spec).wait()
 
     # -- RX -------------------------------------------------------------------
     def _rx_outs(self, arrays: list,
@@ -834,7 +860,8 @@ class ChannelGroup:
     def rx_async(self, device_arrays: Sequence[jax.Array],
                  callback: Callable[[list], None] | None = None,
                  out: "np.ndarray | Sequence[np.ndarray] | None" = None,
-                 priority: PriorityClass | None = None
+                 priority: PriorityClass | None = None, *,
+                 qos: QosSpec | None = None
                  ) -> Ticket:
         """Striped asynchronous RX: arrays spread over channels greedily by
         byte load; results come back in the original order.
@@ -843,6 +870,7 @@ class ChannelGroup:
         array for the whole payload. Channels write their stripes straight
         into it; the ticket yields the caller's buffers (or the flat
         array's byte views), never fresh allocations."""
+        spec = self._resolve_qos("rx_async", qos, priority)
         arrays = list(device_arrays)
         outs = self._rx_outs(arrays, out)
         nbytes = sum(int(a.size) * a.dtype.itemsize for a in arrays)
@@ -850,7 +878,7 @@ class ChannelGroup:
             return self._next_channel().rx_async(
                 arrays, callback=self._delegated("rx", nbytes, len(arrays),
                                                  callback),
-                out=outs if out is not None else None, priority=priority)
+                out=outs if out is not None else None, qos=spec)
         # greedy least-loaded assignment over the ACTIVE channels
         # (bytes-balanced striping; quarantined rings take no stripes)
         active = self._active_indices()
@@ -867,7 +895,7 @@ class ChannelGroup:
         issue = [lambda eng, idxs=idxs: eng.rx_async(
             [arrays[i] for i in idxs],
             out=([outs[i] for i in idxs] if out is not None else None),
-            priority=priority)
+            qos=spec)
             for _c, idxs in used]
         channels = [c for c, _idxs in used]
 
@@ -879,20 +907,24 @@ class ChannelGroup:
             return results
 
         self._spawn_joiner(issue, channels, assemble, "rx", nbytes,
-                           len(arrays), master, ticket_out, callback, t0)
+                           len(arrays), master, ticket_out, callback, t0,
+                           tenant=spec.tenant)
         return Ticket(master, ticket_out)
 
     def rx(self, device_arrays: Sequence[jax.Array],
            out: "np.ndarray | Sequence[np.ndarray] | None" = None,
-           priority: PriorityClass | None = None
+           priority: PriorityClass | None = None, *,
+           qos: QosSpec | None = None
            ) -> list[np.ndarray]:
         """Synchronous striped RX; host arrays in the original order. With
         ``out=`` the results land in the caller's preallocated buffers."""
-        return self.rx_async(device_arrays, out=out, priority=priority).wait()
+        spec = self._resolve_qos("rx", qos, priority)
+        return self.rx_async(device_arrays, out=out, qos=spec).wait()
 
     # -- batched descriptor submission ----------------------------------------
     def tx_many(self, host_arrays: Sequence[np.ndarray],
-                priority: PriorityClass | None = None) -> list[Ticket]:
+                priority: PriorityClass | None = None, *,
+                qos: QosSpec | None = None) -> list[Ticket]:
         """Batched TX through the group: the K logical descriptors are
         round-robin partitioned over the ACTIVE channels and each channel's
         share goes down as ONE ring transaction (``TransferEngine.
@@ -901,34 +933,37 @@ class ChannelGroup:
         surfaces on its own ticket (the batch amortization contract is
         exactly-once submission); byte accounting lands on the per-channel
         engines."""
+        spec = self._resolve_qos("tx_many", qos, priority)
         arrays = [np.asarray(a) for a in host_arrays]
         active = self._active_indices()
         if len(arrays) <= 1 or len(active) <= 1:
-            return self._next_channel().tx_many(arrays, priority=priority)
+            return self._next_channel().tx_many(arrays, qos=spec)
         tickets: list[Ticket | None] = [None] * len(arrays)
         for c, ch in enumerate(active):
             idxs = list(range(c, len(arrays), len(active)))
             if not idxs:
                 continue
             sub = self.engines[ch].tx_many([arrays[i] for i in idxs],
-                                           priority=priority)
+                                           qos=spec)
             for i, t in zip(idxs, sub):
                 tickets[i] = t
         return tickets  # type: ignore[return-value]
 
     def rx_many(self, device_arrays: Sequence[jax.Array],
                 out: "np.ndarray | Sequence[np.ndarray] | None" = None,
-                priority: PriorityClass | None = None) -> list[Ticket]:
+                priority: PriorityClass | None = None, *,
+                qos: QosSpec | None = None) -> list[Ticket]:
         """Batched RX through the group, mirroring :meth:`tx_many`.
         ``out`` accepts per-array buffers or ONE flat array carved into
         per-descriptor views (zero-copy), exactly like :meth:`rx_async`."""
+        spec = self._resolve_qos("rx_many", qos, priority)
         arrays = list(device_arrays)
         outs = self._rx_outs(arrays, out)
         active = self._active_indices()
         if len(arrays) <= 1 or len(active) <= 1:
             return self._next_channel().rx_many(
                 arrays, out=outs if out is not None else None,
-                priority=priority)
+                qos=spec)
         tickets: list[Ticket | None] = [None] * len(arrays)
         for c, ch in enumerate(active):
             idxs = list(range(c, len(arrays), len(active)))
@@ -937,7 +972,7 @@ class ChannelGroup:
             sub = self.engines[ch].rx_many(
                 [arrays[i] for i in idxs],
                 out=([outs[i] for i in idxs] if out is not None else None),
-                priority=priority)
+                qos=spec)
             for i, t in zip(idxs, sub):
                 tickets[i] = t
         return tickets  # type: ignore[return-value]
@@ -967,13 +1002,15 @@ class ChannelGroup:
         return [(active[c], idxs) for c, idxs in enumerate(assign) if idxs]
 
     def tx_sg(self, segments: Sequence,
-              priority: PriorityClass | None = None) -> SGTicket:
+              priority: PriorityClass | None = None, *,
+              qos: QosSpec | None = None) -> SGTicket:
         """Scatter-gather TX through the group: the segment list is spread
         over the ACTIVE channels by byte load and each channel's share goes
         down as ONE ring slot (its engine's ``tx_sg``), zero staging copy.
         Results come back in the original segment order; a faulted share
         retries whole on a sibling channel (the striped-recovery contract),
         so striping and quarantine compose with the SG form."""
+        spec = self._resolve_qos("tx_sg", qos, priority)
         views, sizes = _sg_segment_views(segments, "tx")
         active = self._active_indices()
         total = sum(sizes)
@@ -981,13 +1018,13 @@ class ChannelGroup:
                 or total < 2 * self.min_stripe_bytes):
             # sub-stripe or single-channel: delegate the whole chain —
             # round-robin keeps concurrent small SG submits spread.
-            return self._next_channel().tx_sg(views, priority=priority)
+            return self._next_channel().tx_sg(views, qos=spec)
         used = self._sg_assign(sizes, active)
         master = threading.Event()
         ticket_out: list = []
         t0 = time.perf_counter()
         issue = [lambda eng, idxs=idxs: eng.tx_sg(
-            [views[i] for i in idxs], priority=priority)
+            [views[i] for i in idxs], qos=spec)
             for _c, idxs in used]
         channels = [c for c, _idxs in used]
 
@@ -999,16 +1036,19 @@ class ChannelGroup:
             return results
 
         self._spawn_joiner(issue, channels, assemble, "tx", total,
-                           len(views), master, ticket_out, None, t0)
+                           len(views), master, ticket_out, None, t0,
+                           tenant=spec.tenant)
         return SGTicket([_IndexTicket(master, ticket_out, i)
                          for i in range(len(views))])
 
     def rx_sg(self, segments: Sequence,
               out: "np.ndarray | Sequence[np.ndarray] | None" = None,
-              priority: PriorityClass | None = None) -> SGTicket:
+              priority: PriorityClass | None = None, *,
+              qos: QosSpec | None = None) -> SGTicket:
         """Scatter-gather RX through the group (see :meth:`tx_sg`); ``out``
         accepts per-segment buffers or ONE flat array carved into
         per-segment views (zero-copy), exactly like :meth:`rx_async`."""
+        spec = self._resolve_qos("rx_sg", qos, priority)
         views, sizes = _sg_segment_views(segments, "rx")
         outs = self._rx_outs(views, out)
         active = self._active_indices()
@@ -1017,7 +1057,7 @@ class ChannelGroup:
                 or total < 2 * self.min_stripe_bytes):
             return self._next_channel().rx_sg(
                 views, out=outs if out is not None else None,
-                priority=priority)
+                qos=spec)
         used = self._sg_assign(sizes, active)
         master = threading.Event()
         ticket_out: list = []
@@ -1025,7 +1065,7 @@ class ChannelGroup:
         issue = [lambda eng, idxs=idxs: eng.rx_sg(
             [views[i] for i in idxs],
             out=([outs[i] for i in idxs] if out is not None else None),
-            priority=priority)
+            qos=spec)
             for _c, idxs in used]
         channels = [c for c, _idxs in used]
 
@@ -1037,7 +1077,8 @@ class ChannelGroup:
             return results
 
         self._spawn_joiner(issue, channels, assemble, "rx", total,
-                           len(views), master, ticket_out, None, t0)
+                           len(views), master, ticket_out, None, t0,
+                           tenant=spec.tenant)
         return SGTicket([_IndexTicket(master, ticket_out, i)
                          for i in range(len(views))])
 

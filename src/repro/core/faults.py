@@ -259,50 +259,59 @@ class FaultInjector:
                         f"transient submit error (channel "
                         f"{self._fault_channel}, {direction})")
 
-            def tx(self, host_array, priority=None):
+            # the injection seam passes ``priority``/``qos`` through
+            # untouched: resolution (and any deprecation warning) stays in
+            # the wrapped engine, attributed to the original caller.
+            def tx(self, host_array, priority=None, *, qos=None):
                 self._maybe_submit_error("tx")
-                return super().tx(host_array, priority=priority)
+                return super().tx(host_array, priority=priority, qos=qos)
 
-            def rx(self, device_arrays, out=None, priority=None):
+            def rx(self, device_arrays, out=None, priority=None, *,
+                   qos=None):
                 self._maybe_submit_error("rx")
-                return super().rx(device_arrays, out=out, priority=priority)
+                return super().rx(device_arrays, out=out,
+                                  priority=priority, qos=qos)
 
             def tx_async(self, host_array, callback=None, layout=None,
-                         priority=None):
+                         priority=None, *, qos=None):
                 self._maybe_submit_error("tx")
                 return super().tx_async(host_array, callback=callback,
-                                        layout=layout, priority=priority)
+                                        layout=layout, priority=priority,
+                                        qos=qos)
 
             def rx_async(self, device_arrays, callback=None, out=None,
-                         priority=None):
+                         priority=None, *, qos=None):
                 self._maybe_submit_error("rx")
                 return super().rx_async(device_arrays, callback=callback,
-                                        out=out, priority=priority)
+                                        out=out, priority=priority, qos=qos)
 
             # batched submission: a submit_error fails the WHOLE group
             # before any slot is taken (uniform with tx/rx_async), while
             # per-descriptor ``_one`` faults fail only the affected ticket
             # — overriding ``_one`` already forces the engine off the
             # fused fast path, so injection seams stay per-descriptor.
-            def tx_many(self, host_arrays, priority=None):
+            def tx_many(self, host_arrays, priority=None, *, qos=None):
                 self._maybe_submit_error("tx")
-                return super().tx_many(host_arrays, priority=priority)
+                return super().tx_many(host_arrays, priority=priority,
+                                       qos=qos)
 
-            def rx_many(self, device_arrays, out=None, priority=None):
+            def rx_many(self, device_arrays, out=None, priority=None, *,
+                        qos=None):
                 self._maybe_submit_error("rx")
                 return super().rx_many(device_arrays, out=out,
-                                       priority=priority)
+                                       priority=priority, qos=qos)
 
             # scatter-gather rides _submit_many; overriding _one above
             # already forces its per-segment loop, so payload-stage faults
             # land on individual segment tickets (mid-segment isolation).
-            def tx_sg(self, segments, priority=None):
+            def tx_sg(self, segments, priority=None, *, qos=None):
                 self._maybe_submit_error("tx")
-                return super().tx_sg(segments, priority=priority)
+                return super().tx_sg(segments, priority=priority, qos=qos)
 
-            def rx_sg(self, segments, out=None, priority=None):
+            def rx_sg(self, segments, out=None, priority=None, *, qos=None):
                 self._maybe_submit_error("rx")
-                return super().rx_sg(segments, out=out, priority=priority)
+                return super().rx_sg(segments, out=out, priority=priority,
+                                     qos=qos)
 
         def factory(policy, **kw):
             eng = _FaultEngine(policy, **kw)

@@ -104,6 +104,38 @@ point of the ZynqNet-style per-class accounting. Workers park on a
 timed wait sized to the earliest bucket refill, so a cap never strands
 queued work.
 
+Tier 2: per-tenant flows inside each class
+------------------------------------------
+The class tier is blind *within* a class: one flooding submitter
+collapses p99 for every other user of the same PriorityClass. So each
+class queue (:class:`_ClassFlowQueue`) replays the same arbitration one
+level down, over per-tenant *flows* (Anachron's two-level DMA
+arbitration, generalized from round-robin to WFQ):
+
+- every submission carries a tenant id + weight via the
+  :class:`~repro.core.qos.QosSpec` submit context (untagged traffic
+  shares the ``DEFAULT_TENANT`` flow, which reproduces pre-tenancy
+  scheduling exactly);
+- a class nominates ONE candidate head per pick: parked resumes first
+  (charge-once, they hold in-service state), then EDF over overdue
+  tenant heads, then the tenant flow with the smallest byte-weighted
+  virtual time (idle flows re-enter at the busy floor, same rule as the
+  class tier);
+- per-tenant token buckets (:meth:`TransferRuntime.set_tenant_cap`, or
+  ``QosSpec.cap_bytes_per_s`` per submission) form a cap *tree*: a
+  dispatch must clear BOTH its tenant bucket and the class bucket, so
+  the class cap bounds the sum of its tenants' effective rates and
+  uncapped tenants borrow whatever headroom the class bucket leaves;
+- ``class_summary()`` grows a per-tenant ledger (``row["tenants"]``)
+  and a windowed ``deadline_miss_rate``; together with
+  :meth:`TransferRuntime.tenant_depth` these feed the serving layer's
+  :class:`~repro.core.qos.AdmissionController`, which sheds load
+  host-side before the accelerator queue backs up.
+
+``TransferRuntime(tenant_fair=False)`` collapses tier 2 (every
+descriptor lands in one flow per class) — the single-tier baseline the
+tenant-isolation benchmark measures against.
+
 Completion coalescing (per-class completion vectors)
 ----------------------------------------------------
 The paper's floor on small packets is *management* overhead, not bus
@@ -181,8 +213,10 @@ class PriorityClass(enum.Enum):
 
 
 @dataclass(frozen=True)
-class QosSpec:
-    """Arbitration parameters of one priority class.
+class ClassQos:
+    """Arbitration parameters of one priority class (renamed from the
+    pre-PR-10 ``QosSpec`` — that name now belongs to the per-submission
+    context object in :mod:`repro.core.qos`).
 
     ``weight``: share of dispatch bandwidth under contention (virtual time
     advances by nbytes/weight). ``deadline_s``: target queue wait; a
@@ -192,12 +226,21 @@ class QosSpec:
     deadline_s: float
 
 
-DEFAULT_QOS: dict[PriorityClass, QosSpec] = {
-    PriorityClass.SENSOR: QosSpec(weight=4.0, deadline_s=5e-3),
-    PriorityClass.TOKEN: QosSpec(weight=8.0, deadline_s=1e-3),
-    PriorityClass.LAYER: QosSpec(weight=2.0, deadline_s=20e-3),
-    PriorityClass.BULK: QosSpec(weight=1.0, deadline_s=100e-3),
+DEFAULT_QOS: dict[PriorityClass, ClassQos] = {
+    PriorityClass.SENSOR: ClassQos(weight=4.0, deadline_s=5e-3),
+    PriorityClass.TOKEN: ClassQos(weight=8.0, deadline_s=1e-3),
+    PriorityClass.LAYER: ClassQos(weight=2.0, deadline_s=20e-3),
+    PriorityClass.BULK: ClassQos(weight=1.0, deadline_s=100e-3),
 }
+
+# The tier-2 flow untagged submissions land in: one shared flow arbitrates
+# exactly like the pre-tenancy runtime, so single-tenant processes see
+# byte-identical scheduling. Re-exported by ``repro.core.qos``.
+DEFAULT_TENANT = "default"
+
+# Per-tenant dispatch-latency window. Deliberately smaller than the class
+# window (_LAT_WINDOW): a 1000-tenant serving process keeps 1000 of these.
+_TENANT_LAT_WINDOW = 256
 
 @dataclass(frozen=True)
 class CoalescePolicy:
@@ -266,6 +309,48 @@ class TransferChecksumError(TransferFaultError):
 
 
 @dataclass
+class TenantStats:
+    """Per-tenant (tier-2 flow) accounting inside one priority class.
+
+    Counts/bytes are exact lifetime totals; the dispatch-latency window is
+    deliberately small (``_TENANT_LAT_WINDOW``) so a 1000-tenant serving
+    process stays cheap. Fault columns mirror the class-level ledger so a
+    misbehaving tenant's retries are attributable (PR 10 satellite)."""
+
+    submitted: int = 0
+    dispatched: int = 0
+    completed: int = 0
+    cancelled: int = 0
+    bytes_total: int = 0
+    cap_deferrals: int = 0
+    deadline_misses: int = 0
+    timeouts: int = 0
+    faults: int = 0
+    retries: int = 0
+    quarantines: int = 0
+    dispatch_lat_s: "collections.deque[float]" = field(
+        default_factory=lambda: collections.deque(
+            maxlen=_TENANT_LAT_WINDOW))
+
+    def summary(self) -> dict[str, float]:
+        return {
+            "submitted": self.submitted,
+            "dispatched": self.dispatched,
+            "completed": self.completed,
+            "cancelled": self.cancelled,
+            "bytes_total": self.bytes_total,
+            "cap_deferrals": self.cap_deferrals,
+            "deadline_misses": self.deadline_misses,
+            "timeouts": self.timeouts,
+            "faults": self.faults,
+            "retries": self.retries,
+            "quarantines": self.quarantines,
+            "dispatch_p50_ms": _pct(self.dispatch_lat_s, 0.5) * 1e3,
+            "dispatch_p99_ms": _pct(self.dispatch_lat_s, 0.99) * 1e3,
+        }
+
+
+@dataclass
 class ClassStats:
     """Per-class accounting: counts/bytes exact, latencies windowed."""
 
@@ -295,6 +380,12 @@ class ClassStats:
     faults: int = 0
     retries: int = 0
     quarantines: int = 0
+    # dispatches that happened past the descriptor's EDF deadline (the
+    # admission controller's class-pressure signal; windowed rate lives
+    # in TransferRuntime.deadline_miss_rate).
+    deadline_misses: int = 0
+    # tier-2 ledger: per-tenant flow accounting inside this class.
+    tenants: dict[str, TenantStats] = field(default_factory=dict)
     # completion coalescing ledger: delivery passes actually taken, how
     # many per-completion wakeups the vector saved, and the windowed
     # batch-size / added-latency distributions. An immediate (uncoalesced)
@@ -317,6 +408,13 @@ class ClassStats:
     dispatch_recent: "collections.deque[tuple[float, float]]" = field(
         default_factory=lambda: collections.deque(maxlen=_LAT_WINDOW))
 
+    def tenant(self, tenant: str) -> TenantStats:
+        """Get-or-create the tier-2 ledger row for one flow."""
+        ts = self.tenants.get(tenant)
+        if ts is None:
+            ts = self.tenants[tenant] = TenantStats()
+        return ts
+
     def summary(self) -> dict[str, float]:
         return {
             "submitted": self.submitted,
@@ -324,6 +422,7 @@ class ClassStats:
             "cancelled": self.cancelled,
             "bytes_total": self.bytes_total,
             "deadline_promotions": self.deadline_promotions,
+            "deadline_misses": self.deadline_misses,
             "preemptions": self.preemptions,
             "cap_deferrals": self.cap_deferrals,
             "cap_deadline_stretches": self.cap_deadline_stretches,
@@ -432,18 +531,228 @@ class _TokenBucket:
         return -self.tokens / self.rate
 
 
+class _TenantFlow:
+    """Tier-2 flow: one tenant's FIFO inside one class queue, with its own
+    WFQ virtual time, weight and (optional) token bucket — the leaf of the
+    cap tree. Guarded by the runtime lock like the queue that owns it."""
+
+    __slots__ = ("q", "vtime", "weight", "bucket", "backlog_bytes", "stats")
+
+    def __init__(self, stats: TenantStats):
+        self.q: "collections.deque[_Descriptor]" = collections.deque()
+        self.vtime = 0.0
+        self.weight = 1.0
+        self.bucket: _TokenBucket | None = None
+        self.backlog_bytes = 0
+        self.stats = stats
+
+
+class _ClassFlowQueue:
+    """The tier-2 arbiter of ONE priority class: per-tenant FIFO flows
+    under byte-weighted fair queuing, plus a ``parked`` deque where
+    preempted (mid-chunk) descriptors resume with absolute precedence —
+    the generalization of the plain per-class deque this replaces.
+
+    Selection inside the class (:meth:`head`): parked resumes first, then
+    EDF over the overdue tenant heads, then the minimum-vtime tenant —
+    the same three-stage shape the runtime applies ACROSS classes, one
+    tier down. A tenant whose token bucket is empty is not eligible (its
+    head defers, counted per tenant); tenants without a bucket borrow
+    whatever headroom the class bucket leaves — the cap tree's borrowing
+    rule falls out of checking both buckets independently.
+
+    ``tenant_fair=False`` routes every descriptor through one shared flow
+    (strict class FIFO — the single-tier baseline the tenant-isolation
+    benchmark compares against). NOT thread-safe on its own: every method
+    runs under ``TransferRuntime._cond`` exactly like the deque it
+    replaced."""
+
+    __slots__ = ("stats", "flows", "parked", "tenant_fair", "_len",
+                 "queued_bytes")
+
+    def __init__(self, stats: ClassStats, tenant_fair: bool = True):
+        self.stats = stats
+        self.flows: dict[str, _TenantFlow] = {}
+        self.parked: "collections.deque[_Descriptor]" = collections.deque()
+        self.tenant_fair = tenant_fair
+        self._len = 0
+        self.queued_bytes = 0
+
+    def __bool__(self) -> bool:
+        return self._len > 0
+
+    def __len__(self) -> int:
+        return self._len
+
+    def _key(self, d: "_Descriptor") -> str:
+        return d.tenant if self.tenant_fair else DEFAULT_TENANT
+
+    def flow(self, tenant: str) -> _TenantFlow:
+        f = self.flows.get(tenant)
+        if f is None:
+            f = self.flows[tenant] = _TenantFlow(self.stats.tenant(tenant))
+        return f
+
+    def append(self, d: "_Descriptor") -> None:
+        """Enqueue a new arrival on its tenant's flow. An idle flow
+        re-enters at the busy flows' vtime floor (same no-burst rule the
+        classes follow one tier up)."""
+        f = self.flow(self._key(d))
+        if not f.q:
+            busy = [ff.vtime for ff in self.flows.values() if ff.q]
+            if busy:
+                f.vtime = max(f.vtime, min(busy))
+        if self.tenant_fair:
+            f.weight = max(d.weight, 1e-9)  # last submission wins
+        f.q.append(d)
+        f.backlog_bytes += d.nbytes
+        self._len += 1
+        self.queued_bytes += d.nbytes
+
+    def appendleft(self, d: "_Descriptor") -> None:
+        """Park a preempted resume at the class front (absolute precedence
+        over every flow: it holds a ring slot and mid-chunk state, and its
+        bytes were already charged at first dispatch)."""
+        self.parked.appendleft(d)
+        self._len += 1
+        self.queued_bytes += d.nbytes
+
+    def head(self, now: float) -> "tuple[_Descriptor | None, float | None]":
+        """The class's next dispatchable descriptor under tenant caps,
+        plus the earliest tenant-bucket refill delay when one or more
+        flows deferred this pass (None, hint) means every queued flow is
+        tenant-capped."""
+        if self.parked:
+            return self.parked[0], None
+        hint: float | None = None
+        best_overdue: "_Descriptor | None" = None
+        best_d: "_Descriptor | None" = None
+        best_vt = float("inf")
+        for f in self.flows.values():
+            if not f.q:
+                continue
+            d = f.q[0]
+            if (not d.started and f.bucket is not None
+                    and not f.bucket.ready(now)):
+                # tenant bucket empty: this flow defers (cap tree leaf).
+                # Parked resumes never reach here (they bypass via the
+                # parked deque) and started heads are charge-once exempt.
+                f.stats.cap_deferrals += 1
+                wait = f.bucket.delay_s(now)
+                if hint is None or wait < hint:
+                    hint = wait
+                continue
+            if d.deadline <= now and (best_overdue is None
+                                      or d.deadline < best_overdue.deadline):
+                best_overdue = d
+            if f.vtime < best_vt:
+                best_vt = f.vtime
+                best_d = d
+        return (best_overdue if best_overdue is not None else best_d), hint
+
+    def oldest(self) -> "_Descriptor | None":
+        """Oldest submission across flows (the FIFO-baseline pick; flows
+        are FIFO so per-flow heads suffice)."""
+        best = self.parked[0] if self.parked else None
+        for f in self.flows.values():
+            if f.q and (best is None or f.q[0].t_submit < best.t_submit):
+                best = f.q[0]
+        return best
+
+    def pop(self, d: "_Descriptor") -> None:
+        """Remove ``d`` — which must be a current head (parked or flow)."""
+        if self.parked and self.parked[0] is d:
+            self.parked.popleft()
+        else:
+            f = self.flows[self._key(d)]
+            popped = f.q.popleft()
+            if popped is not d:  # pragma: no cover — selection bug guard
+                f.q.appendleft(popped)
+                raise RuntimeError("flow-queue pop of a non-head descriptor")
+            f.backlog_bytes -= d.nbytes
+        self._len -= 1
+        self.queued_bytes -= d.nbytes
+
+    def charge_dispatch(self, d: "_Descriptor") -> None:
+        """First-dispatch accounting at the tenant tier: advance the
+        flow's virtual time by nbytes/weight and charge its token bucket
+        (the class-level twin runs in ``_pick_locked``)."""
+        if not self.tenant_fair:
+            return
+        f = self.flows.get(self._key(d))
+        if f is None:
+            return
+        f.vtime += max(d.nbytes, 1024) / f.weight
+        if f.bucket is not None:
+            f.bucket.charge(d.nbytes)
+
+    def drain_if(self, pred: "Callable[[_Descriptor], bool]"
+                 ) -> "list[_Descriptor]":
+        """Remove and return every queued descriptor matching ``pred``
+        (timeout scans, handle cancellation) preserving FIFO order of the
+        survivors."""
+        out: "list[_Descriptor]" = []
+        keep: "collections.deque[_Descriptor]" = collections.deque()
+        while self.parked:
+            d = self.parked.popleft()
+            (out if pred(d) else keep).append(d)
+        self.parked.extend(keep)
+        for f in self.flows.values():
+            if not f.q:
+                continue
+            kept: "collections.deque[_Descriptor]" = collections.deque()
+            while f.q:
+                d = f.q.popleft()
+                if pred(d):
+                    out.append(d)
+                    f.backlog_bytes -= d.nbytes
+                else:
+                    kept.append(d)
+            f.q.extend(kept)
+        for d in out:
+            self._len -= 1
+            self.queued_bytes -= d.nbytes
+        return out
+
+    def depth(self, tenant: str) -> int:
+        """Queued-but-undispatched descriptors of one tenant (parked
+        resumes already dispatched once and do not count)."""
+        f = self.flows.get(tenant)
+        return len(f.q) if f is not None else 0
+
+    def tenant_backlog(self, tenant: str) -> int:
+        f = self.flows.get(tenant)
+        return f.backlog_bytes if f is not None else 0
+
+    def set_cap(self, tenant: str, bytes_per_s: float | None,
+                burst_s: float) -> None:
+        f = self.flow(tenant)
+        if bytes_per_s is None or bytes_per_s <= 0:
+            f.bucket = None
+        elif f.bucket is None or f.bucket.rate != float(bytes_per_s):
+            # unchanged rate keeps the live bucket: QosSpec-carried caps
+            # arrive on EVERY submission and must not refill the burst.
+            f.bucket = _TokenBucket(bytes_per_s, burst_s)
+
+    def cap(self, tenant: str) -> float | None:
+        f = self.flows.get(tenant)
+        return f.bucket.rate if f is not None and f.bucket is not None \
+            else None
+
+
 class _Descriptor:
     """One staged completion: the unit the runtime arbitrates."""
 
     __slots__ = ("fn", "done", "out", "cls", "nbytes", "handle",
                  "t_submit", "deadline", "on_cancel",
                  "started", "service_acc", "t_parked", "preemptions",
-                 "units")
+                 "units", "tenant", "weight")
 
     def __init__(self, fn: Callable[[], Any], cls: PriorityClass,
                  nbytes: int, handle: "RuntimeHandle", deadline_s: float,
                  on_cancel: Callable[[BaseException], None] | None = None,
-                 units: int = 1):
+                 units: int = 1, tenant: str = DEFAULT_TENANT,
+                 weight: float = 1.0):
         self.fn = fn
         self.done = threading.Event()
         self.out: list = []
@@ -453,6 +762,9 @@ class _Descriptor:
         # rx_many group rides one runtime descriptor): dispatch latency is
         # amortized over units when fed to the adaptive crossover.
         self.units = max(int(units), 1)
+        # tier-2 flow tag + WFQ weight (QosSpec-carried; see repro.core.qos)
+        self.tenant = tenant
+        self.weight = max(float(weight), 1e-9)
         self.handle = handle
         self.t_submit = time.monotonic()
         self.deadline = self.t_submit + deadline_s
@@ -499,9 +811,15 @@ class RuntimeHandle:
     def submit(self, fn: Callable[[], Any], nbytes: int = 0,
                priority: "PriorityClass | None" = None,
                on_cancel: Callable[[BaseException], None] | None = None,
-               units: int = 1) -> tuple[threading.Event, list]:
-        return self.runtime._submit(self, fn, priority or self.cls, nbytes,
-                                    on_cancel, units)
+               units: int = 1, *,
+               qos: Any = None) -> tuple[threading.Event, list]:
+        # ``qos`` is duck-typed (any object with the QosSpec fields) so the
+        # runtime never imports repro.core.qos — qos.py imports us.
+        cls = priority
+        if cls is None and qos is not None:
+            cls = getattr(qos, "priority", None)
+        return self.runtime._submit(self, fn, cls or self.cls, nbytes,
+                                    on_cancel, units, qos=qos)
 
     def close(self, timeout: float = 5.0) -> None:
         self.runtime._close_handle(self, timeout)
@@ -522,8 +840,9 @@ class TransferRuntime:
     not issue transfers."""
 
     def __init__(self, workers: int | None = None, *,
-                 qos: dict[PriorityClass, QosSpec] | None = None,
+                 qos: dict[PriorityClass, ClassQos] | None = None,
                  fair: bool = True,
+                 tenant_fair: bool = True,
                  preempt: bool = True,
                  reserve_latency_workers: int = 1,
                  latency_recency_s: float = _LATENCY_RECENCY_S,
@@ -540,6 +859,10 @@ class TransferRuntime:
         if qos:
             self.qos.update(qos)
         self.fair = fair
+        # tier-2 arbitration: per-tenant WFQ inside each class. Off =>
+        # strict FIFO within a class (the single-tier PR-9 baseline, kept
+        # for the tenant-isolation benchmark).
+        self.tenant_fair = tenant_fair
         # honor PreemptibleWork yield points (park bulk work for latency
         # arrivals). Off => segments still run correctly, just back to back
         # — the PR-4 one-chunk-bound baseline, kept for the QoS benchmark.
@@ -554,9 +877,19 @@ class TransferRuntime:
         # pass that found only cap-deferred work (None = no cap deferral):
         # workers size their wait on it so capped work is never stranded.
         self._cap_wait_hint: float | None = None            # guarded-by: _cond
-        self._queues: dict[PriorityClass, "collections.deque[_Descriptor]"] \
-            = {cls: collections.deque()                     # guarded-by: _cond
-               for cls in PriorityClass}
+        self.stats: dict[PriorityClass, ClassStats] = {
+            cls: ClassStats() for cls in PriorityClass}     # guarded-by: _cond
+        # tier-2 flow queues: per-tenant WFQ + token buckets inside each
+        # class (the plain per-class deques of PR <= 9, generalized).
+        self._queues: dict[PriorityClass, _ClassFlowQueue] \
+            = {cls: _ClassFlowQueue(self.stats[cls], tenant_fair)
+               for cls in PriorityClass}                    # guarded-by: _cond
+        # recent (stamp, missed) dispatch outcomes per class — the
+        # admission controller's deadline-miss-rate signal.
+        self._miss_window: dict[PriorityClass,
+                                "collections.deque[tuple[float, int]]"] = {
+            cls: collections.deque(maxlen=_LAT_WINDOW)
+            for cls in PriorityClass}                       # guarded-by: _cond
         # completion coalescing: per-class vector of finished-but-not-yet-
         # delivered descriptors [(descriptor, t_done)], the wall deadline
         # of the oldest vector entry, the EWMA inter-completion gap (the
@@ -612,8 +945,6 @@ class TransferRuntime:
         # _BG_IDLE_WAIT_S cadence; the rest wait at idle_timeout_s and may
         # idle-exit (no N-worker busy spin)
         self._bg_spinner: int | None = None                 # guarded-by: _cond
-        self.stats: dict[PriorityClass, ClassStats] = {
-            cls: ClassStats() for cls in PriorityClass}     # guarded-by: _cond
         self.dispatches = 0                                 # guarded-by: _cond
         self.background_slices_run = 0                      # guarded-by: _cond
         self.background_errors = 0                          # guarded-by: _cond
@@ -667,6 +998,57 @@ class TransferRuntime:
             b = self._caps.get(cls)
             return b.rate if b is not None else None
 
+    # -- per-tenant caps + admission signals (the cap tree's leaves) ----------
+    def set_tenant_cap(self, cls: PriorityClass, tenant: str,
+                       bytes_per_s: float | None, *,
+                       burst_s: float | None = None) -> None:
+        """Bytes/s ceiling on ONE tenant flow inside ``cls`` — a leaf of
+        the cap tree. A dispatch must clear BOTH its tenant bucket and the
+        class bucket, so the class cap bounds the sum of its tenants'
+        effective rates whatever their leaf caps claim; tenants without a
+        leaf cap borrow whatever headroom the class bucket leaves.
+        ``None`` / ``<= 0`` clears the leaf. Only enforced under
+        ``tenant_fair=True`` (the single-tier baseline has no tier 2)."""
+        with self._cond:
+            self._queues[cls].set_cap(
+                tenant, bytes_per_s,
+                self.cap_burst_s if burst_s is None else float(burst_s))
+            self._cond.notify_all()
+
+    def tenant_cap(self, cls: PriorityClass, tenant: str) -> float | None:
+        """The enforced leaf ceiling for ``tenant`` in ``cls`` (None =
+        uncapped: bounded only by the class bucket)."""
+        with self._cond:
+            return self._queues[cls].cap(tenant)
+
+    def tenant_depth(self, cls: PriorityClass, tenant: str) -> int:
+        """Queued-but-undispatched descriptors of one tenant — the
+        admission controller's per-tenant pressure signal."""
+        with self._cond:
+            return self._queues[cls].depth(tenant)
+
+    def tenant_queued_bytes(self, cls: PriorityClass, tenant: str) -> int:
+        with self._cond:
+            return self._queues[cls].tenant_backlog(tenant)
+
+    def deadline_miss_rate(self, cls: PriorityClass,
+                           ttl_s: float = 5.0) -> float:
+        """Fraction of the class's recent dispatch outcomes (last
+        ``ttl_s`` seconds) that ran past their EDF deadline — timeout
+        cancellations count as misses. 0.0 with no recent traffic: an
+        idle runtime must admit freely."""
+        with self._cond:
+            return self._miss_rate_locked(cls, ttl_s)
+
+    def _miss_rate_locked(self, cls: PriorityClass,  # requires-lock: _cond
+                          ttl_s: float = 5.0) -> float:
+        assert_held(self._cond, "_miss_rate_locked")
+        cutoff = time.monotonic() - ttl_s
+        recent = [m for t, m in self._miss_window[cls] if t >= cutoff]
+        if not recent:
+            return 0.0
+        return sum(recent) / len(recent)
+
     # -- completion coalescing -----------------------------------------------
     def set_coalesce(self, cls: PriorityClass,
                      policy: CoalescePolicy | None) -> None:
@@ -718,10 +1100,22 @@ class TransferRuntime:
     def _submit(self, handle: RuntimeHandle, fn: Callable[[], Any],
                 cls: PriorityClass, nbytes: int,
                 on_cancel: Callable[[BaseException], None] | None = None,
-                units: int = 1) -> tuple[threading.Event, list]:
+                units: int = 1, qos: Any = None) -> tuple[threading.Event, list]:
         spec = self.qos[cls]
-        d = _Descriptor(fn, cls, nbytes, handle, spec.deadline_s, on_cancel,
-                        units)
+        # QosSpec-carried per-submission context (duck-typed; None fields
+        # fall back to class defaults — see repro.core.qos).
+        tenant = DEFAULT_TENANT
+        weight = 1.0
+        deadline_s = spec.deadline_s
+        t_cap = t_burst = None
+        if qos is not None:
+            tenant = getattr(qos, "tenant", None) or DEFAULT_TENANT
+            weight = getattr(qos, "weight", None) or 1.0
+            deadline_s = getattr(qos, "deadline_s", None) or spec.deadline_s
+            t_cap = getattr(qos, "cap_bytes_per_s", None)
+            t_burst = getattr(qos, "burst_s", None)
+        d = _Descriptor(fn, cls, nbytes, handle, deadline_s, on_cancel,
+                        units, tenant=tenant, weight=weight)
         with self._cond:
             if self._closed:
                 raise RuntimeError("submit() on a closed TransferRuntime")
@@ -729,6 +1123,13 @@ class TransferRuntime:
                 raise RuntimeError(
                     f"submit() on a closed runtime handle ({handle.owner_repr})")
             q = self._queues[cls]
+            if t_cap is not None:
+                # QosSpec-carried leaf cap: installs (or updates) the
+                # tenant's bucket; an unchanged rate keeps the live bucket
+                # so per-submission specs never refill the burst.
+                q.set_cap(tenant, t_cap,
+                          self.cap_burst_s if t_burst is None
+                          else float(t_burst))
             if cls in _LATENCY_CLASSES:
                 self._latency_last_event = time.monotonic()
             if not q:
@@ -739,29 +1140,43 @@ class TransferRuntime:
                     self._vtime[cls] = max(self._vtime[cls], min(busy))
             if not self.fair:
                 d.deadline = float("inf")  # FIFO baseline: no promotion
-            elif cls in self._caps:
-                # cap-aware EDF: a throttled class's dispatch horizon is set
-                # by its token-bucket refill rate, not the QoS spec. Stretch
-                # the deadline past the time the bucket needs to drain the
-                # queued backlog plus this descriptor, so a hard-capped
-                # class does not go permanently overdue — stage 0 would veto
-                # every EDF pick anyway, and the class_summary() ledger
-                # would report promotions that never dispatch. Keeps
-                # deadline_promotions meaningful under heavy throttling.
-                bucket = self._caps[cls]
+            else:
+                # cap-aware EDF: a throttled class's (or tenant's) dispatch
+                # horizon is set by its token-bucket refill rate, not the
+                # QoS spec. Stretch the deadline past the time the bucket
+                # needs to drain the queued backlog plus this descriptor,
+                # so a hard-capped flow does not go permanently overdue —
+                # stage 0 (or the tier-2 head check) would veto every EDF
+                # pick anyway, and the class_summary() ledger would report
+                # promotions that never dispatch. The stretch takes the
+                # SLOWER of the class and tenant drain horizons (the cap
+                # tree's binding constraint).
                 cap_now = time.monotonic()
-                backlog = sum(dd.nbytes for dd in q)
-                drain_s = (bucket.delay_s(cap_now)
-                           + (backlog + d.nbytes) / bucket.rate)
-                capped_deadline = cap_now + drain_s + spec.deadline_s
-                if capped_deadline > d.deadline:
-                    d.deadline = capped_deadline
-                    self.stats[cls].cap_deadline_stretches += 1
+                drain_s = 0.0
+                bucket = self._caps.get(cls)
+                if bucket is not None:
+                    drain_s = (bucket.delay_s(cap_now)
+                               + (q.queued_bytes + d.nbytes) / bucket.rate)
+                if self.tenant_fair:
+                    fl = q.flows.get(tenant)
+                    if fl is not None and fl.bucket is not None:
+                        t_drain = (fl.bucket.delay_s(cap_now)
+                                   + (fl.backlog_bytes + d.nbytes)
+                                   / fl.bucket.rate)
+                        drain_s = max(drain_s, t_drain)
+                if drain_s > 0.0:
+                    capped_deadline = cap_now + drain_s + spec.deadline_s
+                    if capped_deadline > d.deadline:
+                        d.deadline = capped_deadline
+                        self.stats[cls].cap_deadline_stretches += 1
             q.append(d)
             handle._outstanding += 1
             st = self.stats[cls]
             st.submitted += 1
             st.bytes_total += d.nbytes
+            ts = st.tenant(tenant)
+            ts.submitted += 1
+            ts.bytes_total += d.nbytes
             while self._alive < self.workers:
                 t = threading.Thread(target=self._run, daemon=True)
                 t.start()
@@ -778,30 +1193,50 @@ class TransferRuntime:
         now = time.monotonic()
         self._cap_wait_hint = None
         if not self.fair:
-            # FIFO baseline: oldest submit across every class.
-            best = None
+            # FIFO baseline: oldest submit across every class (and across
+            # every tenant flow inside each class — oldest() scans flow
+            # heads, so the baseline ignores both arbitration tiers).
+            d = None
             for q in self._queues.values():
-                if q and (best is None or q[0].t_submit < best[0].t_submit):
-                    best = q
-            if best is None:
+                head = q.oldest()
+                if head is not None and (d is None
+                                         or head.t_submit < d.t_submit):
+                    d = head
+            if d is None:
                 return None
-            d = best.popleft()
+            self._queues[d.cls].pop(d)
         else:
-            # 0) bandwidth caps: a class with queued work but an empty
-            # token bucket is not eligible at ANY level below (EDF must
-            # not override a cap — the ceiling is hard). Record the
-            # earliest refill so a worker finding only capped work parks
-            # on a timed wait instead of idle-exiting.
-            capped: set[PriorityClass] = set()
-            for cls, bucket in self._caps.items():
-                q = self._queues[cls]
-                # a PARKED resume at the head is exempt: its bytes were
-                # charged at first dispatch (charge-once), it holds a ring
-                # slot and mid-chunk iterator state — re-gating it on the
-                # deficit it itself created would stall an in-service
-                # descriptor for the whole refill.
-                if q and not q[0].started and not bucket.ready(now):
-                    capped.add(cls)
+            # tier 2 first: each class nominates ONE candidate head.
+            # Inside head(): parked resumes outrank everything (charge-
+            # once, they hold in-service state), then EDF over overdue
+            # tenant heads, then the min-vtime tenant flow; a tenant whose
+            # token bucket is dry is skipped with its deferral counted and
+            # the earliest refill folded into the wait hint.
+            heads: dict[PriorityClass, _Descriptor] = {}
+            for cls, q in self._queues.items():
+                if not q:
+                    continue
+                cand, hint = q.head(now)
+                if hint is not None and (self._cap_wait_hint is None
+                                         or hint < self._cap_wait_hint):
+                    self._cap_wait_hint = hint
+                if cand is not None:
+                    heads[cls] = cand
+            # 0) bandwidth caps, class tier: a class whose candidate needs
+            # a first dispatch but whose token bucket is empty is not
+            # eligible at ANY level below (EDF must not override a cap —
+            # the ceiling is hard). Record the earliest refill so a worker
+            # finding only capped work parks on a timed wait instead of
+            # idle-exiting. A PARKED resume is exempt: its bytes were
+            # charged at first dispatch (charge-once), it holds a ring
+            # slot and mid-chunk iterator state — re-gating it on the
+            # deficit it itself created would stall an in-service
+            # descriptor for the whole refill.
+            for cls in list(heads):
+                bucket = self._caps.get(cls)
+                if (bucket is not None and not heads[cls].started
+                        and not bucket.ready(now)):
+                    del heads[cls]
                     self.stats[cls].cap_deferrals += 1
                     wait = bucket.delay_s(now)
                     if (self._cap_wait_hint is None
@@ -822,36 +1257,32 @@ class TransferRuntime:
                 now - self._latency_last_event < self.latency_recency_s)
             latency_only = (lane_active and reserve > 0
                             and self._executing >= self.workers - reserve)
-
-            def eligible(cls: PriorityClass) -> bool:
-                if cls in capped:
-                    return False
-                return not latency_only or cls in _LATENCY_CLASSES
-
-            # 2) deadline promotion: EDF over overdue heads. Absolute
-            # deadlines make this starvation-free (old BULK eventually
-            # outranks fresh TOKEN).
-            best = None
-            for cls, q in self._queues.items():
-                if q and eligible(cls) and q[0].deadline <= now:
-                    if best is None or q[0].deadline < best[0].deadline:
-                        best = q
-            if best is not None:
-                d = best.popleft()
+            if latency_only:
+                heads = {c: h for c, h in heads.items()
+                         if c in _LATENCY_CLASSES}
+            # 2) deadline promotion: EDF over overdue candidate heads.
+            # Absolute deadlines make this starvation-free (old BULK
+            # eventually outranks fresh TOKEN).
+            d = None
+            for cand in heads.values():
+                if cand.deadline <= now and (d is None
+                                             or cand.deadline < d.deadline):
+                    d = cand
+            if d is not None:
                 self.stats[d.cls].deadline_promotions += 1
             else:
                 # 3) weighted fair: busy class with the smallest vtime.
-                busy = [c for c, q in self._queues.items()
-                        if q and eligible(c)]
-                if not busy:
+                if not heads:
                     return None
-                cls = min(busy, key=lambda c: self._vtime[c])
-                d = self._queues[cls].popleft()
+                d = heads[min(heads, key=lambda c: self._vtime[c])]
+            self._queues[d.cls].pop(d)
         st = self.stats[d.cls]
         if not d.started:
             # first dispatch: charge fair-queue virtual time and the cap
-            # bucket ONCE for the whole descriptor (a parked resume is not
-            # a new arrival) and stamp the queue-wait latency.
+            # buckets ONCE for the whole descriptor (a parked resume is
+            # not a new arrival) at BOTH tiers — class vtime/bucket here,
+            # tenant vtime/bucket via charge_dispatch — and stamp the
+            # queue-wait latency into both ledgers.
             d.started = True
             if self.fair:
                 self._vtime[d.cls] += (
@@ -859,8 +1290,17 @@ class TransferRuntime:
                 bucket = self._caps.get(d.cls)
                 if bucket is not None:
                     bucket.charge(d.nbytes)
+                self._queues[d.cls].charge_dispatch(d)
             st.dispatched += 1
             st.dispatch_lat_s.append(now - d.t_submit)
+            ts = st.tenant(d.tenant)
+            ts.dispatched += 1
+            ts.dispatch_lat_s.append(now - d.t_submit)
+            missed = int(d.deadline <= now)
+            self._miss_window[d.cls].append((now, missed))
+            if missed:
+                st.deadline_misses += 1
+                ts.deadline_misses += 1
             # dispatch_recent feeds the adaptive crossover's effective t0:
             # a batched group (units > 1) pays ONE queue wait for its whole
             # set of logical descriptors, so the per-descriptor price the
@@ -1137,6 +1577,7 @@ class TransferRuntime:
             st.coalesce_batch.append(len(entries))
             for d, t_done in entries:
                 st.completed += 1
+                st.tenant(d.tenant).completed += 1
                 st.service_lat_s.append(d.service_acc)
                 st.coalesce_delay_s.append(t_flush - t_done)
         for d, _ in entries:
@@ -1202,19 +1643,26 @@ class TransferRuntime:
             self._run_background(fn)
 
     # -- fault handling ------------------------------------------------------
-    def note_fault(self, cls: PriorityClass, *, faults: int = 0,
-                   retries: int = 0, timeouts: int = 0,
+    def note_fault(self, cls: PriorityClass, *, tenant: str | None = None,
+                   faults: int = 0, retries: int = 0, timeouts: int = 0,
                    quarantines: int = 0) -> None:
         """Fold fault-layer events observed OUTSIDE the runtime (engine
         checksum failures, channel-group stripe retries, quarantines) into
-        the per-class ledger, so ``class_summary()`` is the one place a
-        serving stack reads deadline-miss and retry rates from."""
+        the per-class ledger — and, when ``tenant`` is given, the
+        per-tenant one — so ``class_summary()`` is the one place a serving
+        stack reads deadline-miss and retry rates from."""
         with self._cond:
             st = self.stats[cls]
             st.faults += faults
             st.retries += retries
             st.timeouts += timeouts
             st.quarantines += quarantines
+            if tenant is not None:
+                ts = st.tenant(tenant)
+                ts.faults += faults
+                ts.retries += retries
+                ts.timeouts += timeouts
+                ts.quarantines += quarantines
 
     def scan_timeouts(self, max_age_s: float) -> int:
         """Cancel every still-QUEUED descriptor older than ``max_age_s``,
@@ -1238,18 +1686,20 @@ class TransferRuntime:
             # a dropped one.
             pending = self._drain_all_locked()
             for cls, q in self._queues.items():
-                keep = collections.deque()
-                while q:
-                    d = q.popleft()
-                    if not d.started and now - d.t_submit > max_age_s:
-                        d.handle._outstanding -= 1
-                        st = self.stats[cls]
-                        st.cancelled += 1
-                        st.timeouts += 1
-                        timed_out.append(d)
-                    else:
-                        keep.append(d)
-                q.extend(keep)
+                stale = q.drain_if(
+                    lambda d: not d.started and now - d.t_submit > max_age_s)
+                for d in stale:
+                    d.handle._outstanding -= 1
+                    st = self.stats[cls]
+                    st.cancelled += 1
+                    st.timeouts += 1
+                    ts = st.tenant(d.tenant)
+                    ts.cancelled += 1
+                    ts.timeouts += 1
+                    # a timed-out descriptor missed its deadline by
+                    # definition: feed the admission controller's window.
+                    self._miss_window[cls].append((now, 1))
+                timed_out.extend(stale)
             if timed_out:
                 self._cond.notify_all()
         for b in pending:
@@ -1282,16 +1732,12 @@ class TransferRuntime:
         assert_held(self._cond, "_cancel_handle_locked")
         cancelled: list[_Descriptor] = []
         for cls, q in self._queues.items():
-            keep = collections.deque()
-            while q:
-                d = q.popleft()
-                if d.handle is handle:
-                    handle._outstanding -= 1
-                    self.stats[cls].cancelled += 1
-                    cancelled.append(d)
-                else:
-                    keep.append(d)
-            q.extend(keep)
+            mine = q.drain_if(lambda d: d.handle is handle)
+            for d in mine:
+                handle._outstanding -= 1
+                self.stats[cls].cancelled += 1
+                self.stats[cls].tenant(d.tenant).cancelled += 1
+            cancelled.extend(mine)
         return cancelled
 
     @staticmethod
@@ -1391,6 +1837,17 @@ class TransferRuntime:
                 pol = self.coalesce.get(cls)
                 row["coalesce_max_batch"] = (pol.max_batch
                                              if pol is not None else 1)
+                row["deadline_miss_rate"] = self._miss_rate_locked(cls)
+                q = self._queues[cls]
+                tenants = {}
+                for tenant, ts in st.tenants.items():
+                    if not (ts.submitted or ts.faults or ts.retries):
+                        continue
+                    trow = ts.summary()
+                    trow["queued"] = q.depth(tenant)
+                    trow["cap_bytes_per_s"] = q.cap(tenant)
+                    tenants[tenant] = trow
+                row["tenants"] = tenants
                 out[cls.value] = row
             return out
 

@@ -13,9 +13,10 @@ from repro.core.runtime import (  # noqa: F401
 )
 
 warnings.warn(
-    "repro.core.scheduler is deprecated: CooperativeScheduler/SchedulerStats "
-    "live in repro.core.runtime (the 'scheduled' management backend — see "
-    "repro.core.runtime.ScheduledBackend); import from there.",
+    "repro.core.scheduler is deprecated; import CooperativeScheduler from "
+    "the repro.core facade (SchedulerStats stays in repro.core.runtime, the "
+    "'scheduled' management backend — see repro.core.runtime."
+    "ScheduledBackend). The shim will be removed next release.",
     DeprecationWarning,
     stacklevel=2,
 )

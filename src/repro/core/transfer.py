@@ -83,6 +83,7 @@ from repro.core.runtime import (
     TransferTimeoutError,
     get_runtime,
 )
+from repro.core.qos import QosSpec, resolve_submit_qos
 
 __all__ = [  # re-exports: the fault taxonomy lives in runtime (no cycle)
     "Management", "Buffering", "Partitioning", "TransferPolicy",
@@ -789,10 +790,16 @@ class TransferEngine:
     def __init__(self, policy: TransferPolicy, device: jax.Device | None = None,
                  scheduler: "CooperativeScheduler | None" = None,
                  runtime: TransferRuntime | None = None,
-                 priority: PriorityClass = PriorityClass.LAYER):
+                 priority: PriorityClass = PriorityClass.LAYER,
+                 qos: QosSpec | None = None):
         self.policy = policy
         self.device = device or jax.devices()[0]
-        self.priority = priority
+        # the engine's default submit context: every tx/rx inherits it, a
+        # per-call qos= overrides only the fields it sets. ``priority``
+        # stays as the class shorthand (not deprecated at construction —
+        # only per-call priority= kwargs are).
+        self.qos = QosSpec(priority=priority).merged(qos)
+        self.priority = self.qos.priority
         # bounded: one record per logical transfer (per decoded token on
         # the serving path) — unbounded history would leak in a
         # long-running server; aggregates live in the *_total counters.
@@ -847,6 +854,15 @@ class TransferEngine:
         if scheduler is None and policy.management is Management.SCHEDULED:
             scheduler = CooperativeScheduler()
         self._scheduler = scheduler
+
+    def _resolve_qos(self, where: str, qos: QosSpec | None,
+                     priority: PriorityClass | None) -> QosSpec:
+        """One submit call's effective context: per-call qos > engine
+        default. A legacy ``priority=`` kwarg folds in through the
+        deprecation shim (:func:`repro.core.qos.resolve_submit_qos`)."""
+        spec = resolve_submit_qos(f"{type(self).__name__}.{where}",
+                                  qos, priority)
+        return self.qos.merged(spec)
 
     # -- runtime registration (lazy so POLLING engines never touch it) ------
     def _runtime_handle(self) -> RuntimeHandle:
@@ -989,13 +1005,16 @@ class TransferEngine:
 
     # -- TX: host -> device -------------------------------------------------
     def tx(self, host_array: np.ndarray,
-           priority: PriorityClass | None = None) -> list[jax.Array]:
+           priority: PriorityClass | None = None, *,
+           qos: QosSpec | None = None) -> list[jax.Array]:
         """Transfer ``host_array`` to the device; returns device chunk list.
-        ``priority`` overrides the engine's QoS class for this transfer."""
+        ``qos`` overrides the engine's submit context for this transfer
+        (``priority=`` is the deprecated spelling of ``qos.priority``)."""
+        spec = self._resolve_qos("tx", qos, priority)
         chunks = _split(np.asarray(host_array), self.policy)
         t0 = time.perf_counter()
         out = self._run_chunks(
-            [(c, "tx", None) for c in chunks], priority=priority,
+            [(c, "tx", None) for c in chunks], spec,
         )
         wall = time.perf_counter() - t0
         self._record(
@@ -1006,19 +1025,21 @@ class TransferEngine:
     # -- RX: device -> host -------------------------------------------------
     def rx(self, device_arrays: Sequence[jax.Array],
            out: Sequence[np.ndarray] | None = None,
-           priority: PriorityClass | None = None) -> list[np.ndarray]:
+           priority: PriorityClass | None = None, *,
+           qos: QosSpec | None = None) -> list[np.ndarray]:
         """Transfer device arrays back to host memory.
 
         ``out``: optional caller-owned destination buffers, one per device
         array (matching byte sizes). When given, results are written IN
         PLACE and the returned list contains the caller's own buffer
         objects — the zero-copy detokenize path."""
+        spec = self._resolve_qos("rx", qos, priority)
         arrays = list(device_arrays)
         outs = _check_out(arrays, out)
         nbytes = sum(int(a.size) * a.dtype.itemsize for a in arrays)
         t0 = time.perf_counter()
         result = self._run_chunks(
-            [(a, "rx", o) for a, o in zip(arrays, outs)], priority=priority)
+            [(a, "rx", o) for a, o in zip(arrays, outs)], spec)
         wall = time.perf_counter() - t0
         self._record(
             TransferStats(nbytes, wall, len(arrays), "rx", self.policy.tag)
@@ -1101,7 +1122,7 @@ class TransferEngine:
         return r
 
     def _run_chunks(self, items: list[tuple[Any, str, Any]],
-                    priority: PriorityClass | None = None) -> list:
+                    qos: QosSpec) -> list:
         mgmt = self.policy.management
         if mgmt is Management.POLLING:
             # user-level polling: issue, then spin until ready, per chunk.
@@ -1147,8 +1168,9 @@ class TransferEngine:
         # list below (contiguous order — reassembly is unchanged).
         handle = self._runtime_handle()
         depth = self.policy.depth
-        cls = priority or self.priority
-        wait_s = self.policy.descriptor_timeout_s
+        cls = qos.priority or self.priority
+        wait_s = (qos.timeout_s if qos.timeout_s is not None
+                  else self.policy.descriptor_timeout_s)
         tickets: list[Ticket | None] = [None] * len(items)
         results: list = [None] * len(items)
         inflight: list[int] = []
@@ -1190,7 +1212,7 @@ class TransferEngine:
             try:
                 done, out = handle.submit(
                     submit_obj, nbytes=_payload_nbytes(payload, direction),
-                    priority=priority,
+                    qos=qos,
                     on_cancel=lambda err, idx=idx, release=release:
                         self._release_buffer(idx, release))
             except BaseException as e:
@@ -1218,7 +1240,7 @@ class TransferEngine:
                       callback: Callable[[list], None] | None,
                       layout: StagedLayout | None,
                       outs: Sequence[np.ndarray | None] | None = None,
-                      priority: PriorityClass | None = None) -> Ticket:
+                      qos: QosSpec | None = None) -> Ticket:
         """Stage ``payloads`` as ring descriptors, one per chunk.
 
         Ring slots are acquired on the *caller* thread, so a full ring
@@ -1289,7 +1311,8 @@ class TransferEngine:
                         ticket_out[0] = e
             master.set()
 
-        cls = priority or self.priority
+        qos = qos if qos is not None else self.qos
+        cls = qos.priority or self.priority
         for i, payload in enumerate(payloads):
             idx, release = self._acquire_buffer()
             dst = outs[i] if outs is not None else None
@@ -1368,7 +1391,7 @@ class TransferEngine:
             try:
                 handle.submit(submit_obj,
                               nbytes=_payload_nbytes(payload, direction),
-                              priority=priority, on_cancel=cancelled)
+                              qos=qos, on_cancel=cancelled)
             except BaseException as e:
                 # engine/runtime closed mid-loop: this chunk and every
                 # unsubmitted one after it must still be accounted on the
@@ -1383,21 +1406,24 @@ class TransferEngine:
     def tx_async(self, host_array: np.ndarray,
                  callback: Callable[[list], None] | None = None,
                  layout: StagedLayout | None = None,
-                 priority: PriorityClass | None = None) -> Ticket:
+                 priority: PriorityClass | None = None, *,
+                 qos: QosSpec | None = None) -> Ticket:
         """Asynchronous TX. When ``layout`` is given (its staging buffer is
         the payload), the layout is marked busy until completion so an unsafe
         re-pack raises :class:`BufferInFlightError`."""
         if self.policy.management is not Management.INTERRUPT:
             raise ValueError("tx_async requires INTERRUPT management")
+        spec = self._resolve_qos("tx_async", qos, priority)
         arr = np.asarray(host_array)
         chunks = _split(arr, self.policy)
         return self._submit_async(chunks, "tx", int(arr.nbytes), callback,
-                                  layout, priority=priority)
+                                  layout, qos=spec)
 
     def rx_async(self, device_arrays: Sequence[jax.Array],
                  callback: Callable[[list], None] | None = None,
                  out: Sequence[np.ndarray] | None = None,
-                 priority: PriorityClass | None = None) -> Ticket:
+                 priority: PriorityClass | None = None, *,
+                 qos: QosSpec | None = None) -> Ticket:
         """Asynchronous RX: device arrays stream back to host on a completion
         worker while the caller keeps computing. ``wait()`` returns the host
         ndarray list.
@@ -1408,18 +1434,19 @@ class TransferEngine:
         zero per-call host allocations (the serving detokenize path)."""
         if self.policy.management is not Management.INTERRUPT:
             raise ValueError("rx_async requires INTERRUPT management")
+        spec = self._resolve_qos("rx_async", qos, priority)
         arrays = list(device_arrays)
         outs = _check_out(arrays, out)
         nbytes = sum(int(a.size) * a.dtype.itemsize for a in arrays)
         return self._submit_async(arrays, "rx", nbytes, callback, None,
                                   outs=outs if out is not None else None,
-                                  priority=priority)
+                                  qos=spec)
 
     # -- batched descriptor submission (one ring transaction, many tickets) --
     def _submit_many(self, payloads: list, direction: str,
                      sizes: list[int],
                      outs: Sequence[np.ndarray] | None,
-                     priority: PriorityClass | None) -> list[Ticket]:
+                     qos: QosSpec) -> list[Ticket]:
         """Submit a GROUP of small logical descriptors as ONE ring
         transaction: one slot, one runtime descriptor (``units=len``), one
         completion handoff — the paper's management-overhead amortization
@@ -1527,7 +1554,7 @@ class TransferEngine:
             resolve([err] * n, [None] * n, 0.0)
 
         try:
-            handle.submit(work, nbytes=total, priority=priority,
+            handle.submit(work, nbytes=total, qos=qos,
                           on_cancel=cancelled, units=n)
         except BaseException as e:
             # engine/runtime closed concurrently: free the slot and error
@@ -1538,35 +1565,40 @@ class TransferEngine:
         return tickets
 
     def tx_many(self, host_arrays: Sequence[np.ndarray],
-                priority: PriorityClass | None = None) -> list[Ticket]:
+                priority: PriorityClass | None = None, *,
+                qos: QosSpec | None = None) -> list[Ticket]:
         """Batched TX: submit K small host arrays as one ring transaction
         with per-array tickets. Each array is one logical descriptor (no
         chunk split — the point is amortizing management overhead over
         SMALL payloads; use :meth:`tx_async` for large ones)."""
         if self.policy.management is not Management.INTERRUPT:
             raise ValueError("tx_many requires INTERRUPT management")
+        spec = self._resolve_qos("tx_many", qos, priority)
         arrays = [np.asarray(a) for a in host_arrays]
         sizes = [int(a.nbytes) for a in arrays]
-        return self._submit_many(arrays, "tx", sizes, None, priority)
+        return self._submit_many(arrays, "tx", sizes, None, spec)
 
     def rx_many(self, device_arrays: Sequence[jax.Array],
                 out: Sequence[np.ndarray] | None = None,
-                priority: PriorityClass | None = None) -> list[Ticket]:
+                priority: PriorityClass | None = None, *,
+                qos: QosSpec | None = None) -> list[Ticket]:
         """Batched RX: K device arrays come back as one ring transaction
         with per-array tickets; ``out`` keeps rx_async's zero-copy landing
         contract per descriptor. ``tickets[i].wait()`` returns the bare
         host array (not a chunk list)."""
         if self.policy.management is not Management.INTERRUPT:
             raise ValueError("rx_many requires INTERRUPT management")
+        spec = self._resolve_qos("rx_many", qos, priority)
         arrays = list(device_arrays)
         outs = _check_out(arrays, out)
         sizes = [int(a.size) * a.dtype.itemsize for a in arrays]
         return self._submit_many(arrays, "rx", sizes,
-                                 outs if out is not None else None, priority)
+                                 outs if out is not None else None, spec)
 
     # -- scatter-gather descriptors (one slot, K segments, zero staging copy)
     def tx_sg(self, segments: Sequence[Any],
-              priority: PriorityClass | None = None) -> SGTicket:
+              priority: PriorityClass | None = None, *,
+              qos: QosSpec | None = None) -> SGTicket:
         """Scatter-gather TX: a logical transfer submitted as a list of
         ``(array, offset, nbytes)`` segments (bare arrays = whole-array
         segments) that occupies ONE ring slot and ONE runtime descriptor
@@ -1577,24 +1609,27 @@ class TransferEngine:
         as shaped device arrays, so no unpack bitcast is needed either."""
         if self.policy.management is not Management.INTERRUPT:
             raise ValueError("tx_sg requires INTERRUPT management")
+        spec = self._resolve_qos("tx_sg", qos, priority)
         views, sizes = _sg_segment_views(segments, "tx")
-        return SGTicket(self._submit_many(views, "tx", sizes, None, priority))
+        return SGTicket(self._submit_many(views, "tx", sizes, None, spec))
 
     def rx_sg(self, segments: Sequence[Any],
               out: "np.ndarray | Sequence[np.ndarray] | None" = None,
-              priority: PriorityClass | None = None) -> SGTicket:
+              priority: PriorityClass | None = None, *,
+              qos: QosSpec | None = None) -> SGTicket:
         """Scatter-gather RX, mirroring :meth:`tx_sg`. ``out`` keeps the
         zero-copy landing contract per segment: a sequence of per-segment
         buffers, or ONE flat array carved at segment boundaries (the
         striped reassembly landing zone)."""
         if self.policy.management is not Management.INTERRUPT:
             raise ValueError("rx_sg requires INTERRUPT management")
+        spec = self._resolve_qos("rx_sg", qos, priority)
         views, sizes = _sg_segment_views(segments, "rx")
         outs = None
         if out is not None:
             outs = (carve_flat_out(out, views) if isinstance(out, np.ndarray)
                     else _check_out(views, out))
-        return SGTicket(self._submit_many(views, "rx", sizes, outs, priority))
+        return SGTicket(self._submit_many(views, "rx", sizes, outs, spec))
 
     def _sg_fit(self) -> Any | None:
         """Fit ``t(n) = t0 + n/BW`` from this engine's own recent TX chunk

@@ -32,6 +32,7 @@ from typing import Any, Iterator
 import jax
 import numpy as np
 
+from repro.core.qos import QosSpec
 from repro.core.runtime import CooperativeScheduler, PriorityClass
 from repro.core.transfer import Management, TransferPolicy
 from repro.models.config import ModelConfig
@@ -126,11 +127,13 @@ class StagedPipeline:
                         self.engine.prefer_sg)):
                 # few large batch arrays: scatter-gather skips the staging
                 # memcpy — each array is its own descriptor segment.
-                dev = self.engine.tx_sg(lay.sg_segments(arrays),
-                                        priority=PriorityClass.BULK).wait()
+                dev = self.engine.tx_sg(
+                    lay.sg_segments(arrays),
+                    qos=QosSpec(priority=PriorityClass.BULK)).wait()
             else:
-                dev = lay.unpack(self.engine.tx(lay.pack(arrays),
-                                                priority=PriorityClass.BULK))
+                dev = lay.unpack(self.engine.tx(
+                    lay.pack(arrays),
+                    qos=QosSpec(priority=PriorityClass.BULK)))
             # batch boundary, TX retired: safe point for an online-adaptive
             # engine to refit its cost model and swap plan generations
             # (no-op on plain engines/groups).

@@ -83,7 +83,10 @@ class TransferFaultState:
     own columns); ``retries``/``retry_successes`` track the channel layer's
     resubmit-on-sibling path; ``quarantines``/``unquarantines`` count
     rotation transitions. ``faults_by_channel`` attributes events to the
-    channel index that raised them."""
+    channel index that raised them; ``faults_by_tenant`` attributes them
+    to the QosSpec tenant whose transfer hit the fault (fault/retry/
+    quarantine columns per tenant), so a misbehaving tenant's retries are
+    billable instead of vanishing into the per-class aggregate."""
 
     def __init__(self) -> None:
         self._lock = make_lock("TransferFaultState._lock")
@@ -95,9 +98,19 @@ class TransferFaultState:
         self.quarantines = 0  # guarded-by: _lock
         self.unquarantines = 0  # guarded-by: _lock
         self.faults_by_channel: dict[int, int] = {}  # guarded-by: _lock
+        self.faults_by_tenant: dict[str, dict[str, int]] = {}  # guarded-by: _lock
+
+    def _tenant_row(self, tenant: str) -> dict[str, int]:  # requires-lock: _lock
+        row = self.faults_by_tenant.get(tenant)
+        if row is None:
+            row = self.faults_by_tenant[tenant] = {
+                "faults": 0, "timeouts": 0, "checksum_failures": 0,
+                "retries": 0, "retry_successes": 0, "quarantines": 0}
+        return row
 
     def record_fault(self, channel: int | None = None, *,
-                     timeout: bool = False, checksum: bool = False) -> None:
+                     timeout: bool = False, checksum: bool = False,
+                     tenant: str | None = None) -> None:
         with self._lock:
             self.faults += 1
             if timeout:
@@ -107,21 +120,34 @@ class TransferFaultState:
             if channel is not None:
                 self.faults_by_channel[channel] = (
                     self.faults_by_channel.get(channel, 0) + 1)
+            if tenant is not None:
+                row = self._tenant_row(tenant)
+                row["faults"] += 1
+                row["timeouts"] += int(timeout)
+                row["checksum_failures"] += int(checksum)
 
-    def record_retry(self, *, success: bool) -> None:
+    def record_retry(self, *, success: bool,
+                     tenant: str | None = None) -> None:
         with self._lock:
             self.retries += 1
             if success:
                 self.retry_successes += 1
+            if tenant is not None:
+                row = self._tenant_row(tenant)
+                row["retries"] += 1
+                row["retry_successes"] += int(success)
 
-    def record_quarantine(self, channel: int, *, on: bool) -> None:
+    def record_quarantine(self, channel: int, *, on: bool,
+                          tenant: str | None = None) -> None:
         with self._lock:
             if on:
                 self.quarantines += 1
             else:
                 self.unquarantines += 1
+            if tenant is not None and on:
+                self._tenant_row(tenant)["quarantines"] += 1
 
-    def summary(self) -> dict[str, int | dict[int, int]]:
+    def summary(self) -> dict[str, int | dict]:
         with self._lock:
             return {
                 "faults": self.faults,
@@ -132,4 +158,6 @@ class TransferFaultState:
                 "quarantines": self.quarantines,
                 "unquarantines": self.unquarantines,
                 "faults_by_channel": dict(self.faults_by_channel),
+                "faults_by_tenant": {t: dict(row) for t, row
+                                     in self.faults_by_tenant.items()},
             }

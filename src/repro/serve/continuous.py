@@ -29,6 +29,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.qos import (
+    AdmissionController,
+    AdmissionDecision,
+    AdmissionPolicy,
+    QosSpec,
+    warn_deprecated_kwarg,
+)
 from repro.core.runtime import PriorityClass
 from repro.core.transfer import (
     Management,
@@ -46,6 +53,9 @@ class Request:
     max_new_tokens: int = 32
     tokens: list = field(default_factory=list)
     done: bool = False
+    # submit context for this request's transfers (tenant, weight, caps);
+    # merges over the engine's base qos. None = engine defaults.
+    qos: QosSpec | None = None
 
 
 def _splice_slot(batch_cache: Any, one_cache: Any, slot: int,
@@ -73,29 +83,51 @@ class ContinuousBatchingEngine:
                  max_seq: int = 256, eos_token: int = -1,
                  transfer: "TransferEngine | Any | None" = None,
                  class_caps: "dict[str, float] | None" = None,
-                 rx_timeout_s: float | None = 60.0):
+                 rx_timeout_s: float | None = 60.0,
+                 qos: QosSpec | None = None,
+                 admission: AdmissionPolicy | None = None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.eos = eos_token
-        # liveness bound on every decoded-token RX wait: a lost completion
-        # becomes TransferTimeoutError instead of freezing the whole batch
-        # (None = unbounded, the pre-fault-layer behaviour).
-        self.rx_timeout_s = rx_timeout_s
+        # DEPRECATED kwargs fold into the base QosSpec: class_caps ->
+        # qos.class_caps, rx_timeout_s -> qos.timeout_s (the liveness
+        # bound on every decoded-token RX wait; None = unbounded).
+        if class_caps is not None:
+            warn_deprecated_kwarg(
+                "ContinuousBatchingEngine(class_caps=...)",
+                "ContinuousBatchingEngine(qos=QosSpec(class_caps=...))")
+        if rx_timeout_s != 60.0:
+            warn_deprecated_kwarg(
+                "ContinuousBatchingEngine(rx_timeout_s=...)",
+                "ContinuousBatchingEngine(qos=QosSpec(timeout_s=...))")
+        self.qos = QosSpec(timeout_s=rx_timeout_s,
+                           class_caps=class_caps).merged(qos)
+        self.rx_timeout_s = self.qos.timeout_s
+        # token RXs ride TOKEN class unless the base spec overrides.
+        self._tok_qos = QosSpec(priority=PriorityClass.TOKEN).merged(
+            self.qos)
         # token movement (prompt TX, decoded-token RX) on a real engine —
         # callers may hand in a shared TransferEngine or ChannelGroup, which
         # close() then leaves alone (we only close what we created).
         self._owns_transfer = transfer is None
         self.transfer = transfer or TransferEngine(
             TransferPolicy.kernel_level())
-        if class_caps:
+        if self.qos.class_caps:
             # per-class bandwidth ceilings (PriorityClass value -> bytes/s)
             # on the runtime behind the transfer surface: bulk prefetch
             # sharing this engine's runtime can be budgeted so decode-token
             # RX keeps its headroom.
-            for name, bps in class_caps.items():
+            for name, bps in self.qos.class_caps.items():
                 self.transfer.set_class_cap(PriorityClass(name), bps)
+        # admission valve: submit() sheds a tenant whose backlog (host
+        # queue + runtime-queued descriptors) or whose class's deadline-
+        # miss rate crosses the policy thresholds. Runtime read lazily —
+        # engines register with the shared runtime on first submit.
+        self.admission = AdmissionController(
+            runtime=lambda: self.transfer.runtime,
+            policy=admission, cls=PriorityClass.TOKEN)
         if model.cfg.family in ("ssm", "hybrid"):
             raise NotImplementedError(
                 "continuous batching currently supports KV-cache families")
@@ -124,8 +156,22 @@ class ContinuousBatchingEngine:
             return 0
         return None
 
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+    def submit(self, req: Request) -> AdmissionDecision:
+        """Enqueue ``req`` unless admission sheds it. Always returns the
+        explicit :class:`AdmissionDecision` — a ``shed`` decision means
+        the request was NOT enqueued (check ``decision.admitted``); the
+        caller backs off ``retry_after_s`` and resubmits. Never hangs,
+        never silently drops."""
+        spec = self.qos.merged(req.qos)
+        tenant = spec.effective_tenant
+        backlog = sum(
+            1 for r in self.queue
+            if self.qos.merged(r.qos).effective_tenant == tenant)
+        decision = self.admission.decide(
+            tenant, cls=self._tok_qos.priority, extra_depth=backlog)
+        if decision.admitted:
+            self.queue.append(req)
+        return decision
 
     def _admit(self) -> None:
         admits: list[tuple[int, Request]] = []
@@ -136,21 +182,26 @@ class ContinuousBatchingEngine:
             return
         prompts = [np.ascontiguousarray(r.prompt[None], dtype=np.int32)
                    for _s, r in admits]
+        specs = [self.qos.merged(r.qos) for _s, r in admits]
         # with several admissions pending, the (ragged) prompts go down as
         # ONE scatter-gather ring transaction — each prompt its own
         # descriptor segment, no per-prompt management overhead and no
         # staging copy (ragged shapes cannot share a packed payload
-        # without padding anyway).
-        if (len(admits) > 1
+        # without padding anyway). One SG transaction carries ONE submit
+        # context, so the batch rides SG only when every pending request
+        # resolves to the same spec; mixed-tenant admissions fall back to
+        # per-prompt TX to keep tenant attribution exact.
+        if (len(admits) > 1 and all(s == specs[0] for s in specs)
                 and self.transfer.policy.management is Management.INTERRUPT
                 and hasattr(self.transfer, "tx_sg")):
-            devs = self.transfer.tx_sg(prompts).wait()
+            devs = self.transfer.tx_sg(prompts, qos=specs[0]).wait()
             prompt_devs = [d.reshape(p.shape)
                            for d, p in zip(devs, prompts)]
         else:
             prompt_devs = [
-                reassemble_chunks(self.transfer.tx(p)).reshape(p.shape)
-                for p in prompts]
+                reassemble_chunks(
+                    self.transfer.tx(p, qos=s)).reshape(p.shape)
+                for p, s in zip(prompts, specs)]
         for (slot, req), prompt_dev in zip(admits, prompt_devs):
             logits, one_cache = self._prefill1(
                 self.params, {"tokens": prompt_dev})
@@ -200,7 +251,7 @@ class ContinuousBatchingEngine:
             tickets = self.transfer.rx_many(
                 [tok_dev[s:s + 1] for s in active],
                 out=[self._tok_host[s:s + 1] for s in active],
-                priority=PriorityClass.TOKEN)
+                qos=self._tok_qos)
             self.tokens = tok_dev[:, None].astype(jnp.int32)
             for t in tickets:
                 t.wait(self.rx_timeout_s)
@@ -210,12 +261,12 @@ class ContinuousBatchingEngine:
         else:
             out = [self._tok_host]  # reused every step: zero-copy detok
             ticket = (self.transfer.rx_async([tok_dev], out=out,
-                                             priority=PriorityClass.TOKEN)
+                                             qos=self._tok_qos)
                       if interrupt else None)
             self.tokens = tok_dev[:, None].astype(jnp.int32)
             nxt = (ticket.wait(self.rx_timeout_s)[0] if ticket
                    else self.transfer.rx([tok_dev], out=out,
-                                         priority=PriorityClass.TOKEN)[0])
+                                         qos=self._tok_qos)[0])
         nxt = np.asarray(nxt).reshape(-1)
         for slot in active:
             self.slots[slot].tokens.append(int(nxt[slot]))
@@ -250,6 +301,11 @@ class ContinuousBatchingEngine:
                            "quarantines": 0, "unquarantines": 0,
                            "faults_by_channel": {}},
                 "quarantined": []}
+
+    def admission_summary(self) -> dict[str, Any]:
+        """Accept/queue/shed counts of the submit() valve, with per-tenant
+        rows for tenants that were ever queued or shed."""
+        return self.admission.summary()
 
     def close(self) -> None:
         if self._owns_transfer:

@@ -29,6 +29,13 @@ import numpy as np
 
 from repro.core.adaptive import AdaptiveChannelGroup, AdaptiveConfig
 from repro.core.channels import ChannelGroup
+from repro.core.qos import (
+    AdmissionController,
+    AdmissionError,
+    AdmissionPolicy,
+    QosSpec,
+    warn_deprecated_kwarg,
+)
 from repro.core.runtime import PriorityClass
 from repro.core.transfer import (
     Management,
@@ -57,24 +64,35 @@ class ServeConfig:
     # from this file when it exists and save the fitted state on close()
     # — a restarted server skips the calibration sweep.
     transfer_state_path: str | None = None
-    # per-class bandwidth ceilings on the shared TransferRuntime, keyed by
-    # PriorityClass value (e.g. {"bulk": 500e6}): the ZynqNet per-class
-    # budget, enforced — capped classes defer, uncapped classes borrow the
-    # headroom, and an online-adaptive engine plans against the effective
-    # (post-cap) bandwidth of its own class. Requires INTERRUPT management
-    # (the default policies here all are).
+    # DEPRECATED: class_caps / rx_timeout_s / rx_group now live on ``qos``
+    # (QosSpec.class_caps / .timeout_s / .rx_group). Setting them away from
+    # their defaults still works for one release — each folds into the
+    # engine's base QosSpec and warns.
     class_caps: "dict[str, float] | None" = None
-    # deadline on every decoded-token RX wait: a lost completion surfaces
-    # as TransferTimeoutError after this long instead of hanging the
-    # decode loop forever (None restores unbounded waits). Generous by
-    # default — it is a liveness bound, not a latency SLO.
     rx_timeout_s: float | None = 60.0
-    # decoded-token RXs are accumulated and submitted rx_many-batched in
-    # groups of this size (one ring transaction + one completion handoff
-    # per group instead of per token — the management-overhead
-    # amortization of the coalescing tentpole). 1 restores the
-    # one-rx_async-per-step behaviour.
     rx_group: int = 8
+    # the engine's base submit context: per-class bandwidth ceilings
+    # (class_caps — the ZynqNet per-class budget), the decoded-token RX
+    # liveness bound (timeout_s; None = unbounded waits), the token-RX
+    # batching factor (rx_group; 1 = one rx_async per step), plus tenant /
+    # weight / per-tenant cap defaults for every transfer this engine
+    # submits. Per-call generate(qos=...) merges over it.
+    qos: QosSpec | None = None
+    # admission thresholds (tenant queue depth / deadline-miss rate) the
+    # engine sheds on; None = default AdmissionPolicy (generous — a
+    # single-tenant process never trips it).
+    admission: AdmissionPolicy | None = None
+
+    def __post_init__(self) -> None:
+        if self.class_caps is not None:
+            warn_deprecated_kwarg("ServeConfig(class_caps=...)",
+                                  "ServeConfig(qos=QosSpec(class_caps=...))")
+        if self.rx_timeout_s != 60.0:
+            warn_deprecated_kwarg("ServeConfig(rx_timeout_s=...)",
+                                  "ServeConfig(qos=QosSpec(timeout_s=...))")
+        if self.rx_group != 8:
+            warn_deprecated_kwarg("ServeConfig(rx_group=...)",
+                                  "ServeConfig(qos=QosSpec(rx_group=...))")
 
 
 @dataclass
@@ -96,6 +114,15 @@ class ServingEngine:
         self.model = model
         self.params = params
         self.cfg = cfg
+        # the engine's base submit context: legacy ServeConfig knobs fold
+        # in first (they already warned at ServeConfig construction), then
+        # cfg.qos overrides field-wise. Token-RX submissions further merge
+        # TOKEN priority and the per-call generate(qos=...) spec on top.
+        self.qos = QosSpec(
+            timeout_s=cfg.rx_timeout_s,
+            rx_group=cfg.rx_group,
+            class_caps=cfg.class_caps,
+        ).merged(cfg.qos)
         if cfg.adaptive_transfer or cfg.online_adaptation:
             if policy is not None:
                 raise ValueError(
@@ -130,12 +157,18 @@ class ServingEngine:
         else:
             self.policy = policy or TransferPolicy.kernel_level()
             self.engine = TransferEngine(self.policy)
-        if cfg.class_caps:
+        if self.qos.class_caps:
             # enforced on the shared runtime behind this engine's transfer
             # surface; an adaptive engine also folds its own class's cap
             # into the planner (set_class_cap handles both).
-            for name, bps in cfg.class_caps.items():
+            for name, bps in self.qos.class_caps.items():
                 self.engine.set_class_cap(PriorityClass(name), bps)
+        # admission guards the TOKEN class (where decode-loop RXs queue):
+        # runtime is read lazily — engines register with the shared runtime
+        # on first submit, not at construction.
+        self.admission = AdmissionController(
+            runtime=lambda: self.engine.runtime,
+            policy=cfg.admission, cls=PriorityClass.TOKEN)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cfg.max_seq))
         self._decode = jax.jit(model.decode, donate_argnums=(2,))
@@ -167,6 +200,11 @@ class ServingEngine:
                            "faults_by_channel": {}},
                 "quarantined": []}
 
+    def admission_summary(self) -> dict[str, Any]:
+        """Accept/queue/shed counts of this engine's admission valve,
+        with per-tenant rows for tenants that were ever queued or shed."""
+        return self.admission.summary()
+
     def _sample(self, logits: jax.Array) -> jax.Array:
         logits = logits[:, -1, : self.model.cfg.vocab]
         if self.cfg.temperature <= 0:
@@ -176,7 +214,8 @@ class ServingEngine:
             sub, logits / self.cfg.temperature)[:, None].astype(jnp.int32)
 
     def _tx_prompts(self, prompts: np.ndarray,
-                    extra_inputs: dict | None = None) -> dict:
+                    extra_inputs: dict | None = None,
+                    qos: QosSpec | None = None) -> dict:
         """Stage the prompt batch (and any side inputs) through the transfer
         engine as the prefill batch dict. With side inputs on an SG-capable
         INTERRUPT engine, prompts + extras ride ONE scatter-gather ring slot
@@ -189,27 +228,44 @@ class ServingEngine:
                 and self.engine.policy.management is Management.INTERRUPT
                 and hasattr(self.engine, "tx_sg")):
             keys = sorted(extra)
-            devs = self.engine.tx_sg([arr] + [extra[k] for k in keys]).wait()
+            devs = self.engine.tx_sg([arr] + [extra[k] for k in keys],
+                                     qos=qos).wait()
             batch = {"tokens": devs[0].reshape(arr.shape)}
             batch.update(dict(zip(keys, devs[1:])))
             return batch
-        batch = {"tokens":
-                 reassemble_chunks(self.engine.tx(arr)).reshape(arr.shape)}
+        batch = {"tokens": reassemble_chunks(
+            self.engine.tx(arr, qos=qos)).reshape(arr.shape)}
         batch.update({k: jnp.asarray(v) for k, v in extra.items()})
         return batch
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
-                 extra_inputs: dict | None = None) -> list[RequestResult]:
+                 extra_inputs: dict | None = None, *,
+                 qos: QosSpec | None = None) -> list[RequestResult]:
         """prompts: [B, S_prompt] int32 (already padded/batched).
+
+        ``qos`` merges over the engine's base spec (``ServeConfig.qos``):
+        tag the request's transfers with a tenant / weight / caps, override
+        the token-RX deadline or batching factor per call. Admission runs
+        first: a shed request raises :class:`AdmissionError` carrying the
+        :class:`AdmissionDecision` (explicit backpressure, never a hang).
 
         NOT reentrant: one generate() at a time per ServingEngine (the
         sampling key, KV-cache donation, and the reused ``_tok_buf`` token
         matrix are engine state). Concurrent serving is the
         ContinuousBatchingEngine's job; multiple ServingEngines may run in
         parallel (each owns its transfer rings and buffers)."""
+        spec = self.qos.merged(qos)
+        # token RXs ride TOKEN class unless the caller's spec overrides;
+        # prompt TX keeps the engine's own default class (spec carries no
+        # priority unless the caller set one).
+        tok_spec = QosSpec(priority=PriorityClass.TOKEN).merged(spec)
+        decision = self.admission.decide(spec.effective_tenant,
+                                         cls=tok_spec.priority)
+        if not decision.admitted:
+            raise AdmissionError(decision)
         b = prompts.shape[0]
         max_new_tokens = max(1, max_new_tokens)  # prefill always emits one
-        batch = self._tx_prompts(prompts, extra_inputs)
+        batch = self._tx_prompts(prompts, extra_inputs, qos=spec)
         # read the CURRENT policy off the engine: an online-adaptive engine
         # may have swapped plan generations since construction.
         overlap_rx = self.engine.policy.management is Management.INTERRUPT
@@ -237,7 +293,7 @@ class ServingEngine:
             # management overhead the paper showed dominates small
             # packets; tokens stay device-resident until their group
             # flushes, which costs nothing (decode reads them on device).
-            group = max(1, int(self.cfg.rx_group))
+            group = max(1, int(spec.rx_group or 1))
             batched = group > 1 and hasattr(self.engine, "rx_many")
             tickets: list = []
             pend_toks: list = [tok]
@@ -246,11 +302,10 @@ class ServingEngine:
             def flush() -> None:
                 if batched and len(pend_toks) > 1:
                     tickets.extend(self.engine.rx_many(
-                        list(pend_toks), out=list(pend_rows),
-                        priority=PriorityClass.TOKEN))
+                        list(pend_toks), out=list(pend_rows), qos=tok_spec))
                 else:
                     tickets.extend(self.engine.rx_async(
-                        [p], out=[r], priority=PriorityClass.TOKEN)
+                        [p], out=[r], qos=tok_spec)
                         for p, r in zip(pend_toks, pend_rows))
                 pend_toks.clear()
                 pend_rows.clear()
@@ -267,7 +322,7 @@ class ServingEngine:
             if pend_toks:
                 flush()
             for t in tickets:
-                t.wait(self.cfg.rx_timeout_s)
+                t.wait(spec.timeout_s)
             toks = self._tok_buf.T
         else:
             for step in range(max_new_tokens):
@@ -275,7 +330,7 @@ class ServingEngine:
                     logits, cache = self._decode(self.params, tok, cache)
                     tok = self._sample(logits)
                 self.engine.rx([tok], out=[self._tok_buf[step]],
-                               priority=PriorityClass.TOKEN)
+                               qos=tok_spec)
             toks = self._tok_buf.T
         decode_s = time.perf_counter() - t0
         # request boundary = safe point: let an adaptive engine swap plans

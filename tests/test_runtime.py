@@ -18,12 +18,13 @@ from repro.core.runtime import (
     PollingBackend,
     PreemptibleWork,
     PriorityClass,
-    QosSpec,
+    ClassQos,
     ScheduledBackend,
     TransferRuntime,
     backend_for,
     get_runtime,
 )
+from repro.core.qos import QosSpec
 from repro.core.streaming import HostStreamingExecutor
 from repro.core.transfer import (
     Ticket,
@@ -195,8 +196,8 @@ def test_weighted_fair_share_interleaves_classes():
     """With everything inside its deadline, the weighted fair queue gives
     TOKEN (weight 8) more early slots per byte than BULK (weight 1): the
     first token never waits for the whole bulk backlog."""
-    qos = {PriorityClass.TOKEN: QosSpec(weight=8.0, deadline_s=10.0),
-           PriorityClass.BULK: QosSpec(weight=1.0, deadline_s=10.0)}
+    qos = {PriorityClass.TOKEN: ClassQos(weight=8.0, deadline_s=10.0),
+           PriorityClass.BULK: ClassQos(weight=1.0, deadline_s=10.0)}
     log: list = []
     with TransferRuntime(workers=1, qos=qos) as rt:
         hb = rt.register("bulk", PriorityClass.BULK)
@@ -447,6 +448,167 @@ def test_class_summary_per_class_accounting():
         assert s["token"]["completed"] == 2
         assert s["layer"]["dispatch_p99_ms"] >= 0.0
         eng.close()
+
+
+# ---- tier 2: per-tenant flows inside a class -------------------------------
+
+def test_tenant_wfq_isolates_victim_from_flooding_tenant():
+    """Byte-weighted fair queuing between tenants of ONE class: a tenant
+    flooding megabyte descriptors must not make a small-descriptor tenant
+    wait out its whole backlog — the victim's tiny submissions accrue
+    vtime slowly and keep winning dispatch slots."""
+    qos = {PriorityClass.BULK: ClassQos(weight=1.0, deadline_s=10.0)}
+    log: list = []
+    with TransferRuntime(workers=1, qos=qos) as rt:
+        h = rt.register("bulk", PriorityClass.BULK)
+        gate = threading.Event()
+        started = threading.Event()
+        Ticket(*h.submit(lambda: (started.set(), gate.wait())[0]))
+        assert started.wait(5.0)  # worker busy: everything below queues
+        hog = QosSpec(tenant="hog")
+        mouse = QosSpec(tenant="mouse")
+        tickets = [Ticket(*h.submit(_sleep_task(log, ("hog", i), 0.001),
+                                    nbytes=1 << 20, qos=hog))
+                   for i in range(10)]
+        tickets += [Ticket(*h.submit(_sleep_task(log, ("mouse", i), 0.001),
+                                     nbytes=4096, qos=mouse))
+                    for i in range(4)]
+        gate.set()
+        for t in tickets:
+            t.wait()
+        s = rt.class_summary()["bulk"]
+    last_mouse = max(i for i, e in enumerate(log) if e[0] == "mouse")
+    assert last_mouse <= 5, (
+        f"victim tenant waited out the flood (last mouse dispatch at "
+        f"{last_mouse} of {len(log)}): {log}")
+    assert s["tenants"]["hog"]["completed"] == 10
+    assert s["tenants"]["mouse"]["completed"] == 4
+    assert s["tenants"]["mouse"]["bytes_total"] == 4 * 4096
+
+
+def test_tenant_weight_biases_share():
+    """qos.weight scales a tenant's byte-share: equal-sized backlogs, the
+    weight-8 tenant drains ahead of the weight-1 tenant."""
+    qos = {PriorityClass.BULK: ClassQos(weight=1.0, deadline_s=10.0)}
+    log: list = []
+    with TransferRuntime(workers=1, qos=qos) as rt:
+        h = rt.register("bulk", PriorityClass.BULK)
+        gate = threading.Event()
+        started = threading.Event()
+        Ticket(*h.submit(lambda: (started.set(), gate.wait())[0]))
+        assert started.wait(5.0)
+        tickets = []
+        for i in range(6):
+            tickets.append(Ticket(*h.submit(
+                _sleep_task(log, ("heavy", i), 0.001), nbytes=1 << 16,
+                qos=QosSpec(tenant="heavy", weight=8.0))))
+            tickets.append(Ticket(*h.submit(
+                _sleep_task(log, ("light", i), 0.001), nbytes=1 << 16,
+                qos=QosSpec(tenant="light", weight=1.0))))
+        gate.set()
+        for t in tickets:
+            t.wait()
+    last_heavy = max(i for i, e in enumerate(log) if e[0] == "heavy")
+    first_lights = sum(1 for e in log[:last_heavy] if e[0] == "light")
+    assert first_lights <= 2, (
+        f"weight-8 tenant did not outpace weight-1 ({first_lights} light "
+        f"dispatches before the last heavy): {log}")
+
+
+def test_tenant_cap_tree_leaf_defers_capped_tenant_only():
+    """The cap tree's leaf: a per-tenant token bucket defers THAT tenant's
+    dispatches while uncapped siblings borrow the class headroom — and the
+    deferral is accounted, never a hang."""
+    qos = {PriorityClass.BULK: ClassQos(weight=1.0, deadline_s=10.0)}
+    log: list = []
+    with TransferRuntime(workers=1, qos=qos) as rt:
+        h = rt.register("bulk", PriorityClass.BULK)
+        gate = threading.Event()
+        started = threading.Event()
+        Ticket(*h.submit(lambda: (started.set(), gate.wait())[0]))
+        assert started.wait(5.0)
+        capped = QosSpec(tenant="capped", cap_bytes_per_s=64 * 1024,
+                         burst_s=0.001)
+        free = QosSpec(tenant="free")
+        tickets = [Ticket(*h.submit(_sleep_task(log, ("capped", i), 0.0),
+                                    nbytes=4096, qos=capped))
+                   for i in range(3)]
+        tickets += [Ticket(*h.submit(_sleep_task(log, ("free", i), 0.0),
+                                     nbytes=4096, qos=free))
+                    for i in range(6)]
+        gate.set()
+        for t in tickets:
+            t.wait(timeout=30.0)
+        assert rt.tenant_cap(PriorityClass.BULK, "capped") == 64 * 1024
+        s = rt.class_summary()["bulk"]
+    # the first capped dispatch spends the burst; the remaining two defer
+    # ~64 ms each while every uncapped descriptor flows past
+    tail = [e[0] for e in log[-2:]]
+    assert tail == ["capped", "capped"], log
+    assert s["tenants"]["capped"]["cap_deferrals"] > 0
+    assert s["tenants"]["capped"]["cap_bytes_per_s"] == 64 * 1024
+    assert s["tenants"]["free"]["cap_deferrals"] == 0
+    assert s["tenants"]["capped"]["completed"] == 3  # deferred, not starved
+
+
+def test_set_tenant_cap_clears_and_survives_unchanged_rate():
+    with TransferRuntime(workers=1) as rt:
+        rt.set_tenant_cap(PriorityClass.LAYER, "t", 1e6, burst_s=0.5)
+        assert rt.tenant_cap(PriorityClass.LAYER, "t") == 1e6
+        rt.set_tenant_cap(PriorityClass.LAYER, "t", None)
+        assert rt.tenant_cap(PriorityClass.LAYER, "t") is None
+        rt.set_tenant_cap(PriorityClass.LAYER, "t", -1.0)
+        assert rt.tenant_cap(PriorityClass.LAYER, "t") is None
+
+
+def test_single_tier_baseline_ignores_tenant_tags():
+    """tenant_fair=False collapses tier 2: every submission rides the
+    class's default flow, so tenant tags change nothing about dispatch
+    order (the benchmark's single-tier comparison arm)."""
+    qos = {PriorityClass.BULK: ClassQos(weight=1.0, deadline_s=10.0)}
+    log: list = []
+    with TransferRuntime(workers=1, qos=qos, tenant_fair=False) as rt:
+        h = rt.register("bulk", PriorityClass.BULK)
+        gate = threading.Event()
+        started = threading.Event()
+        Ticket(*h.submit(lambda: (started.set(), gate.wait())[0]))
+        assert started.wait(5.0)
+        tickets = [Ticket(*h.submit(_sleep_task(log, ("hog", i), 0.0),
+                                    nbytes=1 << 20,
+                                    qos=QosSpec(tenant="hog")))
+                   for i in range(8)]
+        tickets += [Ticket(*h.submit(_sleep_task(log, ("mouse", i), 0.0),
+                                     nbytes=4096,
+                                     qos=QosSpec(tenant="mouse")))
+                    for i in range(2)]
+        gate.set()
+        for t in tickets:
+            t.wait()
+    # FIFO within the class: the mice ran dead last
+    assert [e[0] for e in log[-2:]] == ["mouse", "mouse"]
+
+
+def test_deadline_miss_rate_windowed():
+    """Every dispatch past its EDF deadline counts; the rate is 0.0 on an
+    idle runtime and decays once the window ages out."""
+    qos = {PriorityClass.TOKEN: ClassQos(weight=8.0, deadline_s=0.0001)}
+    with TransferRuntime(workers=1, qos=qos) as rt:
+        assert rt.deadline_miss_rate(PriorityClass.TOKEN) == 0.0
+        h = rt.register("tok", PriorityClass.TOKEN)
+        gate = threading.Event()
+        started = threading.Event()
+        Ticket(*h.submit(lambda: (started.set(), gate.wait())[0]))
+        assert started.wait(5.0)
+        tickets = [Ticket(*h.submit(lambda: None, nbytes=64))
+                   for _ in range(4)]
+        time.sleep(0.01)  # queued past the 0.1 ms deadline
+        gate.set()
+        for t in tickets:
+            t.wait()
+        assert rt.deadline_miss_rate(PriorityClass.TOKEN) > 0.0
+        assert rt.deadline_miss_rate(PriorityClass.TOKEN, ttl_s=1e-9) == 0.0
+        s = rt.class_summary()["token"]
+        assert s["deadline_miss_rate"] >= 0.0
 
 
 # ---- preemptive chunked dispatch -------------------------------------------
